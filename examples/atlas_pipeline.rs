@@ -1,0 +1,97 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! Streams synthetic detector events through the coordinator — CPU
+//! workers run the Marionette host algorithms, the device worker runs
+//! the AOT-compiled JAX/Pallas executables via PJRT — and reports
+//! throughput, latency and physics totals, plus a host-vs-device
+//! cross-check on a sample of events. (EXPERIMENTS.md §E2E records a
+//! reference run.)
+//!
+//!     cargo run --release --example atlas_pipeline -- [events] [grid]
+
+use marionette::coordinator::{run_pipeline, PipelineConfig, Route, RoutePolicy};
+use marionette::edm::generator::{EventConfig, EventGenerator};
+use marionette::runtime::{client, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let events: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let grid: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let deposits = (grid / 32).max(1).pow(2);
+
+    println!("== ATLAS-like event pipeline ==");
+    println!("device: {}", client::device_description());
+    println!("workload: {events} events, {grid}x{grid} sensors, ~{deposits} deposits each");
+
+    // Warm the device executable outside the measured run.
+    let have_device = match Engine::load_default() {
+        Ok(eng) => {
+            let d = eng.warm("full_event", grid, grid);
+            match d {
+                Ok(d) => {
+                    println!("device warmup (XLA compile): {d:?}");
+                    true
+                }
+                Err(e) => {
+                    println!("no device bucket for {grid}: {e:#}");
+                    false
+                }
+            }
+        }
+        Err(e) => {
+            println!("device unavailable: {e:#}");
+            false
+        }
+    };
+
+    // --- mixed host/device run through the coordinator -----------------
+    let mut cfg = PipelineConfig::new(EventConfig::grid(grid, grid, deposits), events);
+    cfg.device = have_device;
+    cfg.policy = if have_device {
+        // Split roughly evenly so both paths are exercised: half the
+        // events are below the crossover only if grids differ, so route
+        // by queue pressure instead.
+        RoutePolicy::Auto { min_device_cells: 0, max_device_queue: 2 }
+    } else {
+        RoutePolicy::HostOnly
+    };
+    let report = run_pipeline(&cfg)?;
+    println!("\n{}", report.report());
+
+    let host_n = report.results.iter().filter(|r| r.route == Route::Host).count();
+    let dev_n = report.results.len() - host_n;
+    println!("routing split: {host_n} host / {dev_n} device");
+
+    // --- physics cross-check: host and device agree per event -----------
+    if have_device {
+        let eng = Engine::load_default()?;
+        let mut gen = EventGenerator::new(EventConfig::grid(grid, grid, deposits), cfg.seed);
+        let mut checked = 0;
+        for _ in 0..events.min(4) {
+            let ev = gen.generate();
+            let (hn, he) = marionette::coordinator::pipeline::process_host(&ev);
+            let (dn, de, _) = marionette::coordinator::pipeline::process_device(&eng, &ev)?;
+            assert_eq!(hn, dn, "particle count mismatch on event {}", ev.event_id);
+            let rel = (he - de).abs() / he.abs().max(1.0);
+            assert!(rel < 1e-3, "energy mismatch {rel} on event {}", ev.event_id);
+            checked += 1;
+        }
+        println!("host/device physics cross-check: {checked} events OK");
+    }
+
+    // --- sanity: the stream had real physics in it ----------------------
+    let total_particles = report.total_particles();
+    assert!(
+        total_particles >= events * deposits / 4,
+        "suspiciously few particles: {total_particles}"
+    );
+    println!(
+        "\n{} particles over {} events ({:.1}/event); {:.1} events/s end-to-end",
+        total_particles,
+        events,
+        total_particles as f64 / events as f64,
+        report.events_per_sec()
+    );
+    println!("atlas_pipeline OK");
+    Ok(())
+}

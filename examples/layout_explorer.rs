@@ -1,0 +1,75 @@
+//! Layout explorer: the paper's §III motivation — "the ability to
+//! experiment with different data layouts may be useful for development
+//! efforts and optimization" — as a runnable comparison.
+//!
+//! Runs the two host algorithms (calibrate = linear sweep touching all
+//! fields; reconstruct = stencil with type-split tallies) over every
+//! layout and prints a comparison table with relative factors.
+//!
+//!     cargo run --release --example layout_explorer -- [grid]
+
+use std::time::Duration;
+
+use marionette::bench_support::Harness;
+use marionette::edm::generator::{EventConfig, EventGenerator};
+use marionette::edm::{calib, reco};
+use marionette::marionette::layout::{AoS, AoSoA, SoABlob, SoAVec};
+
+fn main() -> anyhow::Result<()> {
+    let grid: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let deposits = (grid / 32).max(1).pow(2);
+    let ev = EventGenerator::new(EventConfig::grid(grid, grid, deposits), 3).generate();
+    let h = Harness { runs: 15, keep: 5, warmup: 2 };
+
+    println!("== layout explorer: {grid}x{grid}, {deposits} deposits ==\n");
+    println!(
+        "{:<10} {:>14} {:>14} {:>10}",
+        "layout", "calibrate", "reconstruct", "particles"
+    );
+
+    let mut rows: Vec<(&str, Duration, Duration, usize)> = Vec::new();
+
+    macro_rules! measure {
+        ($label:expr, $layout:ty) => {{
+            let mut col = ev.to_collection::<$layout>();
+            let t_cal = h.measure(|| calib::calibrate_collection(&mut col));
+            let mut n = 0;
+            let t_rec = h.measure(|| {
+                n = reco::reconstruct_collection(&col).len();
+            });
+            rows.push(($label, t_cal, t_rec, n));
+        }};
+    }
+
+    measure!("soa-vec", SoAVec);
+    measure!("aos", AoS);
+    measure!("soa-blob", SoABlob);
+    measure!("aosoa-4", AoSoA<4>);
+    measure!("aosoa-8", AoSoA<8>);
+    measure!("aosoa-16", AoSoA<16>);
+
+    let base_cal = rows[0].1.as_secs_f64();
+    let base_rec = rows[0].2.as_secs_f64();
+    for (label, cal, rec, n) in &rows {
+        println!(
+            "{:<10} {:>11.1}us ({:>4.2}x) {:>9.1}us ({:>4.2}x) {:>6}",
+            label,
+            cal.as_secs_f64() * 1e6,
+            cal.as_secs_f64() / base_cal,
+            rec.as_secs_f64() * 1e6,
+            rec.as_secs_f64() / base_rec,
+            n
+        );
+    }
+
+    // All layouts must agree on the physics.
+    let counts: Vec<usize> = rows.iter().map(|r| r.3).collect();
+    assert!(counts.windows(2).all(|w| w[0] == w[1]), "layouts disagree: {counts:?}");
+    println!("\nall layouts reconstruct identical particle counts: {}", counts[0]);
+    println!("layout_explorer OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Quickstart: declare a collection, use every property kind, switch
+//! layouts, transfer between memory contexts.
+//!
+//!     cargo run --release --example quickstart
+
+use marionette::marionette::layout::{AoS, AoSoA, SoAVec};
+use marionette::marionette::memory::{StagingContext, StagingInfo};
+use marionette::marionette_collection;
+
+// One declaration produces the typed collection, object proxies, owned
+// objects, sub-group views and the compile-time property metadata
+// (the analogue of the paper's MARIONETTE_DECLARE_* macros).
+marionette_collection! {
+    /// A toy track collection demonstrating every property kind.
+    pub collection Tracks, object Track, record TrackRecord,
+        columns TrackColumns, refs TrackRef / TrackMut,
+        props TrackProps, schema "track" {
+        per_item pt / set_pt / PT: f32;
+        per_item charge / set_charge / CHARGE: i8;
+        group fit / FitView / FitViewMut {
+            per_item chi2 / set_chi2 / CHI2: f32;
+            per_item ndf / set_ndf / NDF: i32;
+        }
+        array cov_diag / set_cov_diag / COV_DIAG: [f32; 3];
+        jagged hits / set_hits / HITS: u32, prefix u32;
+        global run_number / set_run_number / RUN_NUMBER: u64;
+    }
+}
+
+fn main() {
+    // --- build a collection in the default layout (SoA vectors) --------
+    let mut tracks = Tracks::<SoAVec>::new();
+    tracks.set_run_number(42);
+
+    for i in 0..5 {
+        let idx = tracks.push(&Track {
+            pt: 10.0 * (i as f32 + 1.0),
+            charge: if i % 2 == 0 { 1 } else { -1 },
+            chi2: 1.1 * i as f32,
+            ndf: 2 * i as i32,
+            cov_diag: [0.1, 0.2, 0.3],
+            hits: (0..=i as u32).collect(),
+        });
+        assert_eq!(idx, i);
+    }
+
+    // Element accessors, object proxies, sub-group views, jagged views.
+    println!("run {}: {} tracks", tracks.run_number(), tracks.len());
+    for t in tracks.iter() {
+        println!(
+            "  track {}: pt={:.1} q={} chi2/ndf={:.2}/{} hits={:?} cov0={}",
+            t.index(),
+            t.pt(),
+            t.charge(),
+            t.fit().chi2(),
+            t.fit().ndf(),
+            t.hits().to_vec(),
+            t.cov_diag(0),
+        );
+    }
+
+    // Mutation through proxies.
+    let mut m = tracks.obj_mut(0);
+    m.set_pt(99.0);
+    m.fit().set_chi2(0.5);
+    assert_eq!(tracks.pt(0), 99.0);
+
+    // --- same interface, different layout: AoS records -----------------
+    let mut aos = Tracks::<AoS>::new();
+    aos.transfer_from(&tracks);
+    assert_eq!(aos.pt(0), 99.0);
+    assert_eq!(aos.hits(4).to_vec(), vec![0, 1, 2, 3, 4]);
+    println!("AoS copy agrees; layout = {}", aos.layout_name());
+
+    // --- blocked AoSoA, then back -- transfers compose ------------------
+    let mut blocked = Tracks::<AoSoA<8>>::new();
+    let rung = blocked.transfer_from(&aos);
+    println!("AoS -> AoSoA used the {rung:?} transfer rung");
+
+    // --- a different *memory context*: staging (DMA-accounted) ----------
+    let staging_info = StagingInfo::default();
+    let mut staged = Tracks::<SoAVec<StagingContext>>::new_in(staging_info.clone());
+    staged.transfer_from(&blocked);
+    println!(
+        "upload to staging: {} H2D bytes in {} copies",
+        staging_info
+            .counters
+            .h2d_bytes
+            .load(std::sync::atomic::Ordering::Relaxed),
+        staging_info
+            .counters
+            .h2d_calls
+            .load(std::sync::atomic::Ordering::Relaxed),
+    );
+
+    // Vector-like ops keep jagged vectors consistent.
+    let mut t = tracks;
+    t.erase_items(1, 2);
+    assert_eq!(t.len(), 3);
+    assert_eq!(t.hits(1).to_vec(), vec![0, 1, 2, 3]);
+    t.insert_items(1, 1);
+    assert_eq!(t.hits(1).len(), 0);
+    println!("insert/erase keep jagged prefix sums consistent");
+
+    println!("quickstart OK");
+}

@@ -1,0 +1,195 @@
+"""AOT compile path: lower the L2 graph to HLO text artifacts for Rust.
+
+Emits HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5 emits protos
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under --out-dir (default ../artifacts):
+  * ``<entry>_<R>x<C>.hlo.txt``  one per (entry point, grid bucket)
+  * ``manifest.json``            physics constants + artifact index the
+                                 Rust runtime::artifact module loads
+  * ``golden/...`` (with --golden)  reference vectors for Rust tests
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, physics
+from .kernels import ref
+
+DEFAULT_GRIDS = [16, 32, 64, 128, 256, 512, 1024]
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, see load_hlo.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"dtype": s.dtype.name, "shape": list(s.shape)}
+
+
+def lower_entry(name, rows, cols):
+    """Lower one entry point for one grid bucket; returns (hlo, record)."""
+    fn, spec_builder = model.ENTRY_POINTS[name]
+    specs = spec_builder(rows, cols)
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *specs)
+    out_flat = jax.tree_util.tree_leaves(out_specs)
+    record = {
+        "entry": name,
+        "rows": rows,
+        "cols": cols,
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": [_spec_json(s) for s in out_flat],
+    }
+    return hlo, record
+
+
+def generate_event(rng, rows, cols, n_particles):
+    """Synthetic event generator (numpy twin of rust edm::generator).
+
+    Injects `n_particles` Gaussian energy deposits onto a noisy grid of
+    mixed-type sensors; returns the raw-sensor input planes.
+    """
+    types = rng.integers(0, physics.NUM_SENSOR_TYPES, (rows, cols),
+                         dtype=np.int32)
+    # Per-type calibration constants, perturbed per sensor.
+    a_tab = np.array([0.5, 1.0, 2.0], dtype=np.float32)
+    b_tab = np.array([0.0, 5.0, -3.0], dtype=np.float32)
+    na_tab = np.array([2.0, 3.0, 5.0], dtype=np.float32)
+    nb_tab = np.array([0.10, 0.05, 0.20], dtype=np.float32)
+    jitter = 1.0 + rng.normal(0, 0.01, (rows, cols)).astype(np.float32)
+    a = a_tab[types] * jitter
+    b = b_tab[types].astype(np.float32)
+    na = na_tab[types].astype(np.float32)
+    nb = nb_tab[types].astype(np.float32)
+    noisy = (rng.random((rows, cols)) < 0.01).astype(np.int32)
+
+    # Background counts + particle deposits.
+    counts = rng.poisson(3.0, (rows, cols)).astype(np.float32)
+    for _ in range(n_particles):
+        r = rng.integers(2, max(3, rows - 2))
+        c = rng.integers(2, max(3, cols - 2))
+        amp = rng.uniform(200.0, 2000.0)
+        rr, cc = np.meshgrid(np.arange(rows), np.arange(cols),
+                             indexing="ij")
+        sigma = rng.uniform(0.6, 1.2)
+        counts += amp * np.exp(-((rr - r) ** 2 + (cc - c) ** 2)
+                               / (2 * sigma ** 2))
+    counts = counts.astype(np.int32)
+    return {"counts": counts, "a": a, "b": b, "na": na, "nb": nb,
+            "noisy": noisy, "types": types}
+
+
+def write_golden(out_dir, rows=32, cols=32, n_particles=5, seed=7):
+    """Write golden vectors: inputs + full_event_ref outputs, raw little-
+    endian binary + a JSON descriptor, replayed by Rust integration tests
+    and by python/tests/test_golden.py."""
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    ev = generate_event(rng, rows, cols, n_particles)
+    energy, noise, sig, seeds, sums = ref.full_event_ref(
+        jnp.asarray(ev["counts"]), jnp.asarray(ev["a"]),
+        jnp.asarray(ev["b"]), jnp.asarray(ev["na"]), jnp.asarray(ev["nb"]),
+        jnp.asarray(ev["noisy"]), jnp.asarray(ev["types"]))
+    tensors = dict(ev)
+    tensors.update({"energy": np.asarray(energy),
+                    "noise": np.asarray(noise),
+                    "sig": np.asarray(sig),
+                    "seeds": np.asarray(seeds),
+                    "sums": np.asarray(sums)})
+    desc = {"rows": rows, "cols": cols, "n_particles": n_particles,
+            "seed": seed, "tensors": {}}
+    for name, arr in tensors.items():
+        fname = f"{name}.bin"
+        arr = np.ascontiguousarray(arr)
+        arr.tofile(os.path.join(golden_dir, fname))
+        desc["tensors"][name] = {"file": fname, "dtype": arr.dtype.name,
+                                 "shape": list(arr.shape)}
+    with open(os.path.join(golden_dir, "golden.json"), "w") as f:
+        json.dump(desc, f, indent=1)
+    print(f"golden vectors -> {golden_dir} ({len(tensors)} tensors)")
+
+
+def report_vmem(grids):
+    """DESIGN §Perf L1: static VMEM-footprint estimate per kernel/bucket."""
+    from .kernels import calibrate as ck
+    from .kernels import stencil as sk
+    rows = []
+    for n in grids:
+        t_cal = min(ck.TILE_ROWS, n)
+        cal = (6 + 3) * t_cal * n * 4
+        t_st = min(sk.TILE_ROWS, n)
+        halo = 2 * physics.HALO
+        bsum = ((t_st + halo) * (n + halo) + t_st * n) * 4  # per channel
+        bmax = ((t_st + halo) * (n + halo) + t_st * n) * 4
+        rows.append((n, cal, bsum, bmax))
+    print(f"{'grid':>6} {'calibrate':>12} {'boxsum/ch':>12} {'boxmax':>12}")
+    for n, cal, bsum, bmax in rows:
+        print(f"{n:>6} {cal/2**20:>10.2f}Mi {bsum/2**20:>10.2f}Mi "
+              f"{bmax/2**20:>10.2f}Mi")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--grids", type=int, nargs="*", default=DEFAULT_GRIDS)
+    ap.add_argument("--entries", nargs="*",
+                    default=list(model.ENTRY_POINTS.keys()))
+    ap.add_argument("--golden", action="store_true",
+                    help="also write golden test vectors")
+    ap.add_argument("--report-vmem", action="store_true")
+    args = ap.parse_args()
+
+    if args.report_vmem:
+        report_vmem(args.grids)
+        return
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+    for n in args.grids:
+        for entry in args.entries:
+            fname = f"{entry}_{n}x{n}.hlo.txt"
+            hlo, record = lower_entry(entry, n, n)
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(hlo)
+            record["file"] = fname
+            record["sha256"] = hashlib.sha256(hlo.encode()).hexdigest()
+            artifacts.append(record)
+            print(f"  {fname}: {len(hlo)} chars")
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "constants": physics.CONSTANTS,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json: {len(artifacts)} artifacts -> {out_dir}")
+
+    write_golden(out_dir)
+
+
+if __name__ == "__main__":
+    main()

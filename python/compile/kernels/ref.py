@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every L1 kernel and both L2 stages.
+
+This module is the single correctness reference: pytest + hypothesis sweep
+the Pallas kernels against these functions, and the Rust host algorithms
+are validated against the same semantics through the golden-vector test
+(`aot.py --golden` writes reference outputs the Rust tests replay).
+No Pallas, no jit requirements — just jnp.
+"""
+
+import jax.numpy as jnp
+
+from ..physics import (CONTRIB_SIGNIFICANCE, HALO, NUM_PLANES,
+                       NUM_SENSOR_TYPES, SEED_SIGNIFICANCE, WINDOW)
+
+
+def calibrate_ref(counts, a, b, na, nb, noisy):
+    """Reference for kernels.calibrate.calibrate."""
+    raw = a * counts.astype(jnp.float32) + b
+    energy = jnp.where(noisy != 0, jnp.float32(0.0), raw)
+    noise = jnp.maximum(na + nb * jnp.sqrt(jnp.maximum(energy, 0.0)), 1e-6)
+    return energy, noise, energy / noise
+
+
+def boxsum_ref(planes):
+    """Reference for kernels.stencil.boxsum (zero-padded 5x5 box sum)."""
+    ch, rows, cols = planes.shape
+    padded = jnp.pad(planes, ((0, 0), (HALO, HALO), (HALO, HALO)))
+    acc = jnp.zeros_like(planes)
+    for dr in range(WINDOW):
+        for dc in range(WINDOW):
+            acc = acc + padded[:, dr:dr + rows, dc:dc + cols]
+    return acc
+
+
+def boxmax_ref(plane):
+    """Reference for kernels.stencil.boxmax (-inf padded 5x5 box max)."""
+    rows, cols = plane.shape
+    padded = jnp.pad(plane, ((HALO, HALO), (HALO, HALO)),
+                     constant_values=-jnp.inf)
+    acc = jnp.full_like(plane, -jnp.inf)
+    for dr in range(WINDOW):
+        for dc in range(WINDOW):
+            acc = jnp.maximum(acc, padded[dr:dr + rows, dc:dc + cols])
+    return acc
+
+
+def make_planes_ref(energy, sig, types, noisy):
+    """Reference for model._make_planes: the C=NUM_PLANES channel stack fed
+    to the box-sum stencil."""
+    rows, cols = energy.shape
+    x = jnp.broadcast_to(jnp.arange(cols, dtype=jnp.float32)[None, :],
+                         (rows, cols))
+    y = jnp.broadcast_to(jnp.arange(rows, dtype=jnp.float32)[:, None],
+                         (rows, cols))
+    planes = [energy, energy * x, energy * y,
+              energy * x * x, energy * y * y]
+    for t in range(NUM_SENSOR_TYPES):
+        planes.append(jnp.where(types == t, energy, 0.0))
+    for t in range(NUM_SENSOR_TYPES):
+        planes.append(jnp.where(types == t, sig, 0.0))
+    for t in range(NUM_SENSOR_TYPES):
+        planes.append(jnp.where((types == t) & (noisy != 0), 1.0, 0.0))
+    planes.append((sig > CONTRIB_SIGNIFICANCE).astype(jnp.float32))
+    out = jnp.stack(planes)
+    assert out.shape[0] == NUM_PLANES
+    return out
+
+
+def sensor_stage_ref(counts, a, b, na, nb, noisy):
+    """Reference for model.sensor_stage."""
+    return calibrate_ref(counts, a, b, na, nb, noisy)
+
+
+def particle_stage_ref(energy, sig, types, noisy):
+    """Reference for model.particle_stage.
+
+    Returns (seeds int32[R,C], sums float32[NUM_PLANES,R,C]).
+    A sensor seeds a particle when sig > SEED_SIGNIFICANCE and its energy
+    attains the 5x5 box-max at its position.
+    """
+    win_max = boxmax_ref(energy)
+    seeds = ((sig > SEED_SIGNIFICANCE) & (energy >= win_max)).astype(
+        jnp.int32)
+    sums = boxsum_ref(make_planes_ref(energy, sig, types, noisy))
+    return seeds, sums
+
+
+def full_event_ref(counts, a, b, na, nb, noisy, types):
+    """Reference for model.full_event: both stages fused (the paper's
+    'sidestepping unnecessary conversions' path)."""
+    energy, noise, sig = sensor_stage_ref(counts, a, b, na, nb, noisy)
+    seeds, sums = particle_stage_ref(energy, sig, types, noisy)
+    return energy, noise, sig, seeds, sums

@@ -1,0 +1,100 @@
+"""L1 Pallas kernels: 5x5 neighbourhood stencils (box-sum and box-max).
+
+Paper analogue: particle finding over the 5x5 neighbourhood of each
+energetic sensor (realistic_example.cu, particle stage of Figure 2). The
+CUDA version assigns threadblocks to grid tiles with shared-memory halos;
+the Pallas re-think expresses the same schedule as:
+
+  * the *output* is blocked into row slabs via BlockSpec — each grid step
+    owns TILE_ROWS output rows;
+  * the *input* ref stays unblocked (paper: global memory / HBM) and the
+    kernel dynamically slices the (TILE_ROWS + 2*HALO)-row halo slab it
+    needs — the HBM->VMEM copy that CUDA did via shared-memory staging;
+  * the separable 5x5 box reduction is computed as five shifted adds along
+    columns then five along rows (VPU-friendly, no gather/scatter and no
+    CUDA-style atomics).
+
+VMEM estimate per step for the sum kernel (C channels, N columns):
+`C * (TILE_ROWS + 4) * (N + 4) * 4` input bytes + `C * TILE_ROWS * N * 4`
+output; for C=15, N=1024, TILE_ROWS=32 that is ~4.3 MiB — see DESIGN §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..physics import HALO, WINDOW
+
+TILE_ROWS = 32
+
+
+def _boxsum_kernel(rows, cols, tile, p_ref, o_ref):
+    """One (1, tile, cols) output block of the 5x5 box-sum.
+
+    p_ref is the unblocked padded input (C, rows + 2*HALO, cols + 2*HALO);
+    the channel is selected by grid axis 0 and the row slab by grid axis 1.
+    """
+    c = pl.program_id(0)
+    i = pl.program_id(1)
+    slab = p_ref[c, pl.dslice(i * tile, tile + 2 * HALO),
+                 pl.dslice(0, cols + 2 * HALO)]
+    # Separable box filter: columns first, then rows.
+    cs = sum(slab[:, k:k + cols] for k in range(WINDOW))
+    rs = sum(cs[k:k + tile, :] for k in range(WINDOW))
+    o_ref[...] = rs[None, :, :]
+
+
+def _boxmax_kernel(rows, cols, tile, p_ref, o_ref):
+    """One (tile, cols) output block of the 5x5 box-max over a 2D plane."""
+    i = pl.program_id(0)
+    slab = p_ref[pl.dslice(i * tile, tile + 2 * HALO),
+                 pl.dslice(0, cols + 2 * HALO)]
+    cm = slab[:, 0:cols]
+    for k in range(1, WINDOW):
+        cm = jnp.maximum(cm, slab[:, k:k + cols])
+    rm = cm[0:tile, :]
+    for k in range(1, WINDOW):
+        rm = jnp.maximum(rm, cm[k:k + tile, :])
+    o_ref[...] = rm
+
+
+def _row_tile(rows: int) -> int:
+    return min(TILE_ROWS, rows)
+
+
+@jax.jit
+def boxsum(planes):
+    """5x5 box-sum of float32[C, R, Cn] with zero padding at the borders."""
+    ch, rows, cols = planes.shape
+    tile = _row_tile(rows)
+    assert rows % tile == 0, (rows, tile)
+    padded = jnp.pad(planes, ((0, 0), (HALO, HALO), (HALO, HALO)))
+    return pl.pallas_call(
+        functools.partial(_boxsum_kernel, rows, cols, tile),
+        grid=(ch, rows // tile),
+        in_specs=[pl.BlockSpec(block_shape=None)],
+        out_specs=pl.BlockSpec((1, tile, cols), lambda c, i: (c, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ch, rows, cols), jnp.float32),
+        interpret=True,
+    )(padded)
+
+
+@jax.jit
+def boxmax(plane):
+    """5x5 box-max of float32[R, C]; borders padded with -inf so that the
+    maximum is always attained inside the grid."""
+    rows, cols = plane.shape
+    tile = _row_tile(rows)
+    assert rows % tile == 0, (rows, tile)
+    padded = jnp.pad(plane, ((HALO, HALO), (HALO, HALO)),
+                     constant_values=-jnp.inf)
+    return pl.pallas_call(
+        functools.partial(_boxmax_kernel, rows, cols, tile),
+        grid=(rows // tile,),
+        in_specs=[pl.BlockSpec(block_shape=None)],
+        out_specs=pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(padded)

@@ -1,0 +1,113 @@
+"""L2: the realistic-example compute graph in JAX, calling the L1 kernels.
+
+Two device stages mirror the paper's Figures 1 and 2:
+
+  * ``sensor_stage``   — calibrate raw counts to (energy, noise, sig).
+  * ``particle_stage`` — seed particles (5x5 local maxima above the
+    significance cut) and produce the NUM_PLANES per-cell window sums the
+    host gathers particle properties from.
+  * ``full_event``     — both fused in one executable, keeping the
+    intermediate planes on-device (paper §VIII: "sidestepping unnecessary
+    conversions").
+
+All shapes are static: `aot.py` lowers one artifact per grid bucket.  The
+dynamic part of the problem (how many particles an event yields) lives on
+the Rust side, which gathers the seed positions from the dense mask —
+exactly how the paper keeps the device code free of dynamic allocation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.calibrate import calibrate
+from .kernels.stencil import boxmax, boxsum
+from .physics import (CONTRIB_SIGNIFICANCE, NUM_PLANES, NUM_SENSOR_TYPES,
+                      SEED_SIGNIFICANCE)
+
+
+def _make_planes(energy, sig, types, noisy):
+    """Build the C=NUM_PLANES channel stack for the box-sum stencil.
+
+    Cheap element-wise ops: XLA fuses these into the pallas-lowered loop's
+    producers, so they do not warrant a dedicated kernel (DESIGN §Perf L2).
+    """
+    rows, cols = energy.shape
+    x = jnp.broadcast_to(jnp.arange(cols, dtype=jnp.float32)[None, :],
+                         (rows, cols))
+    y = jnp.broadcast_to(jnp.arange(rows, dtype=jnp.float32)[:, None],
+                         (rows, cols))
+    planes = [energy, energy * x, energy * y,
+              energy * x * x, energy * y * y]
+    for t in range(NUM_SENSOR_TYPES):
+        planes.append(jnp.where(types == t, energy, 0.0))
+    for t in range(NUM_SENSOR_TYPES):
+        planes.append(jnp.where(types == t, sig, 0.0))
+    for t in range(NUM_SENSOR_TYPES):
+        planes.append(jnp.where((types == t) & (noisy != 0), 1.0, 0.0))
+    planes.append((sig > CONTRIB_SIGNIFICANCE).astype(jnp.float32))
+    out = jnp.stack(planes)
+    assert out.shape[0] == NUM_PLANES
+    return out
+
+
+def sensor_stage(counts, a, b, na, nb, noisy):
+    """Figure-1 device stage: calibrate the grid.
+
+    Args: counts int32[R,C]; a,b,na,nb float32[R,C]; noisy int32[R,C].
+    Returns: (energy, noise, sig) float32[R,C].
+    """
+    return calibrate(counts, a, b, na, nb, noisy)
+
+
+def particle_stage(energy, sig, types, noisy):
+    """Figure-2 device stage: seed mask + window sums.
+
+    Args: energy, sig float32[R,C]; types, noisy int32[R,C].
+    Returns: (seeds int32[R,C], sums float32[NUM_PLANES,R,C]).
+    """
+    win_max = boxmax(energy)
+    seeds = ((sig > SEED_SIGNIFICANCE) & (energy >= win_max)).astype(
+        jnp.int32)
+    sums = boxsum(_make_planes(energy, sig, types, noisy))
+    return seeds, sums
+
+
+def full_event(counts, a, b, na, nb, noisy, types):
+    """Fused pipeline: raw counts straight to seeds + sums, the
+    intermediate calibration planes never leaving the device."""
+    energy, noise, sig = sensor_stage(counts, a, b, na, nb, noisy)
+    seeds, sums = particle_stage(energy, sig, types, noisy)
+    return energy, noise, sig, seeds, sums
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: name -> (function, input-spec builder).
+# Input dtypes must match what rust/src/runtime/executor.rs marshals.
+# ---------------------------------------------------------------------------
+
+def _f32(rows, cols):
+    return jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+
+
+def _i32(rows, cols):
+    return jax.ShapeDtypeStruct((rows, cols), jnp.int32)
+
+
+def sensor_stage_specs(rows, cols):
+    return [_i32(rows, cols)] + [_f32(rows, cols)] * 4 + [_i32(rows, cols)]
+
+
+def particle_stage_specs(rows, cols):
+    return [_f32(rows, cols)] * 2 + [_i32(rows, cols)] * 2
+
+
+def full_event_specs(rows, cols):
+    return ([_i32(rows, cols)] + [_f32(rows, cols)] * 4
+            + [_i32(rows, cols)] * 2)
+
+
+ENTRY_POINTS = {
+    "sensor_stage": (sensor_stage, sensor_stage_specs),
+    "particle_stage": (particle_stage, particle_stage_specs),
+    "full_event": (full_event, full_event_specs),
+}

@@ -1,0 +1,59 @@
+"""Physics constants of the realistic example (paper §III / §VIII).
+
+These mirror `rust/src/edm/constants.rs`; `aot.py` embeds them in
+`artifacts/manifest.json` so the Rust side reads one source of truth.
+
+The scenario: an N x N grid of sensors of NUM_SENSOR_TYPES types measures
+particle energy deposits.  Raw counts are calibrated to energies with
+per-sensor constants; particles are seeded at sensors whose significance
+(energy / noise) exceeds SEED_SIGNIFICANCE and which are the local maximum
+of their 5x5 neighbourhood; particle properties are accumulated over that
+neighbourhood, keeping per-sensor-type tallies and the jagged list of
+contributing sensors (significance > CONTRIB_SIGNIFICANCE).
+"""
+
+# Number of distinct sensor types (paper: SensorType::Num).
+NUM_SENSOR_TYPES = 3
+
+# Neighbourhood window is WINDOW x WINDOW around the seed (paper: 5x5).
+WINDOW = 5
+HALO = WINDOW // 2  # 2
+
+# A sensor seeds a particle when significance > SEED_SIGNIFICANCE and it is
+# the maximum of its window.
+SEED_SIGNIFICANCE = 4.0
+
+# A sensor contributes to a particle's jagged sensor list (and to the
+# contributor count plane) when its significance exceeds this.
+CONTRIB_SIGNIFICANCE = 2.0
+
+# Stacked plane indices produced by the particle stage box-sum.
+# Layout of the C=15 channel tensor fed to the box-sum stencil:
+#   0: e          energy
+#   1: e*x        energy-weighted column coordinate
+#   2: e*y        energy-weighted row coordinate
+#   3: e*x^2
+#   4: e*y^2
+#   5..7:   e * (type == t)          per-type energy contribution
+#   8..10:  sig * (type == t)        per-type significance
+#   11..13: noisy * (type == t)      per-type noisy-sensor count
+#   14: contrib   contributor count (sig > CONTRIB_SIGNIFICANCE)
+PLANE_E = 0
+PLANE_EX = 1
+PLANE_EY = 2
+PLANE_EXX = 3
+PLANE_EYY = 4
+PLANE_E_TYPE = 5  # .. 5 + NUM_SENSOR_TYPES - 1
+PLANE_SIG_TYPE = 5 + NUM_SENSOR_TYPES  # 8..10
+PLANE_NOISY_TYPE = 5 + 2 * NUM_SENSOR_TYPES  # 11..13
+PLANE_CONTRIB = 5 + 3 * NUM_SENSOR_TYPES  # 14
+NUM_PLANES = 6 + 3 * NUM_SENSOR_TYPES  # 15
+
+CONSTANTS = {
+    "num_sensor_types": NUM_SENSOR_TYPES,
+    "window": WINDOW,
+    "halo": HALO,
+    "seed_significance": SEED_SIGNIFICANCE,
+    "contrib_significance": CONTRIB_SIGNIFICANCE,
+    "num_planes": NUM_PLANES,
+}

@@ -1,0 +1,92 @@
+"""AOT path tests: HLO text emission, manifest integrity, goldens."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model, physics
+
+
+class TestLowering:
+    @pytest.mark.parametrize("entry", list(model.ENTRY_POINTS))
+    def test_lowers_to_hlo_text(self, entry):
+        hlo, record = aot.lower_entry(entry, 16, 16)
+        assert hlo.startswith("HloModule")
+        assert record["entry"] == entry
+        assert record["rows"] == record["cols"] == 16
+        assert len(record["inputs"]) >= 4
+        assert len(record["outputs"]) >= 2
+
+    def test_sensor_stage_io_spec(self):
+        _, rec = aot.lower_entry("sensor_stage", 16, 16)
+        assert [i["dtype"] for i in rec["inputs"]] == [
+            "int32", "float32", "float32", "float32", "float32", "int32"]
+        assert [o["dtype"] for o in rec["outputs"]] == ["float32"] * 3
+
+    def test_particle_stage_io_spec(self):
+        _, rec = aot.lower_entry("particle_stage", 16, 16)
+        assert [o["dtype"] for o in rec["outputs"]] == ["int32", "float32"]
+        assert rec["outputs"][1]["shape"] == [physics.NUM_PLANES, 16, 16]
+
+    def test_deterministic_lowering(self):
+        """Two lowerings of the same bucket yield identical HLO text —
+        the basis of the identical-artifact zero-cost check."""
+        h1, _ = aot.lower_entry("sensor_stage", 16, 16)
+        h2, _ = aot.lower_entry("sensor_stage", 16, 16)
+        assert h1 == h2
+
+
+class TestManifest:
+    def test_end_to_end_emission(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir",
+             str(tmp_path), "--grids", "16", "--entries", "sensor_stage",
+             "particle_stage"],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            capture_output=True, text=True)
+        assert out.returncode == 0, out.stderr
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["version"] == aot.MANIFEST_VERSION
+        assert manifest["constants"]["window"] == physics.WINDOW
+        assert len(manifest["artifacts"]) == 2
+        for rec in manifest["artifacts"]:
+            assert (tmp_path / rec["file"]).exists()
+        golden = json.loads(
+            (tmp_path / "golden" / "golden.json").read_text())
+        assert "sums" in golden["tensors"]
+
+    def test_golden_roundtrip(self, tmp_path):
+        aot.write_golden(str(tmp_path), rows=16, cols=16, n_particles=2)
+        desc = json.loads((tmp_path / "golden" / "golden.json").read_text())
+        for name, meta in desc["tensors"].items():
+            arr = np.fromfile(tmp_path / "golden" / meta["file"],
+                              dtype=meta["dtype"]).reshape(meta["shape"])
+            assert arr.size > 0, name
+        sums = np.fromfile(tmp_path / "golden" / "sums.bin",
+                           dtype="float32")
+        assert sums.shape[0] == physics.NUM_PLANES * 16 * 16
+
+
+class TestVmemReport:
+    def test_report_runs(self, capsys):
+        aot.report_vmem([16, 1024])
+        out = capsys.readouterr().out
+        assert "calibrate" in out
+        assert "1024" in out
+
+    def test_within_vmem_budget(self):
+        """Design target: every kernel's per-step working set <= 16 MiB."""
+        from compile.kernels import calibrate as ck
+        from compile.kernels import stencil as sk
+        n = 1024
+        cal = 9 * min(ck.TILE_ROWS, n) * n * 4
+        t = min(sk.TILE_ROWS, n)
+        halo = 2 * physics.HALO
+        st = ((t + halo) * (n + halo) + t * n) * 4
+        assert cal <= 16 * 2**20
+        assert st <= 16 * 2**20

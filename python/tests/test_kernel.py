@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes and value distributions; every kernel must match
+ref.py to float32 tolerance on every drawn case.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.calibrate import calibrate
+from compile.kernels.stencil import boxmax, boxsum
+from compile.physics import NUM_PLANES, NUM_SENSOR_TYPES
+
+# Grid buckets are powers of two >= 16; tests also sweep non-square shapes.
+ROWS = st.sampled_from([16, 32, 64, 128])
+COLS = st.sampled_from([16, 32, 48, 64, 96, 128])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _grid_inputs(rng, rows, cols):
+    counts = rng.integers(0, 5000, (rows, cols)).astype(np.int32)
+    a = rng.uniform(0.1, 3.0, (rows, cols)).astype(np.float32)
+    b = rng.uniform(-5.0, 5.0, (rows, cols)).astype(np.float32)
+    na = rng.uniform(0.5, 5.0, (rows, cols)).astype(np.float32)
+    nb = rng.uniform(0.0, 0.3, (rows, cols)).astype(np.float32)
+    noisy = (rng.random((rows, cols)) < 0.05).astype(np.int32)
+    return counts, a, b, na, nb, noisy
+
+
+class TestCalibrate:
+    @settings(deadline=None, max_examples=20)
+    @given(rows=ROWS, cols=COLS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, rows, cols, seed):
+        args = _grid_inputs(_rng(seed), rows, cols)
+        got = calibrate(*map(jnp.asarray, args))
+        want = ref.calibrate_ref(*map(jnp.asarray, args))
+        for g, w, name in zip(got, want, ["energy", "noise", "sig"]):
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6,
+                                       err_msg=name)
+
+    def test_noisy_sensors_zeroed(self):
+        rows = cols = 16
+        counts = np.full((rows, cols), 100, np.int32)
+        ones = np.ones((rows, cols), np.float32)
+        noisy = np.zeros((rows, cols), np.int32)
+        noisy[3, 7] = 1
+        energy, noise, sig = calibrate(*map(jnp.asarray, (
+            counts, ones, ones * 0, ones, ones * 0.1, noisy)))
+        assert energy[3, 7] == 0.0
+        assert energy[0, 0] == 100.0
+        assert sig[3, 7] == 0.0
+
+    def test_zero_noise_guarded(self):
+        """na = nb = 0 must not produce inf/nan significance."""
+        rows = cols = 16
+        z = np.zeros((rows, cols), np.float32)
+        counts = np.full((rows, cols), 10, np.int32)
+        energy, noise, sig = calibrate(*map(jnp.asarray, (
+            counts, z + 1, z, z, z, np.zeros((rows, cols), np.int32))))
+        assert np.all(np.isfinite(np.asarray(sig)))
+        assert np.all(np.asarray(noise) >= 1e-6)
+
+    def test_negative_energy_noise(self):
+        """Negative calibrated energy: sqrt clamps at 0, noise = na."""
+        rows = cols = 16
+        counts = np.full((rows, cols), 1, np.int32)
+        a = np.full((rows, cols), -5.0, np.float32)
+        z = np.zeros((rows, cols), np.float32)
+        na = np.full((rows, cols), 2.0, np.float32)
+        nb = np.full((rows, cols), 0.5, np.float32)
+        energy, noise, _ = calibrate(*map(jnp.asarray, (
+            counts, a, z, na, nb, np.zeros((rows, cols), np.int32))))
+        np.testing.assert_allclose(energy, -5.0)
+        np.testing.assert_allclose(noise, 2.0)
+
+
+class TestBoxSum:
+    @settings(deadline=None, max_examples=20)
+    @given(rows=ROWS, cols=COLS, ch=st.integers(1, 4),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, rows, cols, ch, seed):
+        x = _rng(seed).normal(0, 10, (ch, rows, cols)).astype(np.float32)
+        got = boxsum(jnp.asarray(x))
+        want = ref.boxsum_ref(jnp.asarray(x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_full_plane_count(self):
+        """The real workload uses NUM_PLANES channels."""
+        x = _rng(0).normal(0, 1, (NUM_PLANES, 32, 32)).astype(np.float32)
+        np.testing.assert_allclose(boxsum(jnp.asarray(x)),
+                                   ref.boxsum_ref(jnp.asarray(x)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_impulse_response(self):
+        """A unit impulse spreads to exactly the 5x5 window."""
+        x = np.zeros((1, 32, 32), np.float32)
+        x[0, 10, 20] = 1.0
+        out = np.array(boxsum(jnp.asarray(x)))
+        assert out.sum() == 25.0
+        assert np.all(out[0, 8:13, 18:23] == 1.0)
+        out[0, 8:13, 18:23] = 0.0
+        assert np.all(out == 0.0)
+
+    def test_border_zero_padded(self):
+        x = np.ones((1, 16, 16), np.float32)
+        out = np.asarray(boxsum(jnp.asarray(x)))
+        assert out[0, 0, 0] == 9.0      # 3x3 of the window lands in-grid
+        assert out[0, 8, 8] == 25.0
+        assert out[0, 0, 8] == 15.0     # 3 rows x 5 cols
+
+
+class TestBoxMax:
+    @settings(deadline=None, max_examples=20)
+    @given(rows=ROWS, cols=COLS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, rows, cols, seed):
+        x = _rng(seed).normal(0, 10, (rows, cols)).astype(np.float32)
+        got = boxmax(jnp.asarray(x))
+        want = ref.boxmax_ref(jnp.asarray(x))
+        np.testing.assert_allclose(got, want)
+
+    def test_peak_dominates_window(self):
+        x = np.zeros((32, 32), np.float32)
+        x[5, 5] = 100.0
+        out = np.asarray(boxmax(jnp.asarray(x)))
+        assert np.all(out[3:8, 3:8] == 100.0)
+        assert out[5, 8] == 0.0  # outside the window of the peak
+
+    def test_negative_values_border(self):
+        """-inf padding must not leak: all-negative plane keeps its max."""
+        x = np.full((16, 16), -5.0, np.float32)
+        out = np.asarray(boxmax(jnp.asarray(x)))
+        assert np.all(out == -5.0)

@@ -1,0 +1,125 @@
+"""L2 model tests: stage composition, shapes, and physics sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, physics
+from compile.aot import generate_event
+from compile.kernels import ref
+
+
+def _event(rows=64, cols=64, particles=4, seed=1):
+    ev = generate_event(np.random.default_rng(seed), rows, cols, particles)
+    return {k: jnp.asarray(v) for k, v in ev.items()}
+
+
+class TestSensorStage:
+    def test_matches_ref(self):
+        ev = _event()
+        got = model.sensor_stage(ev["counts"], ev["a"], ev["b"], ev["na"],
+                                 ev["nb"], ev["noisy"])
+        want = ref.sensor_stage_ref(ev["counts"], ev["a"], ev["b"],
+                                    ev["na"], ev["nb"], ev["noisy"])
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+    def test_output_shapes(self):
+        ev = _event(32, 32)
+        out = model.sensor_stage(ev["counts"], ev["a"], ev["b"], ev["na"],
+                                 ev["nb"], ev["noisy"])
+        assert all(o.shape == (32, 32) and o.dtype == jnp.float32
+                   for o in out)
+
+
+class TestParticleStage:
+    def test_matches_ref(self):
+        ev = _event()
+        energy, noise, sig = ref.sensor_stage_ref(
+            ev["counts"], ev["a"], ev["b"], ev["na"], ev["nb"], ev["noisy"])
+        seeds, sums = model.particle_stage(energy, sig, ev["types"],
+                                           ev["noisy"])
+        rseeds, rsums = ref.particle_stage_ref(energy, sig, ev["types"],
+                                               ev["noisy"])
+        np.testing.assert_array_equal(seeds, rseeds)
+        np.testing.assert_allclose(sums, rsums, rtol=1e-5, atol=1e-4)
+
+    def test_finds_injected_particles(self):
+        """Events with injected deposits must yield at least one seed and
+        plausible window energies at the seeds."""
+        ev = _event(64, 64, particles=3, seed=3)
+        energy, noise, sig = ref.sensor_stage_ref(
+            ev["counts"], ev["a"], ev["b"], ev["na"], ev["nb"], ev["noisy"])
+        seeds, sums = model.particle_stage(energy, sig, ev["types"],
+                                           ev["noisy"])
+        n = int(jnp.sum(seeds))
+        assert n >= 1
+        rr, cc = np.nonzero(np.asarray(seeds))
+        e_plane = np.asarray(sums)[physics.PLANE_E]
+        for r, c in zip(rr, cc):
+            assert e_plane[r, c] > 0.0
+
+    def test_empty_grid_no_seeds(self):
+        z = jnp.zeros((32, 32), jnp.float32)
+        zi = jnp.zeros((32, 32), jnp.int32)
+        seeds, sums = model.particle_stage(z, z, zi, zi)
+        assert int(jnp.sum(seeds)) == 0
+        np.testing.assert_allclose(sums, 0.0)
+
+    def test_per_type_planes_partition_energy(self):
+        """Sum of the per-type energy planes equals the total energy plane
+        (types partition the window)."""
+        ev = _event(64, 64, particles=2, seed=5)
+        energy, _, sig = ref.sensor_stage_ref(
+            ev["counts"], ev["a"], ev["b"], ev["na"], ev["nb"], ev["noisy"])
+        _, sums = model.particle_stage(energy, sig, ev["types"],
+                                       ev["noisy"])
+        sums = np.asarray(sums)
+        per_type = sums[physics.PLANE_E_TYPE:
+                        physics.PLANE_E_TYPE + physics.NUM_SENSOR_TYPES]
+        np.testing.assert_allclose(per_type.sum(axis=0),
+                                   sums[physics.PLANE_E],
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestFullEvent:
+    def test_fused_equals_staged(self):
+        ev = _event(64, 64, particles=3, seed=9)
+        fused = model.full_event(ev["counts"], ev["a"], ev["b"], ev["na"],
+                                 ev["nb"], ev["noisy"], ev["types"])
+        want = ref.full_event_ref(ev["counts"], ev["a"], ev["b"], ev["na"],
+                                  ev["nb"], ev["noisy"], ev["types"])
+        for g, w in zip(fused, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-4)
+
+    @settings(deadline=None, max_examples=8)
+    @given(seed=st.integers(0, 2**31 - 1),
+           particles=st.integers(0, 8))
+    def test_fused_equals_staged_swept(self, seed, particles):
+        ev = _event(32, 32, particles=particles, seed=seed)
+        fused = model.full_event(ev["counts"], ev["a"], ev["b"], ev["na"],
+                                 ev["nb"], ev["noisy"], ev["types"])
+        want = ref.full_event_ref(ev["counts"], ev["a"], ev["b"], ev["na"],
+                                  ev["nb"], ev["noisy"], ev["types"])
+        for g, w in zip(fused, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-4)
+
+
+class TestEventGenerator:
+    def test_deterministic(self):
+        a = generate_event(np.random.default_rng(3), 32, 32, 4)
+        b = generate_event(np.random.default_rng(3), 32, 32, 4)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+    def test_types_in_range(self):
+        ev = generate_event(np.random.default_rng(0), 32, 32, 2)
+        assert ev["types"].min() >= 0
+        assert ev["types"].max() < physics.NUM_SENSOR_TYPES
+
+    def test_particles_raise_counts(self):
+        quiet = generate_event(np.random.default_rng(1), 64, 64, 0)
+        busy = generate_event(np.random.default_rng(1), 64, 64, 10)
+        assert busy["counts"].sum() > quiet["counts"].sum()

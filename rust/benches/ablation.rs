@@ -1,0 +1,41 @@
+//! Bench: **ablations** of the design choices DESIGN.md calls out:
+//!
+//! 1. layout sweep (SoA-vec / AoS / SoA-blob / AoSoA-K) over both host
+//!    algorithms — the paper's "experiment with different data layouts"
+//!    motivation;
+//! 2. fused `full_event` vs staged `sensor_stage`+`particle_stage` on
+//!    the device — the "sidestepping unnecessary conversions" claim;
+//! 3. routing policies through the full coordinator.
+
+use marionette::bench_support::figures::{ablation_fused, ablation_layouts, ablation_routing};
+use marionette::bench_support::Harness;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("MARIONETTE_BENCH_QUICK").is_ok();
+    let h = if quick { Harness::quick() } else { Harness::default() };
+    let grid = if quick { 64 } else { 256 };
+
+    let t = ablation_layouts(grid, (grid / 32).max(1).pow(2), h)?;
+    println!("{}", t.render());
+    t.save_csv("ablation_layouts")?;
+
+    match ablation_fused(
+        if quick { &[16, 32, 64] } else { &[64, 128, 256, 512] },
+        h,
+    ) {
+        Ok(t) => {
+            println!("{}", t.render());
+            t.save_csv("ablation_fused")?;
+        }
+        Err(e) => eprintln!("fused ablation skipped: {e:#}"),
+    }
+
+    match ablation_routing(grid, if quick { 8 } else { 32 }) {
+        Ok(t) => {
+            println!("{}", t.render());
+            t.save_csv("ablation_routing")?;
+        }
+        Err(e) => eprintln!("routing ablation skipped: {e:#}"),
+    }
+    Ok(())
+}

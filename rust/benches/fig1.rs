@@ -1,0 +1,29 @@
+//! Bench: regenerate **Figure 1** — sensor-stage time (fill + transfer +
+//! calibrate) vs grid side, series {CPU-AoS, CPU-SoA} × {handwritten,
+//! Marionette} + device.
+//!
+//! Paper shape to verify: device overhead dominates below ~100×100, then
+//! a fixed gap (transfer-bound); CPU-AoS ≈ CPU-SoA (all fields used);
+//! Marionette ≡ handwritten everywhere.
+//!
+//! `cargo bench --bench fig1` (set MARIONETTE_BENCH_RUNS=10 for a quick
+//! pass; full grids up to 1024).
+
+use marionette::bench_support::figures::{fig1, FigOpts};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("MARIONETTE_BENCH_QUICK").is_ok();
+    let opts = if quick {
+        FigOpts::quick()
+    } else {
+        FigOpts {
+            grids: vec![16, 32, 64, 128, 256, 512, 1024],
+            ..FigOpts::default()
+        }
+    };
+    let table = fig1(&opts)?;
+    println!("{}", table.render());
+    let path = table.save_csv("fig1")?;
+    println!("csv -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate **Figure 2** — particle-stage time (reconstruct +
+//! transfer back + fill the original AoS) vs injected particle count at
+//! a fixed grid.
+//!
+//! Paper shape to verify: device wins; transfer/conversion overhead
+//! grows past ~10⁴ particles; the CPU-SoA advantage shrinks with
+//! particle count; Marionette ≡ handwritten.
+//!
+//! Grid defaults to 1024² (the paper used 5000²; see DESIGN.md
+//! substitutions). `MARIONETTE_FIG2_GRID=512` overrides.
+
+use marionette::bench_support::figures::{fig2, FigOpts};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("MARIONETTE_BENCH_QUICK").is_ok();
+    let mut opts = if quick { FigOpts::quick() } else { FigOpts::default() };
+    if let Ok(g) = std::env::var("MARIONETTE_FIG2_GRID") {
+        opts.fig2_grid = g.parse()?;
+    }
+    let table = fig2(&opts)?;
+    println!("{}", table.render());
+    let path = table.save_csv("fig2")?;
+    println!("csv -> {}", path.display());
+    Ok(())
+}

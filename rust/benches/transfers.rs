@@ -1,0 +1,17 @@
+//! Bench: **transfer machinery** (§VII-A/B) — layout-conversion ladder
+//! (plane / strided / element-wise rungs), host→staging uploads with DMA
+//! accounting, and raw `memcopy_with_context` bandwidth.
+
+use marionette::bench_support::figures::transfers;
+use marionette::bench_support::Harness;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("MARIONETTE_BENCH_QUICK").is_ok();
+    let grid = if quick { 64 } else { 256 };
+    let h = if quick { Harness::quick() } else { Harness::default() };
+    let table = transfers(grid, h)?;
+    println!("{}", table.render());
+    let path = table.save_csv("transfers")?;
+    println!("csv -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Bench: the **zero-cost abstraction** claim (§VIII, "Marionette and
+//! the equivalent handwritten solution display exactly the same
+//! performance"; the PTX-identity claim, host edition).
+//!
+//! Compares per-element read and calibrate times between handwritten
+//! structures and Marionette collections for every layout, and asserts
+//! the matched pairs (hw-aos vs m-aos, hw-soa vs m-soavec) are within
+//! tolerance. The device-side twin of the claim is structural: both
+//! "handwritten" and "Marionette" device paths execute the *same* AOT
+//! artifact (identical HLO, identical SHA-256 in the manifest).
+
+use marionette::bench_support::figures::zero_cost;
+use marionette::bench_support::{rel_diff, Harness};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("MARIONETTE_BENCH_QUICK").is_ok();
+    let grid = if quick { 128 } else { 512 };
+    let h = if quick { Harness::quick() } else { Harness::default() };
+    let table = zero_cost(grid, h)?;
+    println!("{}", table.render());
+    let path = table.save_csv("zero_cost")?;
+    println!("csv -> {}", path.display());
+
+    // Matched-pair check (informational; hard assertions live in
+    // tests/zero_cost.rs with a generous threshold for noisy machines).
+    let find = |label: &str| {
+        table
+            .series
+            .iter()
+            .find(|s| s.label == label)
+            .expect("series")
+            .points
+            .clone()
+    };
+    for (hw, m) in [("hw-aos", "m-aos"), ("hw-soa", "m-soavec")] {
+        let (hws, ms) = (find(hw), find(m));
+        for ((_, a), (op, b)) in hws.iter().zip(ms.iter()) {
+            let d = rel_diff(*a, *b);
+            println!(
+                "{hw} vs {m} op{op}: hw={:.1}us m={:.1}us rel={:.1}%",
+                a.as_secs_f64() * 1e6,
+                b.as_secs_f64() * 1e6,
+                d * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,599 @@
+//! Figure/table runners: the code that regenerates every evaluation
+//! artefact of the paper (see DESIGN.md experiment index).
+//!
+//! * [`fig1`] — sensor-stage time vs grid side (fill + transfer-if-device
+//!   + calibrate), series {CPU-AoS, CPU-SoA} × {handwritten, Marionette}
+//!   + device.
+//! * [`fig2`] — particle-stage time vs injected particle count at a fixed
+//!   grid (reconstruct + transfer-back-if-device + fill original AoS).
+//! * [`zero_cost`] — accessor/algorithm micro-comparison, Marionette vs
+//!   handwritten per layout (the "PTX-identical" claim, host edition).
+//! * [`transfers`] — `memcopy_with_context` matrix and layout-conversion
+//!   ladder (§VII transfers).
+//! * [`ablation`] — layout sweep, fused-vs-staged device execution,
+//!   routing/batching policies.
+//!
+//! Each returns [`Table`]s; callers render and/or CSV them. All runners
+//! use the paper's best-10-of-50 protocol via [`Harness`].
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{run_pipeline, PipelineConfig, RoutePolicy};
+use crate::edm::generator::{EventConfig, EventGenerator, RawEvent};
+use crate::edm::handwritten::{HwParticlesAoS, HwSensorsAoS, HwSensorsSoA};
+use crate::edm::{calib, reco};
+use crate::marionette::layout::{AoS, AoSoA, SoABlob, SoAVec};
+use crate::marionette::memory::{StagingContext, StagingInfo};
+use crate::marionette::transfer::copy_collection;
+use crate::runtime::Engine;
+
+use super::{Harness, Series, Table};
+
+/// Options shared by the figure runners.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    /// Grid sides for fig1 (must be AOT buckets for the device series).
+    pub grids: Vec<usize>,
+    /// Fixed grid side for fig2.
+    pub fig2_grid: usize,
+    /// Particle counts for fig2.
+    pub particles: Vec<usize>,
+    /// Timing protocol.
+    pub harness: Harness,
+    /// Include device series (requires artifacts).
+    pub device: bool,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            grids: vec![16, 32, 64, 128, 256, 512, 1024],
+            fig2_grid: 1024,
+            particles: vec![100, 300, 1000, 3000, 10000],
+            harness: Harness::default(),
+            device: true,
+        }
+    }
+}
+
+impl FigOpts {
+    /// Small configuration for smoke tests / CI.
+    pub fn quick() -> FigOpts {
+        FigOpts {
+            grids: vec![16, 32, 64],
+            fig2_grid: 64,
+            particles: vec![5, 10, 20],
+            harness: Harness::quick(),
+            device: true,
+        }
+    }
+}
+
+fn event_for_grid(n: usize, particles: usize, seed: u64) -> RawEvent {
+    EventGenerator::new(EventConfig::grid(n, n, particles), seed).generate()
+}
+
+// ---------------------------------------------------------------------
+// Figure 1 — sensor stage vs grid size
+// ---------------------------------------------------------------------
+
+/// Figure 1: fill + (transfer) + calibrate, as a function of grid side.
+pub fn fig1(opts: &FigOpts) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 1 - sensor-stage time vs grid side (fill + transfer + calibrate)",
+        "grid",
+    );
+    let engine = if opts.device { Engine::load_default().ok() } else { None };
+    let h = opts.harness;
+
+    let mut cpu_aos_hw = Series::new("cpu-aos-hw");
+    let mut cpu_aos_m = Series::new("cpu-aos-marionette");
+    let mut cpu_soa_hw = Series::new("cpu-soa-hw");
+    let mut cpu_soa_m = Series::new("cpu-soa-marionette");
+    let mut dev = Series::new("device");
+
+    for &n in &opts.grids {
+        // ~1 deposit per 32x32 cells keeps event content proportional.
+        let ev = event_for_grid(n, (n / 32).max(1) * (n / 32).max(1), 1000 + n as u64);
+        let x = n as f64;
+
+        // CPU AoS handwritten.
+        let mut hw_aos = HwSensorsAoS::default();
+        cpu_aos_hw.push(
+            x,
+            h.measure(|| {
+                ev.fill_hw_aos(&mut hw_aos);
+                calib::calibrate_hw_aos(&mut hw_aos);
+            }),
+        );
+
+        // CPU AoS Marionette.
+        let mut m_aos = crate::edm::SensorCollection::<AoS>::new();
+        cpu_aos_m.push(
+            x,
+            h.measure(|| {
+                ev.fill_collection(&mut m_aos);
+                calib::calibrate_collection(&mut m_aos);
+            }),
+        );
+
+        // CPU SoA handwritten.
+        let mut hw_soa = HwSensorsSoA::default();
+        cpu_soa_hw.push(
+            x,
+            h.measure(|| {
+                ev.fill_hw_soa(&mut hw_soa);
+                calib::calibrate_hw_soa(&mut hw_soa);
+            }),
+        );
+
+        // CPU SoA Marionette.
+        let mut m_soa = crate::edm::SensorCollection::<SoAVec>::new();
+        cpu_soa_m.push(
+            x,
+            h.measure(|| {
+                ev.fill_collection(&mut m_soa);
+                calib::calibrate_collection(&mut m_soa);
+            }),
+        );
+
+        // Device: upload + calibrate kernel + download.
+        if let Some(eng) = &engine {
+            if eng.manifest().get("sensor_stage", n, n).is_ok() {
+                eng.warm("sensor_stage", n, n)?;
+                dev.push(
+                    x,
+                    h.measure(|| {
+                        let _ = eng.run_sensor_stage(&ev).expect("device run");
+                    }),
+                );
+            }
+        }
+    }
+
+    table.push(cpu_aos_hw);
+    table.push(cpu_aos_m);
+    table.push(cpu_soa_hw);
+    table.push(cpu_soa_m);
+    if !dev.points.is_empty() {
+        table.push(dev);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// Figure 2 — particle stage vs particle count
+// ---------------------------------------------------------------------
+
+/// Figure 2: reconstruct + (transfer back) + fill original AoS, as a
+/// function of injected particle count at a fixed grid.
+pub fn fig2(opts: &FigOpts) -> Result<Table> {
+    let n = opts.fig2_grid;
+    let mut table = Table::new(
+        format!(
+            "Figure 2 - particle-stage time vs particles (grid {n}x{n}; \
+             reconstruct + transfer back + fill AoS)"
+        ),
+        "particles",
+    );
+    let engine = if opts.device { Engine::load_default().ok() } else { None };
+    let h = opts.harness;
+
+    let mut cpu_aos_hw = Series::new("cpu-aos-hw");
+    let mut cpu_aos_m = Series::new("cpu-aos-marionette");
+    let mut cpu_soa_hw = Series::new("cpu-soa-hw");
+    let mut cpu_soa_m = Series::new("cpu-soa-marionette");
+    let mut dev = Series::new("device");
+
+    for &p in &opts.particles {
+        let ev = event_for_grid(n, p, 2000 + p as u64);
+        let x = p as f64;
+
+        // Calibrated inputs prepared once, outside the timed region.
+        let mut hw_aos = HwSensorsAoS::default();
+        ev.fill_hw_aos(&mut hw_aos);
+        calib::calibrate_hw_aos(&mut hw_aos);
+
+        let mut hw_soa = HwSensorsSoA::default();
+        ev.fill_hw_soa(&mut hw_soa);
+        calib::calibrate_hw_soa(&mut hw_soa);
+
+        let mut m_aos = ev.to_collection::<AoS>();
+        calib::calibrate_collection(&mut m_aos);
+        let mut m_soa = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut m_soa);
+
+        // CPU handwritten AoS: reconstruct straight into the original AoS.
+        cpu_aos_hw.push(
+            x,
+            h.measure(|| {
+                let ps = reco::reconstruct(&hw_aos);
+                let out = HwParticlesAoS { event_id: hw_aos.event_id, data: ps };
+                std::hint::black_box(&out);
+            }),
+        );
+
+        // CPU Marionette AoS: reconstruct into the marionette structure,
+        // then fill back the original AoS (paper protocol: each solution
+        // produces its own structure, then converts back).
+        cpu_aos_m.push(
+            x,
+            h.measure(|| {
+                let pc = reco::reconstruct_into_collection(&m_aos);
+                let out = reco::fill_back_aos(&pc);
+                std::hint::black_box(&out);
+            }),
+        );
+
+        // CPU handwritten SoA: reconstruct into the handwritten SoA
+        // structure, then fill back the original AoS.
+        cpu_soa_hw.push(
+            x,
+            h.measure(|| {
+                let ps = reco::reconstruct_to_hw_soa(&hw_soa);
+                let out = reco::hw_soa_fill_back_aos(&ps);
+                std::hint::black_box(&out);
+            }),
+        );
+
+        // CPU Marionette SoA.
+        cpu_soa_m.push(
+            x,
+            h.measure(|| {
+                let pc = reco::reconstruct_into_collection(&m_soa);
+                let out = reco::fill_back_aos(&pc);
+                std::hint::black_box(&out);
+            }),
+        );
+
+        // Device: upload calibrated planes + stencil kernels + download
+        // + gather + fill back.
+        if let Some(eng) = &engine {
+            if eng.manifest().get("particle_stage", n, n).is_ok() {
+                eng.warm("particle_stage", n, n)?;
+                let energy: Vec<f32> = (0..m_soa.len()).map(|i| m_soa.energy(i)).collect();
+                let sig: Vec<f32> = (0..m_soa.len()).map(|i| m_soa.sig(i)).collect();
+                let noisy: Vec<i32> = ev.noisy.iter().map(|&v| v as i32).collect();
+                dev.push(
+                    x,
+                    h.measure(|| {
+                        let (out, _) = eng
+                            .run_particle_stage(n, n, &energy, &sig, &ev.types, &noisy)
+                            .expect("device run");
+                        let pc = reco::particles_from_planes::<SoAVec>(
+                            n, n, ev.event_id, &out.seeds, &out.sums, &sig,
+                        );
+                        let back = reco::fill_back_aos(&pc);
+                        std::hint::black_box(&back);
+                    }),
+                );
+            }
+        }
+    }
+
+    table.push(cpu_aos_hw);
+    table.push(cpu_aos_m);
+    table.push(cpu_soa_hw);
+    table.push(cpu_soa_m);
+    if !dev.points.is_empty() {
+        table.push(dev);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// Zero-cost micro-benchmark
+// ---------------------------------------------------------------------
+
+/// Zero-cost table: per-element read (energy sum) and calibrate times,
+/// Marionette vs handwritten, per layout. X axis encodes the operation:
+/// 0 = read-sum, 1 = calibrate.
+pub fn zero_cost(grid: usize, harness: Harness) -> Result<Table> {
+    let ev = event_for_grid(grid, (grid / 32).max(1).pow(2), 31);
+    let mut table = Table::new(
+        format!("Zero-cost abstractions - {grid}x{grid} grid (0=read-sum, 1=calibrate)"),
+        "op",
+    );
+
+    macro_rules! marionette_series {
+        ($label:expr, $layout:ty) => {{
+            let mut s = Series::new($label);
+            let mut col = ev.to_collection::<$layout>();
+            calib::calibrate_collection(&mut col);
+            s.push(
+                0.0,
+                harness.measure(|| {
+                    let mut acc = 0f32;
+                    for i in 0..col.len() {
+                        acc += col.energy(i);
+                    }
+                    std::hint::black_box(acc);
+                }),
+            );
+            s.push(1.0, harness.measure(|| calib::calibrate_collection(&mut col)));
+            s
+        }};
+    }
+
+    // Handwritten AoS.
+    let mut s = Series::new("hw-aos");
+    let mut hw_aos = HwSensorsAoS::default();
+    ev.fill_hw_aos(&mut hw_aos);
+    calib::calibrate_hw_aos(&mut hw_aos);
+    s.push(
+        0.0,
+        harness.measure(|| {
+            let mut acc = 0f32;
+            for rec in &hw_aos.data {
+                acc += rec.energy;
+            }
+            std::hint::black_box(acc);
+        }),
+    );
+    s.push(1.0, harness.measure(|| calib::calibrate_hw_aos(&mut hw_aos)));
+    table.push(s);
+
+    table.push(marionette_series!("m-aos", AoS));
+
+    // Handwritten SoA.
+    let mut s = Series::new("hw-soa");
+    let mut hw_soa = HwSensorsSoA::default();
+    ev.fill_hw_soa(&mut hw_soa);
+    calib::calibrate_hw_soa(&mut hw_soa);
+    s.push(
+        0.0,
+        harness.measure(|| {
+            let mut acc = 0f32;
+            for &e in &hw_soa.energy {
+                acc += e;
+            }
+            std::hint::black_box(acc);
+        }),
+    );
+    s.push(1.0, harness.measure(|| calib::calibrate_hw_soa(&mut hw_soa)));
+    table.push(s);
+
+    table.push(marionette_series!("m-soavec", SoAVec));
+    table.push(marionette_series!("m-soablob", SoABlob));
+    table.push(marionette_series!("m-aosoa8", AoSoA<8>));
+
+    // The per-element accessor fallback, benchmarked separately: this
+    // quantifies the abstraction penalty the column/record views avoid
+    // (EXPERIMENTS.md §Perf-1).
+    {
+        let mut s = Series::new("m-soavec-accessor");
+        let mut col = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut col);
+        s.push(
+            0.0,
+            harness.measure(|| {
+                let mut acc = 0f32;
+                for i in 0..col.len() {
+                    acc += col.energy(i);
+                }
+                std::hint::black_box(acc);
+            }),
+        );
+        s.push(
+            1.0,
+            harness.measure(|| calib::calibrate_collection_accessors(&mut col)),
+        );
+        table.push(s);
+    }
+
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// Transfer benchmarks (§VII)
+// ---------------------------------------------------------------------
+
+/// Transfer table: layout-conversion times for a fixed collection size,
+/// plus raw `memcopy_with_context` bandwidth points. X encodes bytes.
+pub fn transfers(grid: usize, harness: Harness) -> Result<Table> {
+    let ev = event_for_grid(grid, 4, 17);
+    let mut table = Table::new(
+        format!("Transfers - sensor collection {grid}x{grid} + raw memcopy"),
+        "bytes",
+    );
+    let src = ev.to_collection::<SoAVec>();
+    let bytes = (src.len() * 30) as f64; // ~30B per sensor across planes
+
+    macro_rules! conv {
+        ($label:expr, $src:ty, $dst:ty) => {{
+            let s0 = ev.to_collection::<$src>();
+            let mut d = crate::edm::SensorCollection::<$dst>::new();
+            let mut s = Series::new($label);
+            s.push(bytes, harness.measure(|| {
+                copy_collection(s0.raw(), d.raw_mut());
+            }));
+            table.push(s);
+        }};
+    }
+
+    conv!("soavec->soavec", SoAVec, SoAVec);
+    conv!("soavec->aos", SoAVec, AoS);
+    conv!("aos->soavec", AoS, SoAVec);
+    conv!("aos->soablob", AoS, SoABlob);
+    conv!("soavec->aosoa8", SoAVec, AoSoA<8>);
+
+    // Host -> staging (the H2D analogue) at the same payload.
+    {
+        let s0 = ev.to_collection::<SoAVec>();
+        let info = StagingInfo::default();
+        let mut d = crate::edm::SensorCollection::<SoAVec<StagingContext>>::new_in(info);
+        let mut s = Series::new("host->staging");
+        s.push(bytes, harness.measure(|| {
+            copy_collection(s0.raw(), d.raw_mut());
+        }));
+        table.push(s);
+    }
+
+    // Raw byte-bandwidth points.
+    let mut raw = Series::new("raw-memcpy");
+    for size in [4 << 10, 1 << 20, 16 << 20] {
+        let srcb = vec![1u8; size];
+        let mut dstb = vec![0u8; size];
+        raw.push(
+            size as f64,
+            harness.measure(|| unsafe {
+                crate::marionette::transfer::memcopy_with_context::<
+                    crate::marionette::memory::HostContext,
+                    crate::marionette::memory::HostContext,
+                >(&(), srcb.as_ptr(), &(), dstb.as_mut_ptr(), size);
+                std::hint::black_box(&dstb);
+            }),
+        );
+    }
+    table.push(raw);
+
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// Ablations
+// ---------------------------------------------------------------------
+
+/// Ablation 1: host algorithm time per layout (calibrate at 0, reconstruct
+/// at 1) — the "experiment with different data layouts" motivation.
+pub fn ablation_layouts(grid: usize, particles: usize, harness: Harness) -> Result<Table> {
+    let ev = event_for_grid(grid, particles, 23);
+    let mut table = Table::new(
+        format!("Ablation - layout sweep at {grid}x{grid}, {particles} particles \
+                 (0=calibrate, 1=reconstruct)"),
+        "op",
+    );
+
+    macro_rules! layout_series {
+        ($label:expr, $layout:ty) => {{
+            let mut s = Series::new($label);
+            let mut col = ev.to_collection::<$layout>();
+            s.push(0.0, harness.measure(|| calib::calibrate_collection(&mut col)));
+            s.push(1.0, harness.measure(|| {
+                std::hint::black_box(reco::reconstruct_collection(&col));
+            }));
+            table.push(s);
+        }};
+    }
+
+    layout_series!("soavec", SoAVec);
+    layout_series!("aos", AoS);
+    layout_series!("soablob", SoABlob);
+    layout_series!("aosoa4", AoSoA<4>);
+    layout_series!("aosoa16", AoSoA<16>);
+    Ok(table)
+}
+
+/// Ablation 2: fused vs staged device execution (the "sidestepping
+/// unnecessary conversions" claim, §VIII).
+pub fn ablation_fused(grids: &[usize], harness: Harness) -> Result<Table> {
+    let engine = Engine::load_default()?;
+    let mut table = Table::new(
+        "Ablation - fused full_event vs staged sensor+particle (device)",
+        "grid",
+    );
+    let mut fused = Series::new("fused");
+    let mut staged = Series::new("staged");
+    for &n in grids {
+        if engine.manifest().get("full_event", n, n).is_err() {
+            continue;
+        }
+        let ev = event_for_grid(n, (n / 32).max(1).pow(2), 41);
+        engine.warm("full_event", n, n)?;
+        engine.warm("sensor_stage", n, n)?;
+        engine.warm("particle_stage", n, n)?;
+        fused.push(
+            n as f64,
+            harness.measure(|| {
+                let _ = engine.run_full_event(&ev).expect("fused");
+            }),
+        );
+        let noisy: Vec<i32> = ev.noisy.iter().map(|&v| v as i32).collect();
+        staged.push(
+            n as f64,
+            harness.measure(|| {
+                let (s, _) = engine.run_sensor_stage(&ev).expect("staged-1");
+                let _ = engine
+                    .run_particle_stage(n, n, &s.energy, &s.sig, &ev.types, &noisy)
+                    .expect("staged-2");
+            }),
+        );
+    }
+    table.push(fused);
+    table.push(staged);
+    Ok(table)
+}
+
+/// Ablation 3: routing policies through the full coordinator (throughput
+/// in events/s encoded as a Duration of 1/throughput for table reuse).
+pub fn ablation_routing(grid: usize, n_events: usize) -> Result<Table> {
+    let mut table = Table::new(
+        format!("Ablation - routing policy at {grid}x{grid}, {n_events} events \
+                 (per-event wall time)"),
+        "policy",
+    );
+    let policies: [(&str, RoutePolicy, bool); 3] = [
+        ("host-only", RoutePolicy::HostOnly, false),
+        ("device-only", RoutePolicy::DeviceOnly, true),
+        ("auto", RoutePolicy::default(), true),
+    ];
+    for (idx, (label, policy, device)) in policies.into_iter().enumerate() {
+        let mut cfg = PipelineConfig::new(
+            EventConfig::grid(grid, grid, (grid / 32).max(1).pow(2)),
+            n_events,
+        );
+        cfg.policy = policy;
+        cfg.device = device;
+        let rep = run_pipeline(&cfg)?;
+        let mut s = Series::new(label);
+        s.push(idx as f64, Duration::from_secs_f64(rep.wall.as_secs_f64() / n_events as f64));
+        table.push(s);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig1_has_expected_shape() {
+        let mut opts = FigOpts::quick();
+        opts.harness = Harness { runs: 2, keep: 1, warmup: 0 };
+        let t = fig1(&opts).unwrap();
+        assert!(t.series.len() >= 4);
+        for s in &t.series {
+            assert_eq!(s.points.len(), opts.grids.len(), "series {}", s.label);
+        }
+        assert!(t.render().contains("cpu-aos-hw"));
+    }
+
+    #[test]
+    fn quick_zero_cost_within_bounds() {
+        let h = Harness { runs: 5, keep: 2, warmup: 1 };
+        let t = zero_cost(64, h).unwrap();
+        assert_eq!(t.series.len(), 7);
+        // Each series has both ops measured.
+        for s in &t.series {
+            assert_eq!(s.points.len(), 2);
+            assert!(s.points.iter().all(|&(_, d)| d > Duration::ZERO));
+        }
+    }
+
+    #[test]
+    fn quick_transfers_table() {
+        let h = Harness { runs: 2, keep: 1, warmup: 0 };
+        let t = transfers(32, h).unwrap();
+        assert!(t.series.iter().any(|s| s.label == "host->staging"));
+        assert!(t.to_csv().contains("raw-memcpy"));
+    }
+
+    #[test]
+    fn quick_layout_ablation() {
+        let h = Harness { runs: 2, keep: 1, warmup: 0 };
+        let t = ablation_layouts(48, 3, h).unwrap();
+        assert_eq!(t.series.len(), 5);
+    }
+}

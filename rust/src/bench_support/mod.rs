@@ -1,0 +1,215 @@
+//! Benchmark harness: the paper's timing methodology + table printers.
+//!
+//! §VIII: "the average of the ten fastest times out of 50 executions of
+//! 10 different events". [`Harness::measure`] reproduces exactly that
+//! protocol (configurable via `MARIONETTE_BENCH_RUNS` / `_KEEP` for quick
+//! smoke runs), and [`Series`]/[`Table`] print figure data as aligned
+//! text tables + CSV for plotting.
+
+pub mod figures;
+
+use std::time::{Duration, Instant};
+
+/// Best-k-of-n timing harness.
+#[derive(Clone, Copy, Debug)]
+pub struct Harness {
+    /// Total measured executions.
+    pub runs: usize,
+    /// The fastest `keep` are averaged.
+    pub keep: usize,
+    /// Untimed warmup executions.
+    pub warmup: usize,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        let env = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        // Paper protocol: 50 runs, keep 10.
+        Harness { runs: env("MARIONETTE_BENCH_RUNS", 50), keep: env("MARIONETTE_BENCH_KEEP", 10), warmup: 3 }
+    }
+}
+
+impl Harness {
+    pub fn quick() -> Harness {
+        Harness { runs: 10, keep: 3, warmup: 1 }
+    }
+
+    /// Measure `f` under the paper's protocol; returns mean of the
+    /// fastest `keep` runs.
+    pub fn measure<F: FnMut()>(&self, mut f: F) -> Duration {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed());
+        }
+        times.sort();
+        let keep = self.keep.min(times.len()).max(1);
+        let sum: Duration = times[..keep].iter().sum();
+        sum / keep as u32
+    }
+}
+
+/// One figure series: label + (x, time) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, Duration)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Series {
+        Series { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, t: Duration) {
+        self.points.push((x, t));
+    }
+}
+
+/// A whole figure: x-axis label + several series over shared x values.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub x_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>) -> Table {
+        Table { title: title.into(), x_label: x_label.into(), series: Vec::new() }
+    }
+
+    pub fn push(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    fn xs(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|&(x, _)| x))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup();
+        xs
+    }
+
+    fn lookup(s: &Series, x: f64) -> Option<Duration> {
+        s.points.iter().find(|&&(px, _)| px == x).map(|&(_, t)| t)
+    }
+
+    /// Aligned human-readable table (µs).
+    pub fn render(&self) -> String {
+        let xs = self.xs();
+        let mut out = format!("## {}\n", self.title);
+        out += &format!("{:>12}", self.x_label);
+        for s in &self.series {
+            out += &format!(" {:>18}", s.label);
+        }
+        out += "\n";
+        for &x in &xs {
+            out += &format!("{:>12}", trim_float(x));
+            for s in &self.series {
+                match Self::lookup(s, x) {
+                    Some(t) => out += &format!(" {:>16.1}us", t.as_secs_f64() * 1e6),
+                    None => out += &format!(" {:>18}", "-"),
+                }
+            }
+            out += "\n";
+        }
+        out
+    }
+
+    /// CSV (seconds), one row per x.
+    pub fn to_csv(&self) -> String {
+        let xs = self.xs();
+        let mut out = format!(
+            "{},{}\n",
+            self.x_label,
+            self.series.iter().map(|s| s.label.clone()).collect::<Vec<_>>().join(",")
+        );
+        for &x in &xs {
+            out += &trim_float(x);
+            for s in &self.series {
+                match Self::lookup(s, x) {
+                    Some(t) => out += &format!(",{:.9}", t.as_secs_f64()),
+                    None => out += ",",
+                }
+            }
+            out += "\n";
+        }
+        out
+    }
+
+    /// Write the CSV next to the repo (`bench_results/<name>.csv`).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+fn trim_float(x: f64) -> String {
+    if x == x.trunc() {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Relative difference helper used by zero-cost assertions.
+pub fn rel_diff(a: Duration, b: Duration) -> f64 {
+    let (a, b) = (a.as_secs_f64(), b.as_secs_f64());
+    (a - b).abs() / a.max(b).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_keeps_fastest() {
+        let mut calls = 0;
+        let h = Harness { runs: 10, keep: 2, warmup: 1 };
+        let t = h.measure(|| {
+            calls += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert_eq!(calls, 11);
+        assert!(t >= Duration::from_micros(150));
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("Fig X", "grid");
+        let mut s1 = Series::new("cpu");
+        s1.push(16.0, Duration::from_micros(10));
+        s1.push(32.0, Duration::from_micros(40));
+        let mut s2 = Series::new("dev");
+        s2.push(16.0, Duration::from_micros(100));
+        t.push(s1);
+        t.push(s2);
+        let r = t.render();
+        assert!(r.contains("cpu"));
+        assert!(r.contains("16"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("grid,cpu,dev"));
+        assert!(csv.contains("32,0.000040000,"));
+    }
+
+    #[test]
+    fn rel_diff_symmetric() {
+        let a = Duration::from_micros(100);
+        let b = Duration::from_micros(105);
+        assert!(rel_diff(a, b) < 0.05);
+        assert_eq!(rel_diff(a, b), rel_diff(b, a));
+    }
+}

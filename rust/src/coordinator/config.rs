@@ -1,0 +1,85 @@
+//! Pipeline configuration.
+
+use crate::edm::generator::EventConfig;
+
+/// Where events may execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Everything on CPU workers.
+    HostOnly,
+    /// Everything on the device worker.
+    DeviceOnly,
+    /// Grid-size crossover + device-queue spill (the Figure-1 insight:
+    /// device wins only above ~100×100, and a saturated device queue
+    /// should spill to the host rather than grow latency).
+    Auto {
+        /// Route to the device when `rows * cols >= min_device_cells`.
+        min_device_cells: usize,
+        /// Spill to host when the device queue is deeper than this.
+        max_device_queue: usize,
+    },
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        // 100x100 crossover per Figure 1, snapped to our bucket grid.
+        RoutePolicy::Auto { min_device_cells: 128 * 128, max_device_queue: 64 }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Synthetic workload description.
+    pub event: EventConfig,
+    /// Number of events to stream.
+    pub n_events: usize,
+    /// Generator seed.
+    pub seed: u64,
+    /// CPU worker count.
+    pub host_workers: usize,
+    /// Enable the device worker.
+    pub device: bool,
+    /// Routing policy.
+    pub policy: RoutePolicy,
+    /// Bounded queue depth between stages (backpressure).
+    pub queue_depth: usize,
+    /// Device batcher: max events drained per wakeup.
+    pub max_batch: usize,
+    /// Grid buckets the device worker pre-compiles before accepting
+    /// work (XLA compilation would otherwise land on the first event's
+    /// latency).
+    pub warm_buckets: Vec<usize>,
+}
+
+impl PipelineConfig {
+    pub fn new(event: EventConfig, n_events: usize) -> Self {
+        let bucket = event.rows.max(event.cols);
+        PipelineConfig {
+            event,
+            n_events,
+            seed: 0xA71A5,
+            host_workers: std::thread::available_parallelism()
+                .map(|n| (n.get() / 2).max(1))
+                .unwrap_or(2),
+            device: true,
+            policy: RoutePolicy::default(),
+            queue_depth: 128,
+            max_batch: 16,
+            warm_buckets: vec![bucket],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = PipelineConfig::new(EventConfig::grid(64, 64, 3), 10);
+        assert!(c.host_workers >= 1);
+        assert!(c.queue_depth > 0);
+        assert!(matches!(c.policy, RoutePolicy::Auto { .. }));
+    }
+}

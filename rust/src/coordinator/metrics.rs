@@ -1,0 +1,185 @@
+//! Pipeline metrics: lock-free counters + log₂-bucket latency histograms.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Power-of-two latency histogram from 1 µs to ~1 h.
+#[derive(Debug)]
+pub struct LatencyHisto {
+    /// bucket b counts latencies in [2^b, 2^(b+1)) µs.
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHisto {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(31);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count().max(1);
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (b, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1 << (b + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// All pipeline counters (shared by reference across threads).
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    pub events_in: AtomicUsize,
+    pub events_host: AtomicUsize,
+    pub events_device: AtomicUsize,
+    pub events_spilled: AtomicUsize,
+    pub particles_out: AtomicUsize,
+    pub device_batches: AtomicUsize,
+    pub device_upload_us: AtomicU64,
+    pub device_execute_us: AtomicU64,
+    pub device_download_us: AtomicU64,
+    pub host_latency: LatencyHisto,
+    pub device_latency: LatencyHisto,
+    pub e2e_latency: LatencyHisto,
+}
+
+/// Plain-data snapshot for reports.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub events_in: usize,
+    pub events_host: usize,
+    pub events_device: usize,
+    pub events_spilled: usize,
+    pub particles_out: usize,
+    pub device_batches: usize,
+    pub device_upload: Duration,
+    pub device_execute: Duration,
+    pub device_download: Duration,
+    pub host_mean: Duration,
+    pub device_mean: Duration,
+    pub e2e_mean: Duration,
+    pub e2e_p99: Duration,
+}
+
+impl PipelineMetrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            events_in: self.events_in.load(Ordering::Relaxed),
+            events_host: self.events_host.load(Ordering::Relaxed),
+            events_device: self.events_device.load(Ordering::Relaxed),
+            events_spilled: self.events_spilled.load(Ordering::Relaxed),
+            particles_out: self.particles_out.load(Ordering::Relaxed),
+            device_batches: self.device_batches.load(Ordering::Relaxed),
+            device_upload: Duration::from_micros(self.device_upload_us.load(Ordering::Relaxed)),
+            device_execute: Duration::from_micros(
+                self.device_execute_us.load(Ordering::Relaxed),
+            ),
+            device_download: Duration::from_micros(
+                self.device_download_us.load(Ordering::Relaxed),
+            ),
+            host_mean: self.host_latency.mean(),
+            device_mean: self.device_latency.mean(),
+            e2e_mean: self.e2e_latency.mean(),
+            e2e_p99: self.e2e_latency.quantile(0.99),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "events: in={} host={} device={} spilled={}\n\
+             particles: {}\n\
+             device: batches={} upload={:?} execute={:?} download={:?}\n\
+             latency: host-mean={:?} device-mean={:?} e2e-mean={:?} e2e-p99={:?}",
+            self.events_in,
+            self.events_host,
+            self.events_device,
+            self.events_spilled,
+            self.particles_out,
+            self.device_batches,
+            self.device_upload,
+            self.device_execute,
+            self.device_download,
+            self.host_mean,
+            self.device_mean,
+            self.e2e_mean,
+            self.e2e_p99,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_statistics() {
+        let h = LatencyHisto::default();
+        for us in [10u64, 20, 40, 80, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), Duration::from_micros(10_000));
+        assert_eq!(h.mean(), Duration::from_micros((10 + 20 + 40 + 80 + 10_000) / 5));
+        // p50 upper bound must be <= 64us bucket ceiling.
+        assert!(h.quantile(0.5) <= Duration::from_micros(64));
+        assert!(h.quantile(1.0) >= Duration::from_micros(10_000));
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let m = PipelineMetrics::default();
+        m.events_in.store(7, Ordering::Relaxed);
+        m.e2e_latency.record(Duration::from_millis(3));
+        let s = m.snapshot();
+        assert_eq!(s.events_in, 7);
+        assert!(s.report().contains("in=7"));
+    }
+}

@@ -1,0 +1,25 @@
+//! The event-processing coordinator: the L3 system around the EDM.
+//!
+//! The paper's library exists to let host and accelerator code paths
+//! coexist over one data model during a gradual port (§I, §III); the
+//! coordinator operationalises that: a multi-threaded pipeline that
+//! routes events between CPU workers (running the host algorithms over
+//! Marionette collections) and a dedicated device worker (running the
+//! AOT executables through `runtime::Engine`), with dynamic routing,
+//! device-side batching, bounded-queue backpressure and metrics.
+//!
+//! Threading model: `std::thread` + bounded `mpsc` channels (tokio is
+//! not in the vendored dependency set; the pipeline is CPU/device-bound,
+//! not I/O-bound, so blocking channels with explicit backpressure are a
+//! faithful substitute). The device worker owns its `Engine` because
+//! PJRT handles are `Rc`-based and single-threaded.
+
+pub mod batcher;
+pub mod config;
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+
+pub use config::{PipelineConfig, RoutePolicy};
+pub use metrics::{MetricsSnapshot, PipelineMetrics};
+pub use pipeline::{run_pipeline, EventResult, PipelineReport, Route};

@@ -1,0 +1,371 @@
+//! The pipeline: source → router → {host pool | device worker} → collector.
+//!
+//! * Source: synthetic event stream (`edm::generator`), routed as it is
+//!   produced.
+//! * Host workers: the CPU path — fill a Marionette SoA collection,
+//!   calibrate, reconstruct, fill back the handwritten AoS (exactly the
+//!   Figure 1+2 CPU pipeline).
+//! * Device worker: one dedicated thread owning a `runtime::Engine`
+//!   (PJRT handles are single-threaded); drains its bounded queue
+//!   through the bucket [`Batcher`], runs the fused `full_event`
+//!   executable, gathers particles from the returned planes, fills back.
+//! * Collector: aggregates per-event results + metrics.
+//!
+//! Every queue is a bounded `sync_channel`: a slow stage backpressures
+//! the source instead of growing memory.
+
+use std::sync::mpsc::{channel, sync_channel};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::edm::generator::{EventGenerator, RawEvent};
+use crate::edm::{calib, reco};
+use crate::marionette::layout::SoAVec;
+use crate::runtime::Engine;
+
+use super::batcher::Batcher;
+use super::config::PipelineConfig;
+use super::metrics::{MetricsSnapshot, PipelineMetrics};
+use super::router::{QueueGauge, Router};
+
+/// Which path processed an event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Host,
+    Device,
+}
+
+/// Per-event outcome.
+#[derive(Clone, Debug)]
+pub struct EventResult {
+    pub event_id: u64,
+    pub route: Route,
+    pub n_particles: usize,
+    pub total_energy: f64,
+    pub latency: Duration,
+}
+
+/// Whole-run outcome.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub wall: Duration,
+    pub results: Vec<EventResult>,
+    pub metrics: MetricsSnapshot,
+}
+
+impl PipelineReport {
+    pub fn events_per_sec(&self) -> f64 {
+        self.results.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn total_particles(&self) -> usize {
+        self.results.iter().map(|r| r.n_particles).sum()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "pipeline: {} events in {:?} ({:.1} ev/s), {} particles\n{}",
+            self.results.len(),
+            self.wall,
+            self.events_per_sec(),
+            self.total_particles(),
+            self.metrics.report()
+        )
+    }
+}
+
+struct Task {
+    ev: RawEvent,
+    enqueued: Instant,
+}
+
+/// Process one event on the host path (shared by workers and benches).
+pub fn process_host(ev: &RawEvent) -> (usize, f64) {
+    let mut col = ev.to_collection::<SoAVec>();
+    calib::calibrate_collection(&mut col);
+    let particles = reco::reconstruct_collection(&col);
+    let pc = reco::into_collection::<SoAVec>(ev.event_id, &particles);
+    let back = reco::fill_back_aos(&pc);
+    let energy = back.data.iter().map(|p| p.energy as f64).sum();
+    (back.data.len(), energy)
+}
+
+/// Process one event on the device path (engine-owning thread only).
+pub fn process_device(engine: &Engine, ev: &RawEvent) -> Result<(usize, f64, crate::runtime::ExecTiming)> {
+    let (s, p, timing) = engine.run_full_event(ev)?;
+    let pc = reco::particles_from_planes::<SoAVec>(
+        ev.rows, ev.cols, ev.event_id, &p.seeds, &p.sums, &s.sig,
+    );
+    let back = reco::fill_back_aos(&pc);
+    let energy = back.data.iter().map(|p| p.energy as f64).sum();
+    Ok((back.data.len(), energy, timing))
+}
+
+/// Run the full pipeline to completion.
+pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
+    let metrics = Arc::new(PipelineMetrics::default());
+    let gauge = QueueGauge::default();
+    let router = Router::new(cfg.policy, cfg.device, gauge.clone());
+
+    let (host_tx, host_rx) = sync_channel::<Task>(cfg.queue_depth);
+    let (dev_tx, dev_rx) = sync_channel::<Task>(cfg.queue_depth);
+    // Results are unbounded: the collector (this thread) only starts
+    // draining after the source loop finishes, so a bounded results
+    // channel would deadlock under tight input backpressure.
+    let (res_tx, res_rx) = channel::<EventResult>();
+    let host_rx = Arc::new(Mutex::new(host_rx));
+
+    let start = Instant::now();
+    let mut workers = Vec::new();
+
+    // Host worker pool.
+    for _ in 0..cfg.host_workers.max(1) {
+        let rx = host_rx.clone();
+        let tx = res_tx.clone();
+        let metrics = metrics.clone();
+        workers.push(std::thread::spawn(move || {
+            loop {
+                let task = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(task) = task else { break };
+                let (n, energy) = process_host(&task.ev);
+                let latency = task.enqueued.elapsed();
+                metrics.events_host.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.particles_out.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                metrics.host_latency.record(latency);
+                metrics.e2e_latency.record(latency);
+                let _ = tx.send(EventResult {
+                    event_id: task.ev.event_id,
+                    route: Route::Host,
+                    n_particles: n,
+                    total_energy: energy,
+                    latency,
+                });
+            }
+        }));
+    }
+
+    // Device worker: owns the engine, drains through the batcher.
+    if cfg.device {
+        let tx = res_tx.clone();
+        let metrics = metrics.clone();
+        let gauge = gauge.clone();
+        let max_batch = cfg.max_batch;
+        let warm_buckets = cfg.warm_buckets.clone();
+        workers.push(std::thread::spawn(move || {
+            let engine = match Engine::load_default() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("device worker disabled: {e:#}");
+                    // Drain and bounce everything to nowhere: the router
+                    // already sent events here, so process on host path.
+                    while let Ok(task) = dev_rx.recv() {
+                        gauge.dec();
+                        let (n, energy) = process_host(&task.ev);
+                        let latency = task.enqueued.elapsed();
+                        metrics
+                            .events_host
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        metrics
+                            .particles_out
+                            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                        metrics.e2e_latency.record(latency);
+                        let _ = tx.send(EventResult {
+                            event_id: task.ev.event_id,
+                            route: Route::Host,
+                            n_particles: n,
+                            total_energy: energy,
+                            latency,
+                        });
+                    }
+                    return;
+                }
+            };
+            // Pre-compile expected buckets so the first event does not
+            // pay XLA compilation (EXPERIMENTS.md §Perf-4).
+            for b in warm_buckets {
+                if let Err(e) = engine.warm("full_event", b, b) {
+                    eprintln!("device warmup for {b}x{b} skipped: {e:#}");
+                }
+            }
+            let mut batcher: Batcher<Task> = Batcher::new(max_batch);
+            loop {
+                // Block for one task, then opportunistically drain more.
+                match dev_rx.recv() {
+                    Ok(t) => {
+                        batcher.push(t.ev.rows, t);
+                        while let Ok(t) = dev_rx.try_recv() {
+                            batcher.push(t.ev.rows, t);
+                        }
+                    }
+                    Err(_) if batcher.is_empty() => break,
+                    Err(_) => {}
+                }
+                while !batcher.is_empty() {
+                    let batch = batcher.drain_batch();
+                    metrics
+                        .device_batches
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    for (_, task) in batch {
+                        gauge.dec();
+                        use std::sync::atomic::Ordering::Relaxed;
+                        match process_device(&engine, &task.ev) {
+                            Ok((n, energy, timing)) => {
+                                let latency = task.enqueued.elapsed();
+                                metrics.events_device.fetch_add(1, Relaxed);
+                                metrics.particles_out.fetch_add(n, Relaxed);
+                                metrics
+                                    .device_upload_us
+                                    .fetch_add(timing.upload.as_micros() as u64, Relaxed);
+                                metrics
+                                    .device_execute_us
+                                    .fetch_add(timing.execute.as_micros() as u64, Relaxed);
+                                metrics
+                                    .device_download_us
+                                    .fetch_add(timing.download.as_micros() as u64, Relaxed);
+                                metrics.device_latency.record(latency);
+                                metrics.e2e_latency.record(latency);
+                                let _ = tx.send(EventResult {
+                                    event_id: task.ev.event_id,
+                                    route: Route::Device,
+                                    n_particles: n,
+                                    total_energy: energy,
+                                    latency,
+                                });
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "device failed on event {}: {e:#}; host fallback",
+                                    task.ev.event_id
+                                );
+                                let (n, energy) = process_host(&task.ev);
+                                let latency = task.enqueued.elapsed();
+                                metrics.events_host.fetch_add(1, Relaxed);
+                                metrics.particles_out.fetch_add(n, Relaxed);
+                                metrics.e2e_latency.record(latency);
+                                let _ = tx.send(EventResult {
+                                    event_id: task.ev.event_id,
+                                    route: Route::Host,
+                                    n_particles: n,
+                                    total_energy: energy,
+                                    latency,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    drop(res_tx);
+
+    // Source + router (this thread).
+    let mut gen = EventGenerator::new(cfg.event.clone(), cfg.seed);
+    for _ in 0..cfg.n_events {
+        let ev = gen.generate();
+        metrics.events_in.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let d = router.decide(ev.rows, ev.cols);
+        if d.spilled {
+            metrics.events_spilled.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        let task = Task { ev, enqueued: Instant::now() };
+        match d.route {
+            Route::Host => host_tx.send(task).context("host queue closed")?,
+            Route::Device => {
+                gauge.inc();
+                dev_tx.send(task).context("device queue closed")?;
+            }
+        }
+    }
+    drop(host_tx);
+    drop(dev_tx);
+
+    // Collector.
+    let mut results: Vec<EventResult> = res_rx.iter().collect();
+    for w in workers {
+        w.join().expect("worker panicked");
+    }
+    results.sort_by_key(|r| r.event_id);
+    let wall = start.elapsed();
+
+    Ok(PipelineReport { wall, results, metrics: metrics.snapshot() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::RoutePolicy;
+    use crate::edm::generator::EventConfig;
+
+    fn base_cfg(n: usize) -> PipelineConfig {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 3), n);
+        cfg.host_workers = 2;
+        cfg.seed = 77;
+        cfg
+    }
+
+    #[test]
+    fn host_only_processes_everything() {
+        let mut cfg = base_cfg(12);
+        cfg.device = false;
+        cfg.policy = RoutePolicy::HostOnly;
+        let rep = run_pipeline(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 12);
+        assert_eq!(rep.metrics.events_host, 12);
+        assert_eq!(rep.metrics.events_device, 0);
+        assert!(rep.total_particles() > 0, "3 deposits per event must seed");
+        // Results are sorted and complete.
+        for (i, r) in rep.results.iter().enumerate() {
+            assert_eq!(r.event_id, i as u64);
+        }
+    }
+
+    #[test]
+    fn device_only_matches_host_physics() {
+        if Engine::load_default().is_err() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut host_cfg = base_cfg(6);
+        host_cfg.device = false;
+        host_cfg.policy = RoutePolicy::HostOnly;
+        let host = run_pipeline(&host_cfg).unwrap();
+
+        let mut dev_cfg = base_cfg(6);
+        dev_cfg.policy = RoutePolicy::DeviceOnly;
+        let dev = run_pipeline(&dev_cfg).unwrap();
+
+        assert_eq!(dev.metrics.events_device, 6);
+        assert_eq!(host.results.len(), dev.results.len());
+        for (h, d) in host.results.iter().zip(&dev.results) {
+            assert_eq!(h.event_id, d.event_id);
+            assert_eq!(h.n_particles, d.n_particles, "event {}", h.event_id);
+            let rel = (h.total_energy - d.total_energy).abs()
+                / h.total_energy.abs().max(1.0);
+            assert!(rel < 1e-3, "energy drift {rel} on event {}", h.event_id);
+        }
+    }
+
+    #[test]
+    fn auto_policy_routes_small_grids_to_host() {
+        let mut cfg = base_cfg(8);
+        cfg.policy = RoutePolicy::Auto { min_device_cells: 128 * 128, max_device_queue: 4 };
+        // 32x32 events: all below the crossover.
+        let rep = run_pipeline(&cfg).unwrap();
+        assert_eq!(rep.metrics.events_host, 8);
+        assert_eq!(rep.metrics.events_device, 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut cfg = base_cfg(4);
+        cfg.device = false;
+        let rep = run_pipeline(&cfg).unwrap();
+        assert!(rep.events_per_sec() > 0.0);
+        assert!(rep.report().contains("events"));
+    }
+}

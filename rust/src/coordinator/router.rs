@@ -1,0 +1,129 @@
+//! Routing: decide per event whether the host pool or the device worker
+//! should process it.
+//!
+//! The `Auto` policy encodes Figure 1's crossover: small grids lose on
+//! the device (fixed upload/launch overheads dominate), large grids win;
+//! and a saturated device queue spills to the host to bound latency —
+//! the "host and accelerator code coexist" story of the paper made
+//! operational.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::config::RoutePolicy;
+use super::pipeline::Route;
+
+/// Shared device-queue depth gauge (incremented on enqueue, decremented
+/// by the device worker).
+#[derive(Clone, Debug, Default)]
+pub struct QueueGauge(Arc<AtomicUsize>);
+
+impl QueueGauge {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Stateless-per-event router (gauge carries the cross-event state).
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    device_available: bool,
+    gauge: QueueGauge,
+}
+
+/// Routing decision plus whether it was a spill (device-preferred but
+/// sent to host).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub route: Route,
+    pub spilled: bool,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, device_available: bool, gauge: QueueGauge) -> Router {
+        Router { policy, device_available, gauge }
+    }
+
+    pub fn gauge(&self) -> &QueueGauge {
+        &self.gauge
+    }
+
+    /// Decide where an event of `rows x cols` goes.
+    pub fn decide(&self, rows: usize, cols: usize) -> Decision {
+        if !self.device_available {
+            return Decision { route: Route::Host, spilled: false };
+        }
+        match self.policy {
+            RoutePolicy::HostOnly => Decision { route: Route::Host, spilled: false },
+            RoutePolicy::DeviceOnly => Decision { route: Route::Device, spilled: false },
+            RoutePolicy::Auto { min_device_cells, max_device_queue } => {
+                if rows * cols < min_device_cells {
+                    Decision { route: Route::Host, spilled: false }
+                } else if self.gauge.depth() > max_device_queue {
+                    Decision { route: Route::Host, spilled: true }
+                } else {
+                    Decision { route: Route::Device, spilled: false }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn auto(min_cells: usize, max_q: usize) -> Router {
+        Router::new(
+            RoutePolicy::Auto { min_device_cells: min_cells, max_device_queue: max_q },
+            true,
+            QueueGauge::default(),
+        )
+    }
+
+    #[test]
+    fn size_crossover() {
+        let r = auto(128 * 128, 8);
+        assert_eq!(r.decide(64, 64).route, Route::Host);
+        assert_eq!(r.decide(128, 128).route, Route::Device);
+        assert_eq!(r.decide(1024, 1024).route, Route::Device);
+    }
+
+    #[test]
+    fn queue_spill() {
+        let r = auto(0, 2);
+        for _ in 0..3 {
+            r.gauge().inc();
+        }
+        let d = r.decide(512, 512);
+        assert_eq!(d.route, Route::Host);
+        assert!(d.spilled);
+        r.gauge().dec();
+        let d = r.decide(512, 512);
+        assert_eq!(d.route, Route::Device);
+        assert!(!d.spilled);
+    }
+
+    #[test]
+    fn no_device_forces_host() {
+        let r = Router::new(RoutePolicy::DeviceOnly, false, QueueGauge::default());
+        assert_eq!(r.decide(1024, 1024).route, Route::Host);
+    }
+
+    #[test]
+    fn fixed_policies() {
+        let h = Router::new(RoutePolicy::HostOnly, true, QueueGauge::default());
+        assert_eq!(h.decide(1024, 1024).route, Route::Host);
+        let d = Router::new(RoutePolicy::DeviceOnly, true, QueueGauge::default());
+        assert_eq!(d.decide(8, 8).route, Route::Device);
+    }
+}

@@ -1,0 +1,193 @@
+//! Host calibration algorithms (Figure 1's compute stage).
+//!
+//! One physics definition — `ref.py:calibrate_ref` — implemented four
+//! times with identical semantics: over the Marionette collection (both
+//! through the object-oriented no-property interface and through direct
+//! accessors) and over the two handwritten baselines. The zero-cost bench
+//! compares these; the figure benches use them as the CPU series.
+
+use crate::marionette::layout::Layout;
+
+use super::constants::NOISE_FLOOR;
+use super::handwritten::{HwSensorsAoS, HwSensorsSoA};
+use super::sensor::SensorCollection;
+
+#[inline(always)]
+fn kernel(
+    noisy: u8,
+    counts: i32,
+    a: f32,
+    b: f32,
+    na: f32,
+    nb: f32,
+) -> (f32, f32, f32) {
+    let e = if noisy != 0 { 0.0 } else { a * counts as f32 + b };
+    let noise = (na + nb * e.max(0.0).sqrt()).max(NOISE_FLOOR);
+    (e, noise, e / noise)
+}
+
+/// Calibrate a Marionette collection.
+///
+/// Uses the collection-level interface the paper's listing 3 exposes
+/// (`energy()` on a collection returns the whole column): the dense
+/// record view for AoS layouts, the split-borrowed column view for SoA
+/// layouts, and the per-element accessors for irregular layouts
+/// (AoSoA). All three paths run the identical [`kernel`]; the view
+/// selection is what makes the Marionette series match the handwritten
+/// one in `benches/zero_cost.rs` (EXPERIMENTS.md §Perf).
+pub fn calibrate_collection<L: Layout>(s: &mut SensorCollection<L>) {
+    if let Some(recs) = s.records_mut() {
+        for r in recs {
+            let (e, noise, sig) =
+                kernel(r.noisy, r.counts, r.param_a, r.param_b, r.noise_a, r.noise_b);
+            r.energy = e;
+            r.noise = noise;
+            r.sig = sig;
+        }
+        return;
+    }
+    if let Some(c) = s.columns_mut() {
+        for i in 0..c.counts.len() {
+            let (e, noise, sig) = kernel(
+                c.noisy[i],
+                c.counts[i],
+                c.param_a[i],
+                c.param_b[i],
+                c.noise_a[i],
+                c.noise_b[i],
+            );
+            c.energy[i] = e;
+            c.noise[i] = noise;
+            c.sig[i] = sig;
+        }
+        return;
+    }
+    calibrate_collection_accessors(s);
+}
+
+/// Calibrate through the per-element generated accessors only (the
+/// fallback path for irregular layouts; also benchmarked standalone in
+/// the ablation to quantify the accessor abstraction penalty).
+pub fn calibrate_collection_accessors<L: Layout>(s: &mut SensorCollection<L>) {
+    for i in 0..s.len() {
+        let (e, noise, sig) = kernel(
+            s.noisy(i),
+            s.counts(i),
+            s.param_a(i),
+            s.param_b(i),
+            s.noise_a(i),
+            s.noise_b(i),
+        );
+        s.set_energy(i, e);
+        s.set_noise(i, noise);
+        s.set_sig(i, sig);
+    }
+}
+
+/// Calibrate through the object-oriented no-property interface (paper:
+/// `sensor.calibrate_energy()` written against the class API).
+pub fn calibrate_collection_oo<L: Layout>(s: &mut SensorCollection<L>) {
+    for i in 0..s.len() {
+        s.calibrate_energy(i);
+    }
+}
+
+/// Calibrate the handwritten AoS baseline.
+pub fn calibrate_hw_aos(s: &mut HwSensorsAoS) {
+    for rec in &mut s.data {
+        let (e, noise, sig) = kernel(
+            rec.noisy,
+            rec.counts,
+            rec.param_a,
+            rec.param_b,
+            rec.noise_a,
+            rec.noise_b,
+        );
+        rec.energy = e;
+        rec.noise = noise;
+        rec.sig = sig;
+    }
+}
+
+/// Calibrate the handwritten SoA baseline.
+pub fn calibrate_hw_soa(s: &mut HwSensorsSoA) {
+    for i in 0..s.len() {
+        let (e, noise, sig) = kernel(
+            s.noisy[i],
+            s.counts[i],
+            s.param_a[i],
+            s.param_b[i],
+            s.noise_a[i],
+            s.noise_b[i],
+        );
+        s.energy[i] = e;
+        s.noise[i] = noise;
+        s.sig[i] = sig;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::generator::{EventConfig, EventGenerator};
+    use super::*;
+    use crate::marionette::layout::{AoS, AoSoA, SoABlob, SoAVec};
+
+    /// All four implementations produce bit-identical planes.
+    #[test]
+    fn implementations_agree() {
+        let ev = EventGenerator::new(EventConfig::grid(32, 32, 4), 11).generate();
+
+        let mut aos = Default::default();
+        ev.fill_hw_aos(&mut aos);
+        calibrate_hw_aos(&mut aos);
+
+        let mut soa = Default::default();
+        ev.fill_hw_soa(&mut soa);
+        calibrate_hw_soa(&mut soa);
+
+        let mut col = ev.to_collection::<SoAVec>();
+        calibrate_collection(&mut col);
+
+        let mut col_oo = ev.to_collection::<AoS>();
+        calibrate_collection_oo(&mut col_oo);
+
+        for i in 0..ev.num_sensors() {
+            assert_eq!(aos.data[i].energy, soa.energy[i]);
+            assert_eq!(aos.data[i].energy, col.energy(i));
+            assert_eq!(aos.data[i].energy, col_oo.energy(i));
+            assert_eq!(aos.data[i].noise, col.noise(i));
+            assert_eq!(aos.data[i].sig, col_oo.sig(i));
+        }
+    }
+
+    /// The collection algorithm is layout-independent.
+    #[test]
+    fn layout_independent() {
+        let ev = EventGenerator::new(EventConfig::grid(24, 40, 3), 13).generate();
+        let mut a = ev.to_collection::<SoAVec>();
+        let mut b = ev.to_collection::<AoS>();
+        let mut c = ev.to_collection::<SoABlob>();
+        let mut d = ev.to_collection::<AoSoA<8>>();
+        calibrate_collection(&mut a);
+        calibrate_collection(&mut b);
+        calibrate_collection(&mut c);
+        calibrate_collection(&mut d);
+        for i in 0..ev.num_sensors() {
+            assert_eq!(a.sig(i), b.sig(i));
+            assert_eq!(a.sig(i), c.sig(i));
+            assert_eq!(a.sig(i), d.sig(i));
+        }
+    }
+
+    #[test]
+    fn noisy_sensor_semantics() {
+        let mut ev = EventGenerator::new(EventConfig::grid(8, 8, 0), 1).generate();
+        ev.noisy[10] = 1;
+        ev.counts[10] = 100_000; // must be masked
+        let mut col = ev.to_collection::<SoAVec>();
+        calibrate_collection(&mut col);
+        assert_eq!(col.energy(10), 0.0);
+        assert_eq!(col.noise(10), col.noise_a(10));
+        assert_eq!(col.sig(10), 0.0);
+    }
+}

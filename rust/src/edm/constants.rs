@@ -1,0 +1,50 @@
+//! Physics constants of the realistic example.
+//!
+//! Mirror of `python/compile/physics.py`; `runtime::artifact` re-checks
+//! these against `artifacts/manifest.json` at load time so the two
+//! languages can never drift silently.
+
+/// Number of distinct sensor types (paper: `SensorType::Num`).
+pub const NUM_SENSOR_TYPES: usize = 3;
+
+/// Reconstruction window is `WINDOW x WINDOW` around the seed (paper: 5×5).
+pub const WINDOW: usize = 5;
+pub const HALO: usize = WINDOW / 2;
+
+/// Seeding cut: a sensor seeds a particle when `sig > SEED_SIGNIFICANCE`
+/// and it attains the window maximum of energy.
+pub const SEED_SIGNIFICANCE: f32 = 4.0;
+
+/// Contribution cut: a sensor joins a particle's jagged sensor list when
+/// `sig > CONTRIB_SIGNIFICANCE`.
+pub const CONTRIB_SIGNIFICANCE: f32 = 2.0;
+
+/// Guard for degenerate calibrations (matches `ref.py`).
+pub const NOISE_FLOOR: f32 = 1e-6;
+
+/// Stacked plane indices produced by the device particle stage
+/// (`python/compile/physics.py` plane layout).
+pub const PLANE_E: usize = 0;
+pub const PLANE_EX: usize = 1;
+pub const PLANE_EY: usize = 2;
+pub const PLANE_EXX: usize = 3;
+pub const PLANE_EYY: usize = 4;
+pub const PLANE_E_TYPE: usize = 5;
+pub const PLANE_SIG_TYPE: usize = 5 + NUM_SENSOR_TYPES;
+pub const PLANE_NOISY_TYPE: usize = 5 + 2 * NUM_SENSOR_TYPES;
+pub const PLANE_CONTRIB: usize = 5 + 3 * NUM_SENSOR_TYPES;
+pub const NUM_PLANES: usize = 6 + 3 * NUM_SENSOR_TYPES;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_layout_is_contiguous() {
+        assert_eq!(PLANE_E_TYPE, 5);
+        assert_eq!(PLANE_SIG_TYPE, 8);
+        assert_eq!(PLANE_NOISY_TYPE, 11);
+        assert_eq!(PLANE_CONTRIB, 14);
+        assert_eq!(NUM_PLANES, 15);
+    }
+}

@@ -1,0 +1,322 @@
+//! Synthetic event generation (the Rust twin of
+//! `python/compile/aot.py:generate_event`).
+//!
+//! The paper's evaluation uses ATLAS-like events that we do not have; per
+//! the substitution rule (DESIGN.md §2) the generator injects Gaussian
+//! energy deposits onto a Poisson-background grid of mixed-type sensors
+//! with per-type calibration constants — exercising the same code paths
+//! (noisy sensors, per-type tallies, jagged contributor lists).
+//!
+//! Deposits are truncated at ±4σ (the Python twin evaluates the full
+//! grid; beyond 4σ the contribution is < 1 count, so the physics is
+//! identical — goldens come from the Python side regardless).
+
+use crate::marionette::collection::InfoOf;
+use crate::marionette::layout::Layout;
+use crate::util::rng::Rng;
+
+use super::handwritten::{HwSensorsAoS, HwSensorsSoA};
+use super::sensor::SensorCollection;
+
+/// Per-type calibration tables (mirrors `aot.py`).
+pub const A_TAB: [f32; 3] = [0.5, 1.0, 2.0];
+pub const B_TAB: [f32; 3] = [0.0, 5.0, -3.0];
+pub const NA_TAB: [f32; 3] = [2.0, 3.0, 5.0];
+pub const NB_TAB: [f32; 3] = [0.10, 0.05, 0.20];
+
+/// Event generation parameters.
+#[derive(Clone, Debug)]
+pub struct EventConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Particles injected per event.
+    pub n_particles: usize,
+    /// Probability that a sensor is flagged noisy.
+    pub noisy_fraction: f64,
+    /// Poisson mean of the count background.
+    pub background: f64,
+    /// Deposit amplitude range (raw counts at the core).
+    pub amplitude: (f64, f64),
+    /// Deposit width range (sensors).
+    pub sigma: (f64, f64),
+}
+
+impl EventConfig {
+    pub fn grid(rows: usize, cols: usize, n_particles: usize) -> Self {
+        EventConfig {
+            rows,
+            cols,
+            n_particles,
+            noisy_fraction: 0.01,
+            background: 3.0,
+            amplitude: (200.0, 2000.0),
+            sigma: (0.6, 1.2),
+        }
+    }
+}
+
+/// Raw per-sensor planes of one generated event (pre-calibration), the
+/// exact inputs of the device `sensor_stage`.
+#[derive(Clone, Debug)]
+pub struct RawEvent {
+    pub event_id: u64,
+    pub rows: usize,
+    pub cols: usize,
+    pub counts: Vec<i32>,
+    pub types: Vec<i32>,
+    pub noisy: Vec<u8>,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub na: Vec<f32>,
+    pub nb: Vec<f32>,
+    /// (row, col) of each injected deposit (ground truth for sanity
+    /// checks; not visible to the reconstruction).
+    pub truth: Vec<(usize, usize)>,
+}
+
+impl RawEvent {
+    pub fn num_sensors(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Fill a Marionette sensor collection (any layout/context), using
+    /// the collection's dense record/column views where the layout
+    /// provides them (same bulk interface the handwritten fill uses;
+    /// falls back to per-element accessors on irregular layouts).
+    pub fn fill_collection<L: Layout>(&self, s: &mut SensorCollection<L>) {
+        // Only re-size when the shape changed: resize zero-fills, and
+        // every field is overwritten below anyway.
+        if s.len() != self.num_sensors() {
+            s.clear();
+            s.resize(self.num_sensors());
+        }
+        s.set_rows(self.rows as u32);
+        s.set_cols(self.cols as u32);
+        s.set_event_id(self.event_id);
+        if let Some(recs) = s.records_mut() {
+            for (i, r) in recs.iter_mut().enumerate() {
+                r.type_id = self.types[i];
+                r.counts = self.counts[i];
+                r.noisy = self.noisy[i];
+                r.param_a = self.a[i];
+                r.param_b = self.b[i];
+                r.noise_a = self.na[i];
+                r.noise_b = self.nb[i];
+                r.energy = 0.0;
+                r.noise = 0.0;
+                r.sig = 0.0;
+            }
+            return;
+        }
+        if let Some(c) = s.columns_mut() {
+            c.type_id.copy_from_slice(&self.types);
+            c.counts.copy_from_slice(&self.counts);
+            c.noisy.copy_from_slice(&self.noisy);
+            c.param_a.copy_from_slice(&self.a);
+            c.param_b.copy_from_slice(&self.b);
+            c.noise_a.copy_from_slice(&self.na);
+            c.noise_b.copy_from_slice(&self.nb);
+            c.energy.fill(0.0);
+            c.noise.fill(0.0);
+            c.sig.fill(0.0);
+            return;
+        }
+        for i in 0..self.num_sensors() {
+            s.set_type_id(i, self.types[i]);
+            s.set_counts(i, self.counts[i]);
+            s.set_noisy(i, self.noisy[i]);
+            s.set_param_a(i, self.a[i]);
+            s.set_param_b(i, self.b[i]);
+            s.set_noise_a(i, self.na[i]);
+            s.set_noise_b(i, self.nb[i]);
+        }
+    }
+
+    /// Build a fresh Marionette collection in the given layout.
+    pub fn to_collection<L: Layout>(&self) -> SensorCollection<L>
+    where
+        InfoOf<L>: Default,
+    {
+        let mut s = SensorCollection::<L>::new();
+        self.fill_collection(&mut s);
+        s
+    }
+
+    /// Fill the handwritten AoS baseline.
+    pub fn fill_hw_aos(&self, s: &mut HwSensorsAoS) {
+        s.rows = self.rows as u32;
+        s.cols = self.cols as u32;
+        s.event_id = self.event_id;
+        if s.data.len() != self.num_sensors() {
+            s.data.clear();
+            s.data.resize(self.num_sensors(), Default::default());
+        }
+        for (i, rec) in s.data.iter_mut().enumerate() {
+            rec.type_id = self.types[i];
+            rec.counts = self.counts[i];
+            rec.noisy = self.noisy[i];
+            rec.param_a = self.a[i];
+            rec.param_b = self.b[i];
+            rec.noise_a = self.na[i];
+            rec.noise_b = self.nb[i];
+            rec.energy = 0.0;
+            rec.noise = 0.0;
+            rec.sig = 0.0;
+        }
+    }
+
+    /// Fill the handwritten SoA baseline.
+    pub fn fill_hw_soa(&self, s: &mut HwSensorsSoA) {
+        s.rows = self.rows as u32;
+        s.cols = self.cols as u32;
+        s.event_id = self.event_id;
+        s.resize(self.num_sensors());
+        s.type_id.copy_from_slice(&self.types);
+        s.counts.copy_from_slice(&self.counts);
+        s.noisy.copy_from_slice(&self.noisy);
+        s.param_a.copy_from_slice(&self.a);
+        s.param_b.copy_from_slice(&self.b);
+        s.noise_a.copy_from_slice(&self.na);
+        s.noise_b.copy_from_slice(&self.nb);
+        s.energy.fill(0.0);
+        s.noise.fill(0.0);
+        s.sig.fill(0.0);
+    }
+}
+
+/// Deterministic stream of synthetic events.
+pub struct EventGenerator {
+    pub config: EventConfig,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl EventGenerator {
+    pub fn new(config: EventConfig, seed: u64) -> Self {
+        EventGenerator { config, rng: Rng::seed_from_u64(seed), next_id: 0 }
+    }
+
+    /// Generate the next event.
+    pub fn generate(&mut self) -> RawEvent {
+        let cfg = &self.config;
+        let (rows, cols) = (cfg.rows, cfg.cols);
+        let n = rows * cols;
+        let mut counts_f = vec![0.0f64; n];
+        let mut types = vec![0i32; n];
+        let mut noisy = vec![0u8; n];
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        let mut na = vec![0.0f32; n];
+        let mut nb = vec![0.0f32; n];
+
+        for i in 0..n {
+            let t = self.rng.range_usize(0, 3);
+            types[i] = t as i32;
+            let jitter = 1.0 + 0.01 * self.rng.normal() as f32;
+            a[i] = A_TAB[t] * jitter;
+            b[i] = B_TAB[t];
+            na[i] = NA_TAB[t];
+            nb[i] = NB_TAB[t];
+            noisy[i] = u8::from(self.rng.bool(cfg.noisy_fraction));
+            counts_f[i] = self.rng.poisson(cfg.background) as f64;
+        }
+
+        // Inject particles as truncated 2D Gaussians.
+        let mut truth = Vec::with_capacity(cfg.n_particles);
+        for _ in 0..cfg.n_particles {
+            let r0 = self.rng.range_usize(2, rows.saturating_sub(2).max(3));
+            let c0 = self.rng.range_usize(2, cols.saturating_sub(2).max(3));
+            let amp = self.rng.uniform(cfg.amplitude.0, cfg.amplitude.1);
+            let sigma = self.rng.uniform(cfg.sigma.0, cfg.sigma.1);
+            truth.push((r0, c0));
+            let reach = (4.0 * sigma).ceil() as usize;
+            let rlo = r0.saturating_sub(reach);
+            let rhi = (r0 + reach + 1).min(rows);
+            let clo = c0.saturating_sub(reach);
+            let chi = (c0 + reach + 1).min(cols);
+            for r in rlo..rhi {
+                for c in clo..chi {
+                    let d2 = (r as f64 - r0 as f64).powi(2) + (c as f64 - c0 as f64).powi(2);
+                    counts_f[r * cols + c] += amp * (-d2 / (2.0 * sigma * sigma)).exp();
+                }
+            }
+        }
+
+        let counts = counts_f.iter().map(|&x| x as i32).collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        RawEvent { event_id: id, rows, cols, counts, types, noisy, a, b, na, nb, truth }
+    }
+}
+
+impl Iterator for EventGenerator {
+    type Item = RawEvent;
+
+    fn next(&mut self) -> Option<RawEvent> {
+        Some(self.generate())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marionette::layout::SoAVec;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut g1 = EventGenerator::new(EventConfig::grid(32, 32, 4), 7);
+        let mut g2 = EventGenerator::new(EventConfig::grid(32, 32, 4), 7);
+        let (a, b) = (g1.generate(), g2.generate());
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.types, b.types);
+        assert_eq!(a.truth, b.truth);
+        let c = g1.generate();
+        assert_eq!(c.event_id, 1);
+        assert_ne!(a.counts, c.counts);
+    }
+
+    #[test]
+    fn particles_raise_counts() {
+        let quiet =
+            EventGenerator::new(EventConfig::grid(64, 64, 0), 1).generate();
+        let busy =
+            EventGenerator::new(EventConfig::grid(64, 64, 10), 1).generate();
+        let sq: i64 = quiet.counts.iter().map(|&x| x as i64).sum();
+        let sb: i64 = busy.counts.iter().map(|&x| x as i64).sum();
+        assert!(sb > sq + 1000, "quiet {sq} busy {sb}");
+    }
+
+    #[test]
+    fn deposits_are_local_maxima() {
+        let ev = EventGenerator::new(EventConfig::grid(64, 64, 3), 3).generate();
+        for &(r, c) in &ev.truth {
+            let center = ev.counts[r * 64 + c];
+            // Center clearly above background unless two deposits overlap.
+            assert!(center > 50, "deposit at ({r},{c}) too weak: {center}");
+        }
+    }
+
+    #[test]
+    fn fills_agree_across_targets() {
+        let ev = EventGenerator::new(EventConfig::grid(16, 16, 2), 5).generate();
+        let col = ev.to_collection::<SoAVec>();
+        let mut aos = HwSensorsAoS::default();
+        ev.fill_hw_aos(&mut aos);
+        let mut soa = HwSensorsSoA::default();
+        ev.fill_hw_soa(&mut soa);
+        for i in 0..ev.num_sensors() {
+            assert_eq!(col.counts(i), aos.data[i].counts);
+            assert_eq!(col.counts(i), soa.counts[i]);
+            assert_eq!(col.param_a(i), aos.data[i].param_a);
+            assert_eq!(col.noisy(i), soa.noisy[i]);
+        }
+        assert_eq!(col.rows(), 16);
+        assert_eq!(aos.event_id, col.event_id());
+    }
+
+    #[test]
+    fn types_in_range() {
+        let ev = EventGenerator::new(EventConfig::grid(32, 32, 0), 9).generate();
+        assert!(ev.types.iter().all(|&t| (0..3).contains(&t)));
+    }
+}

@@ -1,0 +1,120 @@
+//! Golden-vector loader: replays the reference tensors written by
+//! `python -m compile.aot` (`artifacts/golden/`) for cross-language
+//! equivalence tests — the Rust host algorithms must reproduce
+//! `ref.py:full_event_ref` bit-for-bit (modulo f32 rounding).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+/// One golden tensor: raw little-endian bytes + dtype + shape.
+#[derive(Debug)]
+pub struct GoldenTensor {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl GoldenTensor {
+    pub fn num_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn elems<T: Copy>(&self) -> Vec<T> {
+        let esz = std::mem::size_of::<T>();
+        assert_eq!(self.bytes.len(), self.num_elems() * esz, "tensor size");
+        let mut out = Vec::with_capacity(self.num_elems());
+        for chunk in self.bytes.chunks_exact(esz) {
+            out.push(unsafe { std::ptr::read_unaligned(chunk.as_ptr() as *const T) });
+        }
+        out
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, "float32", "dtype {}", self.dtype);
+        self.elems::<f32>()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, "int32", "dtype {}", self.dtype);
+        self.elems::<i32>()
+    }
+}
+
+/// A loaded golden event: inputs + reference outputs.
+#[derive(Debug)]
+pub struct GoldenEvent {
+    pub rows: usize,
+    pub cols: usize,
+    pub tensors: BTreeMap<String, GoldenTensor>,
+}
+
+impl GoldenEvent {
+    pub fn tensor(&self, name: &str) -> &GoldenTensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("golden tensor {name:?} missing"))
+    }
+}
+
+/// Default artifacts directory: `$MARIONETTE_ARTIFACTS` or
+/// `<crate>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("MARIONETTE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Load the golden event from `<artifacts>/golden`. Returns `None` when
+/// the artifacts have not been built (tests then skip).
+pub fn load_golden() -> Option<GoldenEvent> {
+    load_golden_from(&artifacts_dir().join("golden"))
+}
+
+pub fn load_golden_from(dir: &Path) -> Option<GoldenEvent> {
+    let desc = std::fs::read_to_string(dir.join("golden.json")).ok()?;
+    let v = json::parse(&desc).expect("golden.json must parse");
+    let rows = v.req("rows").unwrap().as_usize().unwrap();
+    let cols = v.req("cols").unwrap().as_usize().unwrap();
+    let mut tensors = BTreeMap::new();
+    for (name, meta) in v.req("tensors").unwrap().as_obj().unwrap() {
+        let file = meta.req("file").unwrap().as_str().unwrap();
+        let bytes = std::fs::read(dir.join(file)).expect("golden tensor file");
+        tensors.insert(
+            name.clone(),
+            GoldenTensor {
+                dtype: meta.req("dtype").unwrap().as_str().unwrap().to_string(),
+                shape: meta
+                    .req("shape")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|s| s.as_usize().unwrap())
+                    .collect(),
+                bytes,
+            },
+        );
+    }
+    Some(GoldenEvent { rows, cols, tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_if_built() {
+        let Some(g) = load_golden() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(g.rows, 32);
+        let counts = g.tensor("counts").as_i32();
+        assert_eq!(counts.len(), g.rows * g.cols);
+        let sums = g.tensor("sums");
+        assert_eq!(sums.shape[0], super::super::constants::NUM_PLANES);
+        assert_eq!(sums.as_f32().len(), sums.num_elems());
+    }
+}

@@ -1,0 +1,201 @@
+//! Handwritten baselines (paper §VIII: "the equivalent handwritten
+//! solution").
+//!
+//! These are the structures a programmer would write by hand for the
+//! motivating example — a plain array-of-structs and a plain
+//! struct-of-arrays, for both sensors and particles — with no Marionette
+//! machinery anywhere. The zero-cost benches (`benches/zero_cost.rs`) and
+//! the figure benches run the *same algorithms* over these and over the
+//! Marionette collections; the paper's claim is that the two are
+//! indistinguishable in performance.
+
+use super::constants::NUM_SENSOR_TYPES;
+
+/// Handwritten AoS sensor record (paper listing 1, flattened).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct HwSensor {
+    pub type_id: i32,
+    pub counts: i32,
+    pub energy: f32,
+    pub noise: f32,
+    pub sig: f32,
+    pub noisy: u8,
+    pub param_a: f32,
+    pub param_b: f32,
+    pub noise_a: f32,
+    pub noise_b: f32,
+}
+
+/// Handwritten array-of-structures sensor grid.
+#[derive(Clone, Debug, Default)]
+pub struct HwSensorsAoS {
+    pub rows: u32,
+    pub cols: u32,
+    pub event_id: u64,
+    pub data: Vec<HwSensor>,
+}
+
+impl HwSensorsAoS {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> usize {
+        r * self.cols as usize + c
+    }
+}
+
+/// Handwritten structure-of-arrays sensor grid.
+#[derive(Clone, Debug, Default)]
+pub struct HwSensorsSoA {
+    pub rows: u32,
+    pub cols: u32,
+    pub event_id: u64,
+    pub type_id: Vec<i32>,
+    pub counts: Vec<i32>,
+    pub energy: Vec<f32>,
+    pub noise: Vec<f32>,
+    pub sig: Vec<f32>,
+    pub noisy: Vec<u8>,
+    pub param_a: Vec<f32>,
+    pub param_b: Vec<f32>,
+    pub noise_a: Vec<f32>,
+    pub noise_b: Vec<f32>,
+}
+
+impl HwSensorsSoA {
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    pub fn resize(&mut self, n: usize) {
+        self.type_id.resize(n, 0);
+        self.counts.resize(n, 0);
+        self.energy.resize(n, 0.0);
+        self.noise.resize(n, 0.0);
+        self.sig.resize(n, 0.0);
+        self.noisy.resize(n, 0);
+        self.param_a.resize(n, 0.0);
+        self.param_b.resize(n, 0.0);
+        self.noise_a.resize(n, 0.0);
+        self.noise_b.resize(n, 0.0);
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> usize {
+        r * self.cols as usize + c
+    }
+}
+
+/// Handwritten particle record (paper listing 2).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HwParticle {
+    pub energy: f32,
+    pub x: f32,
+    pub y: f32,
+    pub x_variance: f32,
+    pub y_variance: f32,
+    pub origin: u64,
+    pub significance: [f32; NUM_SENSOR_TYPES],
+    pub e_contribution: [f32; NUM_SENSOR_TYPES],
+    pub noisy_count: [u8; NUM_SENSOR_TYPES],
+    pub sensors: Vec<u64>,
+}
+
+/// Handwritten array-of-structures particle list ("the original data
+/// structures" that Figure 2's final fill-back step targets).
+#[derive(Clone, Debug, Default)]
+pub struct HwParticlesAoS {
+    pub event_id: u64,
+    pub data: Vec<HwParticle>,
+}
+
+/// Handwritten structure-of-arrays particle list, jagged sensors stored
+/// the classic way: a prefix-sum plus a flat value array.
+#[derive(Clone, Debug, Default)]
+pub struct HwParticlesSoA {
+    pub event_id: u64,
+    pub energy: Vec<f32>,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub x_variance: Vec<f32>,
+    pub y_variance: Vec<f32>,
+    pub origin: Vec<u64>,
+    /// Plane-major per-type arrays (`[t][i]`).
+    pub significance: [Vec<f32>; NUM_SENSOR_TYPES],
+    pub e_contribution: [Vec<f32>; NUM_SENSOR_TYPES],
+    pub noisy_count: [Vec<u8>; NUM_SENSOR_TYPES],
+    pub sensors_prefix: Vec<u32>,
+    pub sensors_values: Vec<u64>,
+}
+
+impl HwParticlesSoA {
+    pub fn new() -> Self {
+        Self { sensors_prefix: vec![0], ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.energy.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.energy.is_empty()
+    }
+
+    pub fn push(&mut self, p: &HwParticle) {
+        self.energy.push(p.energy);
+        self.x.push(p.x);
+        self.y.push(p.y);
+        self.x_variance.push(p.x_variance);
+        self.y_variance.push(p.y_variance);
+        self.origin.push(p.origin);
+        for t in 0..NUM_SENSOR_TYPES {
+            self.significance[t].push(p.significance[t]);
+            self.e_contribution[t].push(p.e_contribution[t]);
+            self.noisy_count[t].push(p.noisy_count[t]);
+        }
+        self.sensors_values.extend_from_slice(&p.sensors);
+        self.sensors_prefix.push(self.sensors_values.len() as u32);
+    }
+
+    pub fn sensors(&self, i: usize) -> &[u64] {
+        let lo = self.sensors_prefix[i] as usize;
+        let hi = self.sensors_prefix[i + 1] as usize;
+        &self.sensors_values[lo..hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soa_particles_jagged() {
+        let mut s = HwParticlesSoA::new();
+        let mut p = HwParticle { sensors: vec![1, 2, 3], ..Default::default() };
+        s.push(&p);
+        p.sensors = vec![9];
+        s.push(&p);
+        assert_eq!(s.sensors(0), &[1, 2, 3]);
+        assert_eq!(s.sensors(1), &[9]);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn soa_sensors_resize() {
+        let mut s = HwSensorsSoA { rows: 2, cols: 2, ..Default::default() };
+        s.resize(4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.at(1, 1), 3);
+    }
+}

@@ -1,0 +1,36 @@
+//! The event data model of the paper's motivating example (§III).
+//!
+//! A 2D grid of sensors of several types measures particle energy
+//! deposits; raw counts are calibrated to energies with per-sensor
+//! constants; particles are reconstructed from the 5×5 neighbourhood of
+//! sufficiently significant local maxima, tracking per-sensor-type
+//! properties and the jagged list of contributing sensors.
+//!
+//! * [`sensor`] / [`particle`] — the Marionette collections (via
+//!   `marionette_collection!`), including the paper's *no-property*
+//!   interface extensions (`calibrate_energy`, `get_noise`).
+//! * [`handwritten`] — the handwritten AoS and SoA baselines the paper
+//!   benchmarks against (single source of truth for "what a programmer
+//!   would have written by hand").
+//! * [`generator`] — synthetic event generation (Gaussian deposits over a
+//!   noisy grid; the Rust twin of `python/compile/aot.py:generate_event`).
+//! * [`calib`] / [`reco`] — the host algorithms (Figure 1's sensor stage
+//!   and Figure 2's particle stage), each implemented over Marionette
+//!   collections *and* over the handwritten baselines with identical
+//!   semantics, matching `python/compile/kernels/ref.py`.
+//! * [`golden`] — loads the Python-generated golden vectors for
+//!   cross-language equivalence tests.
+
+pub mod calib;
+pub mod constants;
+pub mod generator;
+pub mod golden;
+pub mod handwritten;
+pub mod particle;
+pub mod reco;
+pub mod sensor;
+
+pub use constants::*;
+pub use generator::{EventConfig, EventGenerator, RawEvent};
+pub use particle::{Particle, ParticleCollection, ParticleProps, ParticleRecord};
+pub use sensor::{Sensor, SensorCollection, SensorColumns, SensorProps, SensorRecord};

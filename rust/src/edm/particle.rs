@@ -1,0 +1,152 @@
+//! The `Particle` collection (paper listing 2/4), declared in Marionette.
+//!
+//! Demonstrates every remaining property kind of the paper: array
+//! properties tracked per sensor type (`significance`, `e_contribution`,
+//! `noisy_count` — stored as separate per-type arrays in SoA layouts,
+//! inline `[T; N]` in AoS records), and the jagged `sensors` vector (the
+//! dynamic list of contributing sensor indices, backed by a prefix sum
+//! under its own size tag).
+
+use crate::marionette::layout::Layout;
+use crate::marionette_collection;
+
+use super::constants::NUM_SENSOR_TYPES;
+
+marionette_collection! {
+    /// Reconstructed particles of one event.
+    pub collection ParticleCollection, object Particle, record ParticleRecord,
+        columns ParticleColumns, refs ParticleRef / ParticleMut,
+        props ParticleProps, schema "particle" {
+        per_item energy / set_energy / ENERGY: f32;
+        per_item x / set_x / X: f32;
+        per_item y / set_y / Y: f32;
+        per_item x_variance / set_x_variance / X_VARIANCE: f32;
+        per_item y_variance / set_y_variance / Y_VARIANCE: f32;
+        per_item origin / set_origin / ORIGIN: u64;
+        array significance / set_significance / SIGNIFICANCE: [f32; NUM_SENSOR_TYPES];
+        array e_contribution / set_e_contribution / E_CONTRIBUTION: [f32; NUM_SENSOR_TYPES];
+        array noisy_count / set_noisy_count / NOISY_COUNT: [u8; NUM_SENSOR_TYPES];
+        jagged sensors / set_sensors / SENSORS: u64, prefix u32;
+        global event_id / set_event_id / EVENT_ID: u64;
+    }
+}
+
+impl<L: Layout> ParticleCollection<L> {
+    /// Total energy of all particles (used by physics sanity checks).
+    pub fn total_energy(&self) -> f64 {
+        (0..self.len()).map(|i| self.energy(i) as f64).sum()
+    }
+
+    /// Index of the most energetic particle, if any.
+    pub fn leading(&self) -> Option<usize> {
+        (0..self.len()).max_by(|&a, &b| {
+            self.energy(a)
+                .partial_cmp(&self.energy(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marionette::layout::{AoS, SoAVec};
+
+    fn sample() -> Particle {
+        Particle {
+            energy: 120.0,
+            x: 3.5,
+            y: 7.2,
+            x_variance: 0.4,
+            y_variance: 0.6,
+            origin: 42,
+            significance: [5.0, 2.0, 0.5],
+            e_contribution: [80.0, 30.0, 10.0],
+            noisy_count: [0, 1, 0],
+            sensors: vec![41, 42, 43, 52],
+        }
+    }
+
+    #[test]
+    fn push_and_read_back() {
+        let mut c = ParticleCollection::<SoAVec>::new();
+        c.set_event_id(1);
+        let i = c.push(&sample());
+        assert_eq!(c.energy(i), 120.0);
+        assert_eq!(c.significance(i, 0), 5.0);
+        assert_eq!(c.noisy_count(i, 1), 1);
+        assert_eq!(c.sensors(i).to_vec(), vec![41, 42, 43, 52]);
+        assert_eq!(c.get_owned(i), sample());
+    }
+
+    #[test]
+    fn jagged_sensors_across_particles() {
+        let mut c = ParticleCollection::<AoS>::new();
+        let mut p = sample();
+        c.push(&p);
+        p.sensors = vec![7];
+        p.energy = 50.0;
+        c.push(&p);
+        p.sensors = vec![];
+        c.push(&p);
+        assert_eq!(c.sensors(0).len(), 4);
+        assert_eq!(c.sensors(1).to_vec(), vec![7]);
+        assert_eq!(c.sensors(2).len(), 0);
+        // Flat view spans all particles (paper: single continuous vector).
+        let flat = c
+            .raw()
+            .jagged_flat::<u64>(ParticleProps::SENSORS.values, ParticleProps::SENSORS.j);
+        assert_eq!(flat.len(), 5);
+        assert_eq!(flat.to_vec(), vec![41, 42, 43, 52, 7]);
+    }
+
+    #[test]
+    fn set_sensors_shifts_later_particles() {
+        let mut c = ParticleCollection::<SoAVec>::new();
+        c.push(&sample());
+        c.push(&sample());
+        c.set_sensors(0, &[1, 2]);
+        assert_eq!(c.sensors(0).to_vec(), vec![1, 2]);
+        assert_eq!(c.sensors(1).to_vec(), vec![41, 42, 43, 52]);
+    }
+
+    #[test]
+    fn array_planes_in_columns() {
+        // Array properties appear lane-major in the column view.
+        let mut c = ParticleCollection::<SoAVec>::new();
+        c.push(&sample());
+        c.push(&sample());
+        let cols = c.columns_mut().unwrap();
+        assert_eq!(cols.significance[0], &[5.0, 5.0]);
+        assert_eq!(cols.significance[2], &[0.5, 0.5]);
+        cols.e_contribution[1][1] = 99.0;
+        assert_eq!(c.e_contribution(1, 1), 99.0);
+    }
+
+    #[test]
+    fn bulk_jagged_rebuild() {
+        let mut c = ParticleCollection::<SoAVec>::new();
+        c.resize(4);
+        c.raw_mut().set_jagged_lengths(0, &[2, 0, 3, 1]);
+        assert_eq!(c.sensors(0).len(), 2);
+        assert_eq!(c.sensors(1).len(), 0);
+        assert_eq!(c.sensors(2).len(), 3);
+        assert_eq!(c.raw().values_len(0), 6);
+        // Values are zeroed and writable through the flat index space.
+        let vm = ParticleProps::SENSORS.values;
+        c.raw_mut().set_value::<u64>(vm, 5, 42);
+        assert_eq!(c.sensors(3).to_vec(), vec![42]);
+    }
+
+    #[test]
+    fn helpers() {
+        let mut c = ParticleCollection::<SoAVec>::new();
+        assert!(c.leading().is_none());
+        let mut p = sample();
+        c.push(&p);
+        p.energy = 300.0;
+        c.push(&p);
+        assert_eq!(c.leading(), Some(1));
+        assert!((c.total_energy() - 420.0).abs() < 1e-9);
+    }
+}

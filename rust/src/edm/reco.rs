@@ -1,0 +1,690 @@
+//! Host particle reconstruction (Figure 2's compute stage).
+//!
+//! Physics definition = `ref.py:particle_stage_ref`: a sensor seeds a
+//! particle when its significance exceeds [`SEED_SIGNIFICANCE`] and its
+//! energy attains the 5×5 window maximum (window clipped at the grid
+//! border, matching the reference's −∞ padding); particle properties are
+//! window sums; contributing sensors are those with significance above
+//! [`CONTRIB_SIGNIFICANCE`], collected row-major.
+//!
+//! The algorithm is written once over the [`SensorGridView`] trait and
+//! monomorphised for the Marionette collection and both handwritten
+//! baselines — the paper's setup, where the same algorithmic code runs
+//! against either data structure. [`particles_from_planes`] is the
+//! device-path twin: it gathers the same quantities from the AOT
+//! executable's seed mask + window-sum planes.
+
+use crate::marionette::collection::InfoOf;
+use crate::marionette::layout::Layout;
+
+use super::constants::*;
+use super::handwritten::{
+    HwParticle, HwParticlesAoS, HwParticlesSoA, HwSensorsAoS, HwSensorsSoA,
+};
+use super::particle::{Particle, ParticleCollection};
+use super::sensor::SensorCollection;
+
+/// Read-only grid view: what reconstruction needs from a sensor store.
+pub trait SensorGridView {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn energy_at(&self, i: usize) -> f32;
+    fn sig_at(&self, i: usize) -> f32;
+    fn type_at(&self, i: usize) -> i32;
+    fn noisy_at(&self, i: usize) -> bool;
+    fn event_id(&self) -> u64;
+}
+
+impl<L: Layout> SensorGridView for SensorCollection<L> {
+    fn rows(&self) -> usize {
+        SensorCollection::rows(self) as usize
+    }
+    fn cols(&self) -> usize {
+        SensorCollection::cols(self) as usize
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.energy(i)
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.sig(i)
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.type_id(i)
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.noisy(i) != 0
+    }
+    fn event_id(&self) -> u64 {
+        SensorCollection::event_id(self)
+    }
+}
+
+impl SensorGridView for HwSensorsAoS {
+    fn rows(&self) -> usize {
+        self.rows as usize
+    }
+    fn cols(&self) -> usize {
+        self.cols as usize
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.data[i].energy
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.data[i].sig
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.data[i].type_id
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.data[i].noisy != 0
+    }
+    fn event_id(&self) -> u64 {
+        self.event_id
+    }
+}
+
+impl SensorGridView for HwSensorsSoA {
+    fn rows(&self) -> usize {
+        self.rows as usize
+    }
+    fn cols(&self) -> usize {
+        self.cols as usize
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.energy[i]
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.sig[i]
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.type_id[i]
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.noisy[i] != 0
+    }
+    fn event_id(&self) -> u64 {
+        self.event_id
+    }
+}
+
+#[inline]
+fn window(r: usize, n: usize) -> (usize, usize) {
+    (r.saturating_sub(HALO), (r + HALO + 1).min(n))
+}
+
+/// Is cell `(r, c)` a seed? (significance cut + window max of energy)
+#[inline]
+fn is_seed<G: SensorGridView>(g: &G, r: usize, c: usize) -> bool {
+    let cols = g.cols();
+    let i = r * cols + c;
+    if g.sig_at(i) <= SEED_SIGNIFICANCE {
+        return false;
+    }
+    let e = g.energy_at(i);
+    let (rlo, rhi) = window(r, g.rows());
+    let (clo, chi) = window(c, cols);
+    for rr in rlo..rhi {
+        for cc in clo..chi {
+            if g.energy_at(rr * cols + cc) > e {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Accumulate one particle from the window around seed `(r, c)`.
+fn build_particle<G: SensorGridView>(g: &G, r: usize, c: usize) -> HwParticle {
+    let cols = g.cols();
+    let (rlo, rhi) = window(r, g.rows());
+    let (clo, chi) = window(c, cols);
+    let (mut e_sum, mut ex, mut ey, mut exx, mut eyy) = (0f32, 0f32, 0f32, 0f32, 0f32);
+    let mut e_t = [0f32; NUM_SENSOR_TYPES];
+    let mut sig_t = [0f32; NUM_SENSOR_TYPES];
+    let mut noisy_t = [0u8; NUM_SENSOR_TYPES];
+    let mut sensors = Vec::new();
+    for rr in rlo..rhi {
+        for cc in clo..chi {
+            let i = rr * cols + cc;
+            let e = g.energy_at(i);
+            let sig = g.sig_at(i);
+            let t = g.type_at(i) as usize;
+            let (x, y) = (cc as f32, rr as f32);
+            e_sum += e;
+            ex += e * x;
+            ey += e * y;
+            exx += e * x * x;
+            eyy += e * y * y;
+            e_t[t] += e;
+            sig_t[t] += sig;
+            if g.noisy_at(i) {
+                noisy_t[t] += 1;
+            }
+            if sig > CONTRIB_SIGNIFICANCE {
+                sensors.push(i as u64);
+            }
+        }
+    }
+    let x_mean = ex / e_sum;
+    let y_mean = ey / e_sum;
+    HwParticle {
+        energy: e_sum,
+        x: x_mean,
+        y: y_mean,
+        x_variance: exx / e_sum - x_mean * x_mean,
+        y_variance: eyy / e_sum - y_mean * y_mean,
+        origin: (r * cols + c) as u64,
+        significance: sig_t,
+        e_contribution: e_t,
+        noisy_count: noisy_t,
+        sensors,
+    }
+}
+
+/// Reconstruct all particles of a calibrated grid (row-major seed order).
+///
+/// For Marionette collections prefer [`reconstruct_collection`], which
+/// routes the scan through the collection's dense record/column views
+/// (paper listing 3's collection-level accessors) instead of per-element
+/// accessors — same results, handwritten-equal speed (EXPERIMENTS §Perf).
+pub fn reconstruct<G: SensorGridView>(g: &G) -> Vec<HwParticle> {
+    let (rows, cols) = (g.rows(), g.cols());
+    let mut out = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if is_seed(g, r, c) {
+                out.push(build_particle(g, r, c));
+            }
+        }
+    }
+    out
+}
+
+/// Dense-slice grid view (SoA layouts via plane slices).
+struct SliceGrid<'a> {
+    rows: usize,
+    cols: usize,
+    event_id: u64,
+    energy: &'a [f32],
+    sig: &'a [f32],
+    types: &'a [i32],
+    noisy: &'a [u8],
+}
+
+impl SensorGridView for SliceGrid<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.energy[i]
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.sig[i]
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.types[i]
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.noisy[i] != 0
+    }
+    fn event_id(&self) -> u64 {
+        self.event_id
+    }
+}
+
+/// Dense-record grid view (AoS layouts via the generated record slice).
+struct RecGrid<'a> {
+    rows: usize,
+    cols: usize,
+    event_id: u64,
+    recs: &'a [super::sensor::SensorRecord],
+}
+
+impl SensorGridView for RecGrid<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.recs[i].energy
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.recs[i].sig
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.recs[i].type_id
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.recs[i].noisy != 0
+    }
+    fn event_id(&self) -> u64 {
+        self.event_id
+    }
+}
+
+/// Reconstruct a Marionette sensor collection through its densest
+/// available view: records (AoS), plane slices (SoA family), or the
+/// per-element accessors (irregular layouts).
+pub fn reconstruct_collection<L: Layout>(s: &SensorCollection<L>) -> Vec<HwParticle> {
+    use super::sensor::SensorProps as P;
+    let (rows, cols) = (SensorGridView::rows(s), SensorGridView::cols(s));
+    if let Some(recs) = s.records() {
+        return reconstruct(&RecGrid { rows, cols, event_id: s.event_id(), recs });
+    }
+    let raw = s.raw();
+    if let (Some(energy), Some(sig), Some(types), Some(noisy)) = (
+        raw.field_slice::<f32>(P::ENERGY),
+        raw.field_slice::<f32>(P::SIG),
+        raw.field_slice::<i32>(P::TYPE_ID),
+        raw.field_slice::<u8>(P::NOISY),
+    ) {
+        return reconstruct(&SliceGrid {
+            rows,
+            cols,
+            event_id: s.event_id(),
+            energy,
+            sig,
+            types,
+            noisy,
+        });
+    }
+    reconstruct(s)
+}
+
+/// Fill reconstruction output into a Marionette particle collection.
+///
+/// Bulk path: size once, write the scalar payload through the dense
+/// record or column views, then append the jagged sensor lists — the
+/// collection-interface analogue of a handwritten fill loop. Falls back
+/// to object pushes on irregular layouts.
+pub fn into_collection<L: Layout>(
+    event_id: u64,
+    particles: &[HwParticle],
+) -> ParticleCollection<L>
+where
+    InfoOf<L>: Default,
+{
+    let mut col = ParticleCollection::<L>::new();
+    col.set_event_id(event_id);
+    col.resize(particles.len());
+
+    let bulk_scalars = if let Some(recs) = col.records_mut() {
+        for (r, p) in recs.iter_mut().zip(particles) {
+            r.energy = p.energy;
+            r.x = p.x;
+            r.y = p.y;
+            r.x_variance = p.x_variance;
+            r.y_variance = p.y_variance;
+            r.origin = p.origin;
+            r.significance = p.significance;
+            r.e_contribution = p.e_contribution;
+            r.noisy_count = p.noisy_count;
+        }
+        true
+    } else if let Some(c) = col.columns_mut() {
+        for (i, p) in particles.iter().enumerate() {
+            c.energy[i] = p.energy;
+            c.x[i] = p.x;
+            c.y[i] = p.y;
+            c.x_variance[i] = p.x_variance;
+            c.y_variance[i] = p.y_variance;
+            c.origin[i] = p.origin;
+            for t in 0..NUM_SENSOR_TYPES {
+                c.significance[t][i] = p.significance[t];
+                c.e_contribution[t][i] = p.e_contribution[t];
+                c.noisy_count[t][i] = p.noisy_count[t];
+            }
+        }
+        true
+    } else {
+        false
+    };
+
+    if !bulk_scalars {
+        col.resize(0);
+        for p in particles {
+            col.push(&Particle {
+                energy: p.energy,
+                x: p.x,
+                y: p.y,
+                x_variance: p.x_variance,
+                y_variance: p.y_variance,
+                origin: p.origin,
+                significance: p.significance,
+                e_contribution: p.e_contribution,
+                noisy_count: p.noisy_count,
+                sensors: p.sensors.clone(),
+            });
+        }
+        return col;
+    }
+
+    // Jagged sensor lists: rebuild the prefix once, then write values.
+    let lens: Vec<usize> = particles.iter().map(|p| p.sensors.len()).collect();
+    let j = super::particle::ParticleProps::SENSORS.j;
+    let vmeta = super::particle::ParticleProps::SENSORS.values;
+    col.raw_mut().set_jagged_lengths(j, &lens);
+    let mut v = 0usize;
+    for p in particles {
+        for &s in &p.sensors {
+            col.raw_mut().set_value::<u64>(vmeta, v, s);
+            v += 1;
+        }
+    }
+    col
+}
+
+/// Reconstruct straight into a Marionette particle collection (no
+/// intermediate `Vec<HwParticle>`; the device path and benches use this).
+pub fn reconstruct_into_collection<L: Layout>(
+    s: &SensorCollection<L>,
+) -> ParticleCollection<L>
+where
+    InfoOf<L>: Default,
+{
+    // Reuse the view-selection of `reconstruct_collection`; pushes are
+    // O(#particles), far off the critical path of the grid scan.
+    let particles = reconstruct_collection(s);
+    into_collection(SensorGridView::event_id(s), &particles)
+}
+
+/// Final step of Figure 2: fill the pre-existing handwritten AoS from a
+/// Marionette particle collection ("the original data structures").
+/// When the collection is AoS-dense, the scalar payload is read through
+/// the generated record view (one pass, no per-field accessor calls).
+pub fn fill_back_aos<L: Layout>(col: &ParticleCollection<L>) -> HwParticlesAoS {
+    let mut out = HwParticlesAoS { event_id: col.event_id(), data: Vec::with_capacity(col.len()) };
+    if let Some(recs) = col.records() {
+        for (i, r) in recs.iter().enumerate() {
+            out.data.push(HwParticle {
+                energy: r.energy,
+                x: r.x,
+                y: r.y,
+                x_variance: r.x_variance,
+                y_variance: r.y_variance,
+                origin: r.origin,
+                significance: r.significance,
+                e_contribution: r.e_contribution,
+                noisy_count: r.noisy_count,
+                sensors: col.sensors(i).to_vec(),
+            });
+        }
+        return out;
+    }
+    for i in 0..col.len() {
+        let mut sig = [0f32; NUM_SENSOR_TYPES];
+        let mut e_c = [0f32; NUM_SENSOR_TYPES];
+        let mut nc = [0u8; NUM_SENSOR_TYPES];
+        for t in 0..NUM_SENSOR_TYPES {
+            sig[t] = col.significance(i, t);
+            e_c[t] = col.e_contribution(i, t);
+            nc[t] = col.noisy_count(i, t);
+        }
+        out.data.push(HwParticle {
+            energy: col.energy(i),
+            x: col.x(i),
+            y: col.y(i),
+            x_variance: col.x_variance(i),
+            y_variance: col.y_variance(i),
+            origin: col.origin(i),
+            significance: sig,
+            e_contribution: e_c,
+            noisy_count: nc,
+            sensors: col.sensors(i).to_vec(),
+        });
+    }
+    out
+}
+
+/// Fill the original AoS from the handwritten SoA particle structure
+/// (the conversion step of the handwritten CPU-SoA series in Figure 2).
+pub fn hw_soa_fill_back_aos(p: &HwParticlesSoA) -> HwParticlesAoS {
+    let mut out = HwParticlesAoS { event_id: p.event_id, data: Vec::with_capacity(p.len()) };
+    for i in 0..p.len() {
+        let mut sig = [0f32; NUM_SENSOR_TYPES];
+        let mut e_c = [0f32; NUM_SENSOR_TYPES];
+        let mut nc = [0u8; NUM_SENSOR_TYPES];
+        for t in 0..NUM_SENSOR_TYPES {
+            sig[t] = p.significance[t][i];
+            e_c[t] = p.e_contribution[t][i];
+            nc[t] = p.noisy_count[t][i];
+        }
+        out.data.push(HwParticle {
+            energy: p.energy[i],
+            x: p.x[i],
+            y: p.y[i],
+            x_variance: p.x_variance[i],
+            y_variance: p.y_variance[i],
+            origin: p.origin[i],
+            significance: sig,
+            e_contribution: e_c,
+            noisy_count: nc,
+            sensors: p.sensors(i).to_vec(),
+        });
+    }
+    out
+}
+
+/// Handwritten-SoA reconstruction output (CPU-SoA series of Figure 2).
+pub fn reconstruct_to_hw_soa(g: &HwSensorsSoA) -> HwParticlesSoA {
+    let mut out = HwParticlesSoA::new();
+    out.event_id = g.event_id;
+    for p in reconstruct(g) {
+        out.push(&p);
+    }
+    out
+}
+
+/// Device-path gather: build the particle collection from the AOT
+/// executable's outputs (`seeds` mask, `sums` = `[NUM_PLANES][rows*cols]`
+/// window-sum planes) plus the host-resident significance plane for the
+/// jagged contributor lists.
+pub fn particles_from_planes<L: Layout>(
+    rows: usize,
+    cols: usize,
+    event_id: u64,
+    seeds: &[i32],
+    sums: &[f32],
+    sig: &[f32],
+) -> ParticleCollection<L>
+where
+    InfoOf<L>: Default,
+{
+    let n = rows * cols;
+    assert_eq!(seeds.len(), n, "seed mask size");
+    assert_eq!(sums.len(), NUM_PLANES * n, "sums planes size");
+    assert_eq!(sig.len(), n, "sig plane size");
+    let plane = |p: usize, i: usize| sums[p * n + i];
+
+    let mut col = ParticleCollection::<L>::new();
+    col.set_event_id(event_id);
+    let mut sensors = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            if seeds[i] == 0 {
+                continue;
+            }
+            let e_sum = plane(PLANE_E, i);
+            let x_mean = plane(PLANE_EX, i) / e_sum;
+            let y_mean = plane(PLANE_EY, i) / e_sum;
+
+            sensors.clear();
+            let (rlo, rhi) = window(r, rows);
+            let (clo, chi) = window(c, cols);
+            for rr in rlo..rhi {
+                for cc in clo..chi {
+                    let j = rr * cols + cc;
+                    if sig[j] > CONTRIB_SIGNIFICANCE {
+                        sensors.push(j as u64);
+                    }
+                }
+            }
+            debug_assert_eq!(
+                sensors.len(),
+                plane(PLANE_CONTRIB, i).round() as usize,
+                "host contributor scan disagrees with device plane at {i}"
+            );
+
+            let mut p = Particle {
+                energy: e_sum,
+                x: x_mean,
+                y: y_mean,
+                x_variance: plane(PLANE_EXX, i) / e_sum - x_mean * x_mean,
+                y_variance: plane(PLANE_EYY, i) / e_sum - y_mean * y_mean,
+                origin: i as u64,
+                significance: [0.0; NUM_SENSOR_TYPES],
+                e_contribution: [0.0; NUM_SENSOR_TYPES],
+                noisy_count: [0; NUM_SENSOR_TYPES],
+                sensors: sensors.clone(),
+            };
+            for t in 0..NUM_SENSOR_TYPES {
+                p.significance[t] = plane(PLANE_SIG_TYPE + t, i);
+                p.e_contribution[t] = plane(PLANE_E_TYPE + t, i);
+                p.noisy_count[t] = plane(PLANE_NOISY_TYPE + t, i).round() as u8;
+            }
+            col.push(&p);
+        }
+    }
+    col
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::calib;
+    use super::super::generator::{EventConfig, EventGenerator};
+    use super::*;
+    use crate::marionette::layout::{AoS, SoAVec};
+
+    fn calibrated_event(seed: u64) -> (SensorCollection<SoAVec>, HwSensorsAoS, HwSensorsSoA) {
+        let ev = EventGenerator::new(EventConfig::grid(48, 48, 5), seed).generate();
+        let mut col = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut col);
+        let mut aos = Default::default();
+        ev.fill_hw_aos(&mut aos);
+        calib::calibrate_hw_aos(&mut aos);
+        let mut soa = Default::default();
+        ev.fill_hw_soa(&mut soa);
+        calib::calibrate_hw_soa(&mut soa);
+        (col, aos, soa)
+    }
+
+    #[test]
+    fn all_views_reconstruct_identically() {
+        let (col, aos, soa) = calibrated_event(21);
+        let a = reconstruct(&col);
+        let b = reconstruct(&aos);
+        let c = reconstruct(&soa);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert!(!a.is_empty(), "expected particles from 5 deposits");
+    }
+
+    #[test]
+    fn finds_injected_deposits() {
+        let ev = EventGenerator::new(EventConfig::grid(64, 64, 4), 33).generate();
+        let mut col = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut col);
+        let particles = reconstruct(&col);
+        // Every isolated truth deposit should have a particle within 2
+        // cells (deposits can merge, so require >= half found).
+        let mut found = 0;
+        for &(r, c) in &ev.truth {
+            if particles.iter().any(|p| {
+                (p.y - r as f32).abs() <= 2.0 && (p.x - c as f32).abs() <= 2.0
+            }) {
+                found += 1;
+            }
+        }
+        assert!(
+            found * 2 >= ev.truth.len(),
+            "found {found}/{} deposits",
+            ev.truth.len()
+        );
+    }
+
+    #[test]
+    fn particle_physics_sane() {
+        let (col, _, _) = calibrated_event(5);
+        for p in reconstruct(&col) {
+            assert!(p.energy > 0.0);
+            assert!(p.x >= 0.0 && p.x < 48.0);
+            assert!(p.y >= 0.0 && p.y < 48.0);
+            // Per-type energies partition the window total.
+            let sum: f32 = p.e_contribution.iter().sum();
+            assert!((sum - p.energy).abs() <= 1e-3 * p.energy.abs().max(1.0));
+            // Every contributing sensor is inside the window of origin.
+            let (r, c) = ((p.origin / 48) as i64, (p.origin % 48) as i64);
+            for &s in &p.sensors {
+                let (sr, sc) = ((s / 48) as i64, (s % 48) as i64);
+                assert!((sr - r).abs() <= 2 && (sc - c).abs() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn collection_roundtrip_and_fill_back() {
+        let (col, _, _) = calibrated_event(8);
+        let ps = reconstruct(&col);
+        let pc = into_collection::<AoS>(col.event_id(), &ps);
+        assert_eq!(pc.len(), ps.len());
+        let back = fill_back_aos(&pc);
+        assert_eq!(back.data, ps);
+        assert_eq!(back.event_id, col.event_id());
+    }
+
+    #[test]
+    fn empty_grid_no_particles() {
+        let mut s = SensorCollection::<SoAVec>::new();
+        s.set_rows(8);
+        s.set_cols(8);
+        s.resize(64);
+        assert!(reconstruct(&s).is_empty());
+    }
+
+    #[test]
+    fn border_seeds_use_clipped_windows() {
+        // A single strong deposit in the corner: window must clip.
+        let mut s = SensorCollection::<SoAVec>::new();
+        s.set_rows(8);
+        s.set_cols(8);
+        s.resize(64);
+        for i in 0..64 {
+            s.set_noise_a(i, 1.0);
+            s.set_param_a(i, 1.0);
+        }
+        s.set_counts(0, 1000);
+        calib::calibrate_collection(&mut s);
+        let ps = reconstruct(&s);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].origin, 0);
+        assert_eq!(ps[0].energy, 1000.0);
+        // Window is 3x3 at the corner: 9 cells max.
+        assert!(ps[0].sensors.len() <= 9);
+    }
+}

@@ -1,0 +1,220 @@
+//! The `Sensor` collection (paper listing 1/4), declared in Marionette.
+//!
+//! Per-item raw data (`type_id`, `counts`), computed planes (`energy`,
+//! `noise`, `sig`), the calibration sub-group (paper:
+//! `calibration_data`), grid geometry globals, and the *no-property*
+//! interface extension (`calibrate_energy` / `get_noise`, implemented as
+//! an ordinary inherent impl on the generated collection, exactly as the
+//! paper's `ObjectFunctions`/`CollectionFunctions` splice functions into
+//! the final type).
+
+use crate::marionette::layout::Layout;
+use crate::marionette_collection;
+
+use super::constants::NOISE_FLOOR;
+
+marionette_collection! {
+    /// A 2D grid of sensors stored row-major (`i = r * cols + c`).
+    pub collection SensorCollection, object Sensor, record SensorRecord,
+        columns SensorColumns, refs SensorRef / SensorMut,
+        props SensorProps, schema "sensor" {
+        per_item type_id / set_type_id / TYPE_ID: i32;
+        per_item counts / set_counts / COUNTS: i32;
+        per_item energy / set_energy / ENERGY: f32;
+        per_item noise / set_noise / NOISE: f32;
+        per_item sig / set_sig / SIG: f32;
+        group calibration / CalibrationView / CalibrationViewMut {
+            per_item noisy / set_noisy / NOISY: u8;
+            per_item param_a / set_param_a / PARAM_A: f32;
+            per_item param_b / set_param_b / PARAM_B: f32;
+            per_item noise_a / set_noise_a / NOISE_A: f32;
+            per_item noise_b / set_noise_b / NOISE_B: f32;
+        }
+        global rows / set_rows / ROWS: u32;
+        global cols / set_cols / COLS: u32;
+        global event_id / set_event_id / EVENT_ID: u64;
+    }
+}
+
+/// The paper's *no-property* interface extension: arbitrary functions
+/// spliced into the collection interface without associated storage.
+impl<L: Layout> SensorCollection<L> {
+    /// Calibrate one sensor in place (paper: `Sensor::calibrate_energy`).
+    /// Matches `python/compile/kernels/ref.py:calibrate_ref` exactly.
+    #[inline]
+    pub fn calibrate_energy(&mut self, i: usize) {
+        let e = if self.noisy(i) != 0 {
+            0.0
+        } else {
+            self.param_a(i) * self.counts(i) as f32 + self.param_b(i)
+        };
+        let noise = (self.noise_a(i) + self.noise_b(i) * e.max(0.0).sqrt()).max(NOISE_FLOOR);
+        self.set_energy(i, e);
+        self.set_noise(i, noise);
+        self.set_sig(i, e / noise);
+    }
+
+    /// Noise estimate for sensor `i` (paper: `Sensor::get_noise`),
+    /// computed from the calibration group without touching stored state.
+    #[inline]
+    pub fn get_noise(&self, i: usize) -> f32 {
+        let e = if self.noisy(i) != 0 {
+            0.0
+        } else {
+            self.param_a(i) * self.counts(i) as f32 + self.param_b(i)
+        };
+        (self.noise_a(i) + self.noise_b(i) * e.max(0.0).sqrt()).max(NOISE_FLOOR)
+    }
+
+    /// Row-major index of the sensor at `(r, c)`.
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> usize {
+        r * self.cols() as usize + c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marionette::layout::{AoS, AoSoA, SoABlob, SoAVec};
+
+    fn build<L: Layout>() -> SensorCollection<L>
+    where
+        crate::marionette::collection::InfoOf<L>: Default,
+    {
+        let mut s = SensorCollection::<L>::new();
+        s.set_rows(2);
+        s.set_cols(3);
+        s.set_event_id(99);
+        s.resize(6);
+        for i in 0..6 {
+            s.set_type_id(i, (i % 3) as i32);
+            s.set_counts(i, 100 * (i as i32 + 1));
+            s.set_param_a(i, 0.5);
+            s.set_param_b(i, 1.0);
+            s.set_noise_a(i, 2.0);
+            s.set_noise_b(i, 0.1);
+            s.set_noisy(i, u8::from(i == 4));
+        }
+        s
+    }
+
+    fn check_calibration<L: Layout>()
+    where
+        crate::marionette::collection::InfoOf<L>: Default,
+    {
+        let mut s = build::<L>();
+        for i in 0..s.len() {
+            s.calibrate_energy(i);
+        }
+        // i=0: e = 0.5*100 + 1 = 51; noise = 2 + 0.1*sqrt(51)
+        let e = s.energy(0);
+        assert_eq!(e, 51.0);
+        let noise = 2.0 + 0.1 * 51f32.sqrt();
+        assert!((s.noise(0) - noise).abs() < 1e-6);
+        assert!((s.sig(0) - e / noise).abs() < 1e-6);
+        // noisy sensor: zero energy, noise = noise_a.
+        assert_eq!(s.energy(4), 0.0);
+        assert_eq!(s.noise(4), 2.0);
+        assert_eq!(s.sig(4), 0.0);
+        // get_noise agrees with stored noise after calibration.
+        for i in 0..s.len() {
+            assert_eq!(s.get_noise(i), s.noise(i));
+        }
+    }
+
+    #[test]
+    fn calibration_all_layouts() {
+        check_calibration::<SoAVec>();
+        check_calibration::<AoS>();
+        check_calibration::<SoABlob>();
+        check_calibration::<AoSoA<8>>();
+    }
+
+    #[test]
+    fn subgroup_proxies() {
+        let s = build::<SoAVec>();
+        let obj = s.obj(4);
+        assert_eq!(obj.calibration().noisy(), 1);
+        assert_eq!(obj.calibration().param_a(), 0.5);
+        let mut s = build::<AoS>();
+        let mut m = s.obj_mut(2);
+        m.calibration().set_param_b(7.0);
+        assert_eq!(s.param_b(2), 7.0);
+    }
+
+    #[test]
+    fn owned_object_roundtrip() {
+        let s = build::<SoAVec>();
+        let o = s.get_owned(3);
+        assert_eq!(o.type_id, 0);
+        assert_eq!(o.counts, 400);
+        let mut t = SensorCollection::<AoS>::new();
+        t.set_cols(3);
+        let i = t.push(&o);
+        assert_eq!(t.counts(i), 400);
+        assert_eq!(t.get_owned(i), o);
+    }
+
+    #[test]
+    fn grid_indexing() {
+        let s = build::<SoAVec>();
+        assert_eq!(s.at(1, 2), 5);
+        assert_eq!(s.at(0, 0), 0);
+    }
+
+    #[test]
+    fn record_view_is_handwritten_aos() {
+        let mut s = build::<AoS>();
+        // Dense record view exists for AoS and matches accessors.
+        assert_eq!(
+            std::mem::size_of::<SensorRecord>(),
+            SensorProps::FIRST_ITEM_META.record_size as usize
+        );
+        {
+            let recs = s.records().expect("AoS must be record-dense");
+            assert_eq!(recs.len(), 6);
+            assert_eq!(recs[1].counts, 200);
+            assert_eq!(recs[4].noisy, 1);
+        }
+        // Writes through the record view land in the collection.
+        s.records_mut().unwrap()[2].energy = 123.0;
+        assert_eq!(s.energy(2), 123.0);
+        // SoA layouts have no record view, but do have columns.
+        let mut soa = build::<SoAVec>();
+        assert!(soa.records().is_none());
+        let c = soa.columns_mut().expect("SoAVec must be column-dense");
+        assert_eq!(c.counts, &[100, 200, 300, 400, 500, 600]);
+        c.energy[5] = 9.0;
+        assert_eq!(soa.energy(5), 9.0);
+        // AoSoA has neither dense view.
+        let mut blocked = build::<AoSoA<8>>();
+        assert!(blocked.records().is_none());
+        assert!(blocked.columns_mut().is_none());
+    }
+
+    #[test]
+    fn soablob_columns_dense() {
+        let mut s = build::<SoABlob>();
+        let c = s.columns_mut().expect("SoABlob is column-dense");
+        assert_eq!(c.param_a.len(), 6);
+        c.param_a[0] = 7.5;
+        assert_eq!(s.param_a(0), 7.5);
+    }
+
+    #[test]
+    fn layout_transfer_preserves_everything() {
+        let mut src = build::<SoAVec>();
+        for i in 0..src.len() {
+            src.calibrate_energy(i);
+        }
+        let mut dst = SensorCollection::<AoSoA<4>>::new();
+        dst.transfer_from(&src);
+        assert_eq!(dst.rows(), 2);
+        assert_eq!(dst.event_id(), 99);
+        for i in 0..src.len() {
+            assert_eq!(src.energy(i), dst.energy(i));
+            assert_eq!(src.noisy(i), dst.noisy(i));
+        }
+    }
+}

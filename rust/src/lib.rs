@@ -1,0 +1,41 @@
+//! # Marionette-RS
+//!
+//! A reproduction of *"Marionette: Data Structure Description and Management
+//! for Heterogeneous Computing"* (CS.DC 2025) as a three-layer
+//! Rust + JAX/Pallas + XLA/PJRT system.
+//!
+//! The paper's contribution — describing a data structure's *interface* once
+//! and materialising it under interchangeable memory *layouts* and memory
+//! *contexts*, with efficient transfers between them — lives in
+//! [`marionette`]. The original C++17 library does this with template
+//! metaprogramming; here the same design is expressed with traits, const
+//! evaluation and declarative macros, with identical zero-runtime-cost
+//! goals (validated by `benches/zero_cost.rs`).
+//!
+//! The crate layers:
+//!
+//! * [`marionette`] — the core library: property schemas, layouts
+//!   (SoA-vec, AoS blob, SoA blob, AoSoA), memory contexts, transfers,
+//!   jagged vectors, and the `marionette_collection!` macro.
+//! * [`edm`] — the paper's motivating event-data-model (§III): `Sensor` /
+//!   `Particle` collections, handwritten AoS/SoA baselines, the synthetic
+//!   event generator, and the host calibration + reconstruction algorithms.
+//! * [`runtime`] — the PJRT bridge: loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and executes them on the XLA CPU device (the
+//!   reproduction's "accelerator"; see DESIGN.md §2).
+//! * [`coordinator`] — the event-processing pipeline: batching, host/device
+//!   routing, backpressure and metrics.
+//! * [`bench_support`] — the paper-methodology timing harness (mean of the
+//!   10 fastest of 50 runs) and figure/table printers.
+//! * [`util`] — in-tree substrate: JSON, PRNG, a mini property-testing
+//!   framework and a thread pool (the image has no network access, so
+//!   these are implemented rather than imported; DESIGN.md §3).
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod edm;
+pub mod marionette;
+pub mod runtime;
+pub mod util;
+
+pub use marionette::prelude;

@@ -1,0 +1,225 @@
+//! `repro` — the Marionette-RS command-line launcher.
+//!
+//! Commands:
+//!   demo                  quick end-to-end tour (host + device paths)
+//!   run-pipeline [...]    run the event-processing coordinator
+//!   fig1 / fig2 [...]     regenerate the paper's figures
+//!   zero-cost             the zero-cost-abstraction table
+//!   transfers             the transfer matrix (§VII)
+//!   ablation              layout / fusion / routing ablations
+//!   doctor                environment + artifact checks
+//!
+//! Shared flags: --quick (small grids, short harness), --grid N,
+//! --events N, --particles a,b,c, --no-device, --csv NAME.
+//!
+//! Argument parsing is hand-rolled (clap is not in the vendored set).
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Result};
+
+use marionette::bench_support::figures::{self, FigOpts};
+use marionette::bench_support::Harness;
+use marionette::coordinator::{run_pipeline, PipelineConfig, RoutePolicy};
+use marionette::edm::generator::EventConfig;
+use marionette::runtime::{client, Engine};
+
+#[derive(Debug, Default)]
+struct Args {
+    command: String,
+    quick: bool,
+    grid: Option<usize>,
+    events: Option<usize>,
+    particles: Option<Vec<usize>>,
+    grids: Option<Vec<usize>>,
+    no_device: bool,
+    csv: Option<String>,
+    policy: Option<String>,
+    workers: Option<usize>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = std::env::args().skip(1);
+    args.command = it.next().unwrap_or_else(|| "help".to_string());
+    while let Some(a) = it.next() {
+        let mut val = |name: &str| {
+            it.next().ok_or_else(|| anyhow!("{name} requires a value"))
+        };
+        match a.as_str() {
+            "--quick" => args.quick = true,
+            "--no-device" => args.no_device = true,
+            "--grid" => args.grid = Some(val("--grid")?.parse()?),
+            "--events" => args.events = Some(val("--events")?.parse()?),
+            "--workers" => args.workers = Some(val("--workers")?.parse()?),
+            "--csv" => args.csv = Some(val("--csv")?),
+            "--policy" => args.policy = Some(val("--policy")?),
+            "--particles" => {
+                args.particles = Some(
+                    val("--particles")?
+                        .split(',')
+                        .map(|s| s.trim().parse())
+                        .collect::<Result<_, _>>()?,
+                )
+            }
+            "--grids" => {
+                args.grids = Some(
+                    val("--grids")?
+                        .split(',')
+                        .map(|s| s.trim().parse())
+                        .collect::<Result<_, _>>()?,
+                )
+            }
+            other => bail!("unknown flag {other} (see `repro help`)"),
+        }
+    }
+    Ok(args)
+}
+
+fn fig_opts(args: &Args) -> FigOpts {
+    let mut opts = if args.quick { FigOpts::quick() } else { FigOpts::default() };
+    if let Some(g) = &args.grids {
+        opts.grids = g.clone();
+    }
+    if let Some(g) = args.grid {
+        opts.fig2_grid = g;
+    }
+    if let Some(p) = &args.particles {
+        opts.particles = p.clone();
+    }
+    if args.no_device {
+        opts.device = false;
+    }
+    opts
+}
+
+fn emit(table: marionette::bench_support::Table, csv: &Option<String>) -> Result<()> {
+    println!("{}", table.render());
+    if let Some(name) = csv {
+        let path = table.save_csv(name)?;
+        println!("csv -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    let grid = args.grid.unwrap_or(64);
+    println!("== Marionette-RS demo (grid {grid}x{grid}) ==");
+    println!("device: {}", client::device_description());
+
+    let mut cfg = PipelineConfig::new(EventConfig::grid(grid, grid, 4), args.events.unwrap_or(16));
+    cfg.device = !args.no_device;
+    cfg.policy = RoutePolicy::DeviceOnly;
+    if args.no_device {
+        cfg.policy = RoutePolicy::HostOnly;
+    }
+    let rep = run_pipeline(&cfg)?;
+    println!("{}", rep.report());
+    for r in rep.results.iter().take(4) {
+        println!(
+            "  event {}: {:?} -> {} particles, E={:.1}",
+            r.event_id, r.route, r.n_particles, r.total_energy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let grid = args.grid.unwrap_or(256);
+    let events = args.events.unwrap_or(64);
+    let mut cfg = PipelineConfig::new(
+        EventConfig::grid(grid, grid, (grid / 32).max(1).pow(2)),
+        events,
+    );
+    cfg.device = !args.no_device;
+    if let Some(w) = args.workers {
+        cfg.host_workers = w;
+    }
+    cfg.policy = match args.policy.as_deref() {
+        Some("host") => RoutePolicy::HostOnly,
+        Some("device") => RoutePolicy::DeviceOnly,
+        Some("auto") | None => RoutePolicy::default(),
+        Some(p) => bail!("unknown policy {p} (host|device|auto)"),
+    };
+    let rep = run_pipeline(&cfg)?;
+    println!("{}", rep.report());
+    Ok(())
+}
+
+fn cmd_doctor() -> Result<()> {
+    println!("PJRT: {}", client::device_description());
+    match Engine::load_default() {
+        Ok(eng) => {
+            let m = eng.manifest();
+            println!("artifacts: {} programs in {}", m.records().count(), m.dir.display());
+            for entry in ["sensor_stage", "particle_stage", "full_event"] {
+                println!("  {entry}: buckets {:?}", m.buckets(entry));
+            }
+            let d = eng.warm("sensor_stage", 16, 16)?;
+            println!("compile smoke (sensor_stage 16x16): {d:?}");
+        }
+        Err(e) => println!("artifacts: NOT AVAILABLE ({e:#}) - run `make artifacts`"),
+    }
+    match marionette::edm::golden::load_golden() {
+        Some(g) => println!("golden: {}x{} event, {} tensors", g.rows, g.cols, g.tensors.len()),
+        None => println!("golden: not built"),
+    }
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.command.as_str() {
+        "demo" => cmd_demo(&args),
+        "run-pipeline" => cmd_pipeline(&args),
+        "fig1" => emit(figures::fig1(&fig_opts(&args))?, &args.csv),
+        "fig2" => emit(figures::fig2(&fig_opts(&args))?, &args.csv),
+        "zero-cost" => {
+            let h = if args.quick { Harness::quick() } else { Harness::default() };
+            emit(figures::zero_cost(args.grid.unwrap_or(512), h)?, &args.csv)
+        }
+        "transfers" => {
+            let h = if args.quick { Harness::quick() } else { Harness::default() };
+            emit(figures::transfers(args.grid.unwrap_or(256), h)?, &args.csv)
+        }
+        "ablation" => {
+            let h = if args.quick { Harness::quick() } else { Harness::default() };
+            let grid = args.grid.unwrap_or(if args.quick { 64 } else { 256 });
+            emit(figures::ablation_layouts(grid, (grid / 32).max(1).pow(2), h)?, &args.csv)?;
+            if !args.no_device {
+                let grids = args.grids.clone().unwrap_or_else(|| {
+                    if args.quick { vec![16, 32, 64] } else { vec![64, 128, 256, 512] }
+                });
+                emit(figures::ablation_fused(&grids, h)?, &args.csv)?;
+                emit(
+                    figures::ablation_routing(grid, args.events.unwrap_or(16))?,
+                    &args.csv,
+                )?;
+            }
+            Ok(())
+        }
+        "doctor" => cmd_doctor(),
+        "help" | "--help" | "-h" => {
+            println!(
+                "repro <command> [flags]\n\
+                 commands: demo | run-pipeline | fig1 | fig2 | zero-cost | \
+                 transfers | ablation | doctor\n\
+                 flags: --quick --grid N --grids a,b,c --events N \
+                 --particles a,b,c --workers N --policy host|device|auto \
+                 --no-device --csv NAME"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (see `repro help`)"),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

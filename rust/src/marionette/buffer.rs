@@ -1,0 +1,406 @@
+//! Context-aware buffers: the storage primitives under every layout.
+//!
+//! [`RawBuf`] is an untyped, context-allocated byte buffer with geometric
+//! growth; [`ContextAwareVec`] is the typed, `Vec<T>`-like container on top
+//! (the paper's `ContextAwareVector` built on `ContextAwareAllocator`).
+
+use std::alloc::Layout as AllocLayout;
+use std::marker::PhantomData;
+use std::ptr::NonNull;
+
+use super::memory::MemoryContext;
+use super::pod::Pod;
+
+/// An untyped byte buffer allocated from a memory context.
+pub struct RawBuf<C: MemoryContext> {
+    ptr: NonNull<u8>,
+    cap: usize,
+    align: usize,
+    info: C::Info,
+}
+
+// SAFETY: RawBuf owns its allocation exclusively; C::Info is Send + Sync.
+unsafe impl<C: MemoryContext> Send for RawBuf<C> {}
+unsafe impl<C: MemoryContext> Sync for RawBuf<C> {}
+
+impl<C: MemoryContext> RawBuf<C> {
+    pub fn new(align: usize, info: C::Info) -> Self {
+        let layout = AllocLayout::from_size_align(0, align).expect("bad align");
+        let ptr = C::allocate(&info, layout);
+        RawBuf { ptr, cap: 0, align, info }
+    }
+
+    pub fn with_capacity(bytes: usize, align: usize, info: C::Info) -> Self {
+        let mut b = Self::new(align, info);
+        b.grow_exact(bytes);
+        b
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn align(&self) -> usize {
+        self.align
+    }
+
+    pub fn info(&self) -> &C::Info {
+        &self.info
+    }
+
+    pub fn as_ptr(&self) -> *const u8 {
+        self.ptr.as_ptr()
+    }
+
+    pub fn as_mut_ptr(&mut self) -> *mut u8 {
+        self.ptr.as_ptr()
+    }
+
+    fn layout_for(&self, bytes: usize) -> AllocLayout {
+        AllocLayout::from_size_align(bytes, self.align).expect("capacity overflow")
+    }
+
+    /// Grow to exactly `new_cap` bytes, preserving current contents.
+    /// Shrinks are honoured too (used by `shrink_to_fit`).
+    pub fn grow_exact(&mut self, new_cap: usize) {
+        if new_cap == self.cap {
+            return;
+        }
+        let new_ptr = C::allocate(&self.info, self.layout_for(new_cap));
+        let keep = self.cap.min(new_cap);
+        if keep > 0 {
+            // Same-context relocation.
+            unsafe { C::copy_within(&self.info, new_ptr.as_ptr(), self.ptr.as_ptr(), keep) };
+        }
+        let old_layout = self.layout_for(self.cap);
+        unsafe { C::deallocate(&self.info, self.ptr, old_layout) };
+        self.ptr = new_ptr;
+        self.cap = new_cap;
+    }
+
+    /// Ensure capacity for at least `needed` bytes (geometric growth).
+    pub fn reserve_total(&mut self, needed: usize) {
+        if needed > self.cap {
+            let target = needed.max(self.cap * 2).max(64);
+            self.grow_exact(target);
+        }
+    }
+
+    /// Zero-fill the byte range `[at, at + len)`.
+    ///
+    /// # Safety
+    /// The range must be within capacity.
+    pub unsafe fn zero_range(&mut self, at: usize, len: usize) {
+        C::memset(&self.info, self.ptr.as_ptr().add(at), len, 0);
+    }
+
+    /// Re-home this buffer onto new context info (the paper's
+    /// `update_memory_context_info`: allocate with the new info, copy,
+    /// free the old allocation).
+    pub fn rehome(&mut self, new_info: C::Info) {
+        let layout = self.layout_for(self.cap);
+        let new_ptr = C::allocate(&new_info, layout);
+        if self.cap > 0 {
+            unsafe {
+                // Conservative route via host: old-ctx out, new-ctx in.
+                C::copy_within(&new_info, new_ptr.as_ptr(), self.ptr.as_ptr(), self.cap);
+            }
+        }
+        unsafe { C::deallocate(&self.info, self.ptr, layout) };
+        self.ptr = new_ptr;
+        self.info = new_info;
+    }
+}
+
+impl<C: MemoryContext> Drop for RawBuf<C> {
+    fn drop(&mut self) {
+        let layout = self.layout_for(self.cap);
+        unsafe { C::deallocate(&self.info, self.ptr, layout) };
+    }
+}
+
+/// A typed, growable, context-allocated vector.
+pub struct ContextAwareVec<T: Pod, C: MemoryContext = super::memory::HostContext> {
+    buf: RawBuf<C>,
+    len: usize,
+    _t: PhantomData<T>,
+}
+
+impl<T: Pod, C: MemoryContext> ContextAwareVec<T, C> {
+    pub fn new_in(info: C::Info) -> Self {
+        ContextAwareVec {
+            buf: RawBuf::new(std::mem::align_of::<T>(), info),
+            len: 0,
+            _t: PhantomData,
+        }
+    }
+
+    pub fn with_capacity_in(cap: usize, info: C::Info) -> Self {
+        let mut v = Self::new_in(info);
+        v.reserve(cap);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity() / std::mem::size_of::<T>().max(1)
+    }
+
+    pub fn info(&self) -> &C::Info {
+        self.buf.info()
+    }
+
+    pub fn reserve(&mut self, extra: usize) {
+        self.buf
+            .reserve_total((self.len + extra) * std::mem::size_of::<T>());
+    }
+
+    pub fn push(&mut self, v: T) {
+        self.reserve(1);
+        unsafe {
+            let dst = (self.buf.as_mut_ptr() as *mut T).add(self.len);
+            std::ptr::write(dst, v);
+        }
+        self.len += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        self.len -= 1;
+        Some(unsafe { std::ptr::read((self.buf.as_ptr() as *const T).add(self.len)) })
+    }
+
+    /// Resize, zero-filling new elements (all `Pod` zero patterns are
+    /// valid values).
+    pub fn resize_zeroed(&mut self, new_len: usize) {
+        if new_len > self.len {
+            self.reserve(new_len - self.len);
+            unsafe {
+                self.buf.zero_range(
+                    self.len * std::mem::size_of::<T>(),
+                    (new_len - self.len) * std::mem::size_of::<T>(),
+                );
+            }
+        }
+        self.len = new_len;
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn shrink_to_fit(&mut self) {
+        self.buf.grow_exact(self.len * std::mem::size_of::<T>());
+    }
+
+    /// Insert `n` zeroed elements at `at`, shifting the tail right.
+    pub fn insert_zeroed(&mut self, at: usize, n: usize) {
+        assert!(at <= self.len, "insert out of bounds");
+        self.reserve(n);
+        let esz = std::mem::size_of::<T>();
+        unsafe {
+            let base = self.buf.as_mut_ptr();
+            C::copy_within(
+                self.buf.info(),
+                base.add((at + n) * esz),
+                base.add(at * esz),
+                (self.len - at) * esz,
+            );
+            self.buf.zero_range(at * esz, n * esz);
+        }
+        self.len += n;
+    }
+
+    /// Erase `n` elements starting at `at`, shifting the tail left.
+    pub fn erase(&mut self, at: usize, n: usize) {
+        assert!(at + n <= self.len, "erase out of bounds");
+        let esz = std::mem::size_of::<T>();
+        unsafe {
+            let base = self.buf.as_mut_ptr();
+            C::copy_within(
+                self.buf.info(),
+                base.add(at * esz),
+                base.add((at + n) * esz),
+                (self.len - at - n) * esz,
+            );
+        }
+        self.len -= n;
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const T, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut T, self.len)
+        }
+    }
+
+    pub fn rehome(&mut self, info: C::Info) {
+        self.buf.rehome(info);
+    }
+}
+
+impl<T: Pod> ContextAwareVec<T, super::memory::HostContext> {
+    pub fn new() -> Self {
+        Self::new_in(())
+    }
+
+    pub fn from_slice(s: &[T]) -> Self {
+        let mut v = Self::new();
+        v.extend_from_slice(s);
+        v
+    }
+}
+
+impl<T: Pod> Default for ContextAwareVec<T, super::memory::HostContext> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Pod, C: MemoryContext> ContextAwareVec<T, C> {
+    pub fn extend_from_slice(&mut self, s: &[T]) {
+        self.reserve(s.len());
+        unsafe {
+            let dst = (self.buf.as_mut_ptr() as *mut T).add(self.len);
+            std::ptr::copy_nonoverlapping(s.as_ptr(), dst, s.len());
+        }
+        self.len += s.len();
+    }
+}
+
+impl<T: Pod, C: MemoryContext> std::ops::Deref for ContextAwareVec<T, C> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod, C: MemoryContext> std::ops::DerefMut for ContextAwareVec<T, C> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Pod, C: MemoryContext> std::fmt::Debug for ContextAwareVec<T, C> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::memory::{ArenaInfo, CountingContext, CountingInfo, HostContext};
+    use super::*;
+
+    #[test]
+    fn push_pop_index() {
+        let mut v = ContextAwareVec::<u32>::new();
+        for i in 0..1000 {
+            v.push(i);
+        }
+        assert_eq!(v.len(), 1000);
+        assert_eq!(v[999], 999);
+        assert_eq!(v.pop(), Some(999));
+        assert_eq!(v.len(), 999);
+    }
+
+    #[test]
+    fn resize_zeroes_new_tail() {
+        let mut v = ContextAwareVec::<f32>::from_slice(&[1.0, 2.0]);
+        v.resize_zeroed(5);
+        assert_eq!(v.as_slice(), &[1.0, 2.0, 0.0, 0.0, 0.0]);
+        v.resize_zeroed(1);
+        assert_eq!(v.as_slice(), &[1.0]);
+        // Grow again: previously truncated bytes must be re-zeroed.
+        v.resize_zeroed(3);
+        assert_eq!(v.as_slice(), &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn insert_erase_shift() {
+        let mut v = ContextAwareVec::<u16>::from_slice(&[1, 2, 3, 4]);
+        v.insert_zeroed(2, 2);
+        assert_eq!(v.as_slice(), &[1, 2, 0, 0, 3, 4]);
+        v.erase(1, 3);
+        assert_eq!(v.as_slice(), &[1, 3, 4]);
+        v.erase(0, 3);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "erase out of bounds")]
+    fn erase_oob_panics() {
+        let mut v = ContextAwareVec::<u8>::from_slice(&[1]);
+        v.erase(0, 2);
+    }
+
+    #[test]
+    fn shrink_to_fit_keeps_data() {
+        let mut v = ContextAwareVec::<u64>::new();
+        v.reserve(1000);
+        v.extend_from_slice(&[7, 8, 9]);
+        assert!(v.capacity() >= 1000);
+        v.shrink_to_fit();
+        assert_eq!(v.capacity(), 3);
+        assert_eq!(v.as_slice(), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn counting_context_tracks_growth() {
+        let info = CountingInfo::default();
+        let mut v = ContextAwareVec::<u8, CountingContext>::new_in(info.clone());
+        for i in 0..10_000u32 {
+            v.push(i as u8);
+        }
+        drop(v);
+        // Geometric growth: allocations are O(log n), and every alloc has
+        // a matching dealloc after drop. (+1: the empty initial alloc.)
+        let allocs = info.0.allocs.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(allocs <= 12, "expected geometric growth, got {allocs} allocs");
+        assert_eq!(info.0.live_allocs(), 0);
+    }
+
+    #[test]
+    fn arena_vec_works() {
+        let info = ArenaInfo::default();
+        let mut v =
+            ContextAwareVec::<f64, super::super::memory::ArenaContext>::new_in(info);
+        for i in 0..100 {
+            v.push(i as f64);
+        }
+        assert_eq!(v[99], 99.0);
+    }
+
+    #[test]
+    fn rehome_preserves_contents() {
+        let info_a = CountingInfo::default();
+        let info_b = CountingInfo::default();
+        let mut v = ContextAwareVec::<u32, CountingContext>::new_in(info_a.clone());
+        v.extend_from_slice(&[1, 2, 3]);
+        v.rehome(info_b.clone());
+        assert_eq!(v.as_slice(), &[1, 2, 3]);
+        // New info owns the allocation now.
+        assert!(info_b.0.allocs.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        drop(v);
+        assert_eq!(info_a.0.live_allocs(), 0);
+    }
+
+    #[test]
+    fn raw_buf_zero_capacity_roundtrip() {
+        let b = RawBuf::<HostContext>::new(8, ());
+        assert_eq!(b.capacity(), 0);
+        drop(b);
+    }
+}

@@ -1,0 +1,117 @@
+//! The layout-holder contract (paper §VII-B, `layout_holder`).
+//!
+//! A holder owns the actual storage of all fields of a schema, organised
+//! however the layout chooses, and exposes:
+//!
+//! * size-changing operations per *size tag* (`resize`, `reserve`,
+//!   `clear`, `shrink_to_fit`, `insert_gap`, `erase_range`);
+//! * element addressing (`elem_ptr`) given a [`FieldMeta`] — the "arrays
+//!   need not be contiguous, only a mapping from an index to a variable"
+//!   contract of the paper;
+//! * optional regular-stride *plane* views ([`LayoutHolder::plane`]) that
+//!   transfers use to fall back from memcpy to strided to element-wise
+//!   copies.
+//!
+//! All bounds checking happens in [`super::collection::RawCollection`];
+//! holders trust their inputs (and `debug_assert!` them).
+
+use std::sync::Arc;
+
+use super::memory::MemoryContext;
+use super::pod::Pod;
+use super::schema::{FieldMeta, Schema, TagId};
+
+/// A regular-stride view of one plane (field, array-lane) of storage.
+#[derive(Clone, Copy, Debug)]
+pub struct PlaneView {
+    /// First element of the plane.
+    pub base: *const u8,
+    /// Byte stride between consecutive elements.
+    pub stride: usize,
+    /// Number of valid elements (the tag's length).
+    pub len: usize,
+}
+
+/// Storage engine for one layout family (paper: `layout_holder`).
+pub trait LayoutHolder: Send + 'static {
+    type Ctx: MemoryContext;
+
+    fn new(schema: Arc<Schema>, info: <Self::Ctx as MemoryContext>::Info) -> Self;
+
+    fn schema(&self) -> &Arc<Schema>;
+
+    fn info(&self) -> &<Self::Ctx as MemoryContext>::Info;
+
+    /// Swap the context info, re-homing every allocation (paper:
+    /// `update_memory_context_info`).
+    fn set_info(&mut self, info: <Self::Ctx as MemoryContext>::Info);
+
+    /// Current length of a size tag.
+    fn tag_len(&self, tag: TagId) -> usize;
+
+    /// Current capacity of a size tag (elements).
+    fn tag_capacity(&self, tag: TagId) -> usize;
+
+    /// Resize a tag; growth zero-fills ([`Pod`] zero patterns are valid).
+    fn resize_tag(&mut self, tag: TagId, len: usize);
+
+    /// Ensure capacity for at least `cap` elements of a tag.
+    fn reserve_tag(&mut self, tag: TagId, cap: usize);
+
+    /// Set every tag's length to zero (capacity retained).
+    fn clear(&mut self);
+
+    /// Release excess capacity on every tag.
+    fn shrink_to_fit(&mut self);
+
+    /// Insert `n` zeroed elements at `at` within a tag, shifting the tail.
+    fn insert_gap(&mut self, tag: TagId, at: usize, n: usize);
+
+    /// Erase `[at, at + n)` within a tag, shifting the tail left.
+    fn erase_range(&mut self, tag: TagId, at: usize, n: usize);
+
+    /// Address of element `i`, lane `k` of the field described by `meta`.
+    ///
+    /// # Safety
+    /// `i < tag_len(meta.tag)`, `k < meta.extent`, and `meta` must come
+    /// from this holder's schema.
+    unsafe fn elem_ptr(&self, meta: FieldMeta, i: usize, k: usize) -> *const u8;
+
+    /// Mutable variant of [`Self::elem_ptr`].
+    ///
+    /// # Safety
+    /// As [`Self::elem_ptr`].
+    unsafe fn elem_ptr_mut(&mut self, meta: FieldMeta, i: usize, k: usize) -> *mut u8;
+
+    /// Regular-stride view of plane (field, `k`), if the layout stores it
+    /// regularly. `None` forces element-wise access (e.g. AoSoA planes).
+    fn plane(&self, meta: FieldMeta, k: usize) -> Option<PlaneView>;
+}
+
+/// Typed read (bounds are the caller's responsibility — see
+/// `RawCollection` for the checked API).
+///
+/// # Safety
+/// As [`LayoutHolder::elem_ptr`]; additionally `T::DTYPE` must match the
+/// field's dtype.
+#[inline(always)]
+pub unsafe fn read<T: Pod, H: LayoutHolder>(h: &H, meta: FieldMeta, i: usize, k: usize) -> T {
+    debug_assert_eq!(meta.size as usize, std::mem::size_of::<T>());
+    *(h.elem_ptr(meta, i, k) as *const T)
+}
+
+/// Typed write; see [`read`].
+///
+/// # Safety
+/// As [`read`].
+#[inline(always)]
+pub unsafe fn write<T: Pod, H: LayoutHolder>(
+    h: &mut H,
+    meta: FieldMeta,
+    i: usize,
+    k: usize,
+    v: T,
+) {
+    debug_assert_eq!(meta.size as usize, std::mem::size_of::<T>());
+    *(h.elem_ptr_mut(meta, i, k) as *mut T) = v;
+}

@@ -1,0 +1,64 @@
+//! Layouts: the first template parameter of the paper's `Collection`.
+//!
+//! A [`Layout`] pairs a storage engine (a [`LayoutHolder`] implementation)
+//! with a memory context. Collections are generic over the layout, so the
+//! same property list and interface can be materialised as:
+//!
+//! * [`SoAVec<C>`] — one context-aware vector per property (paper:
+//!   `VectorLikePerProperty`); the layout the device path consumes.
+//! * [`AoS<C>`] — one blob of records per size tag (paper: `DynamicStruct`
+//!   with AoS ordering); byte-compatible with handwritten `#[repr(C)]`
+//!   struct vectors.
+//! * [`SoABlob<C>`] — one blob per tag, field-major.
+//! * [`AoSoA<K, C>`] — one blob per tag, K-wide blocked hybrid.
+
+use super::blob::{AoSScheme, AoSoAScheme, BlobHolder, SoABlobScheme};
+use super::holder::LayoutHolder;
+use super::memory::{HostContext, MemoryContext};
+use super::soavec::SoAVecHolder;
+
+/// A way of storing a collection: holder + memory context (paper §V, the
+/// first template parameter of `Collection`).
+pub trait Layout: 'static {
+    type Ctx: MemoryContext;
+    type Holder: LayoutHolder<Ctx = Self::Ctx>;
+
+    /// Label used in diagnostics and bench tables.
+    const NAME: &'static str;
+}
+
+/// Vector-per-property storage (the default).
+pub struct SoAVec<C: MemoryContext = HostContext>(std::marker::PhantomData<C>);
+
+impl<C: MemoryContext> Layout for SoAVec<C> {
+    type Ctx = C;
+    type Holder = SoAVecHolder<C>;
+    const NAME: &'static str = "soa-vec";
+}
+
+/// Array-of-structures blob storage.
+pub struct AoS<C: MemoryContext = HostContext>(std::marker::PhantomData<C>);
+
+impl<C: MemoryContext> Layout for AoS<C> {
+    type Ctx = C;
+    type Holder = BlobHolder<AoSScheme, C>;
+    const NAME: &'static str = "aos";
+}
+
+/// Structure-of-arrays blob storage.
+pub struct SoABlob<C: MemoryContext = HostContext>(std::marker::PhantomData<C>);
+
+impl<C: MemoryContext> Layout for SoABlob<C> {
+    type Ctx = C;
+    type Holder = BlobHolder<SoABlobScheme, C>;
+    const NAME: &'static str = "soa-blob";
+}
+
+/// Blocked AoSoA storage with block size `K`.
+pub struct AoSoA<const K: usize, C: MemoryContext = HostContext>(std::marker::PhantomData<C>);
+
+impl<const K: usize, C: MemoryContext> Layout for AoSoA<K, C> {
+    type Ctx = C;
+    type Holder = BlobHolder<AoSoAScheme<K>, C>;
+    const NAME: &'static str = "aosoa";
+}

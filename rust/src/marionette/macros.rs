@@ -1,0 +1,687 @@
+//! `marionette_collection!` — the typed interface generator.
+//!
+//! The analogue of the paper's `MARIONETTE_DECLARE_*` macro family plus the
+//! `PropertyList` alias (§VI): one declaration produces, for a property
+//! list,
+//!
+//! * a **props struct** holding compile-time [`FieldMeta`] constants for
+//!   every property (the property-description classes of the paper), all
+//!   offsets resolved by `const` evaluation — the zero-cost guarantee;
+//! * a **collection struct**, generic over [`Layout`], with the
+//!   `std::vector`-like interface, typed accessors/mutators per property,
+//!   jagged-vector views, global properties, and layout/context transfers;
+//! * an **owned object struct** (the paper's standalone `Object`) plus
+//!   **proxy types** (`Ref`/`Mut`, the paper's objects-in-collections) and
+//!   **sub-group views**;
+//! * iteration over object proxies.
+//!
+//! Like the paper's macros, property names are given in both accessor
+//! (lowercase) and property-description (CONST) form because Rust macros
+//! cannot derive new identifiers. Arbitrary extra interface functions (the
+//! paper's *no-property* properties) are plain inherent `impl` blocks on
+//! the generated types — see `edm::sensor` for the worked example.
+//!
+//! Grammar:
+//!
+//! ```text
+//! marionette_collection! {
+//!     /// docs…
+//!     pub collection Sensors, object Sensor, record SensorRec,
+//!         columns SensorCols, refs SensorRef/SensorMut,
+//!         props SensorProps, schema "sensor" {
+//!         per_item energy / set_energy / ENERGY: f32;
+//!         group calibration / CalibView / CalibViewMut {
+//!             per_item noisy / set_noisy / NOISY: u8;
+//!         }
+//!         array significance / set_significance / SIGNIFICANCE: [f32; 3];
+//!         jagged cells / set_cells / CELLS: u64, prefix u32;
+//!         global event_id / set_event_id / EVENT_ID: u64;
+//!     }
+//! }
+//! ```
+//!
+//! Restrictions vs the paper (documented scope): groups hold per-item
+//! scalars only and do not nest; jagged properties have a single value
+//! field (the paper's `*_SIMPLE_*` form — multi-payload jagged vectors are
+//! available through the runtime [`SchemaBuilder`] API).
+//!
+//! [`FieldMeta`]: crate::marionette::schema::FieldMeta
+//! [`Layout`]: crate::marionette::layout::Layout
+//! [`SchemaBuilder`]: crate::marionette::schema::SchemaBuilder
+
+/// Declare a typed Marionette collection. See the [module docs](self).
+#[macro_export]
+macro_rules! marionette_collection {
+    (
+        $(#[$docs:meta])*
+        pub collection $Col:ident, object $Obj:ident, record $Rec:ident,
+            columns $Cols:ident, refs $Ref:ident / $Mut:ident,
+            props $Props:ident, schema $sname:literal {
+            $($body:tt)*
+        }
+    ) => {
+        $crate::marionette_collection!(@parse
+            docs=[$(#[$docs])*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            props=$Props, sname=$sname,
+            pis=[], arrs=[], jags=[], globs=[], groups=[],
+            rest=[$($body)*]
+        );
+    };
+
+    // ---------------- parsing: munch one declaration at a time ----------
+    (@parse
+        docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        props=$Props:ident, sname=$sname:literal,
+        pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
+        globs=[$($globs:tt)*], groups=[$($groups:tt)*],
+        rest=[per_item $g:ident / $s:ident / $C:ident : $ty:ty ; $($rest:tt)*]
+    ) => {
+        $crate::marionette_collection!(@parse
+            docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            props=$Props, sname=$sname,
+            pis=[$($pis)* [$g $s $C ($ty)]], arrs=[$($arrs)*], jags=[$($jags)*],
+            globs=[$($globs)*], groups=[$($groups)*],
+            rest=[$($rest)*]
+        );
+    };
+    (@parse
+        docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        props=$Props:ident, sname=$sname:literal,
+        pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
+        globs=[$($globs:tt)*], groups=[$($groups:tt)*],
+        rest=[group $g:ident / $GV:ident / $GM:ident {
+            $(per_item $ig:ident / $is:ident / $IC:ident : $ity:ty ;)*
+        } $($rest:tt)*]
+    ) => {
+        $crate::marionette_collection!(@parse
+            docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            props=$Props, sname=$sname,
+            pis=[$($pis)* $([$ig $is $IC ($ity)])*], arrs=[$($arrs)*], jags=[$($jags)*],
+            globs=[$($globs)*],
+            groups=[$($groups)* [$g $GV $GM [$([$ig $is $IC ($ity)])*]]],
+            rest=[$($rest)*]
+        );
+    };
+    (@parse
+        docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        props=$Props:ident, sname=$sname:literal,
+        pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
+        globs=[$($globs:tt)*], groups=[$($groups:tt)*],
+        rest=[array $g:ident / $s:ident / $C:ident : [$ty:ty ; $e:expr] ; $($rest:tt)*]
+    ) => {
+        $crate::marionette_collection!(@parse
+            docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            props=$Props, sname=$sname,
+            pis=[$($pis)*], arrs=[$($arrs)* [$g $s $C ($ty) ($e)]], jags=[$($jags)*],
+            globs=[$($globs)*], groups=[$($groups)*],
+            rest=[$($rest)*]
+        );
+    };
+    (@parse
+        docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        props=$Props:ident, sname=$sname:literal,
+        pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
+        globs=[$($globs:tt)*], groups=[$($groups:tt)*],
+        rest=[jagged $g:ident / $s:ident / $C:ident : $ty:ty , prefix $pty:ty ; $($rest:tt)*]
+    ) => {
+        $crate::marionette_collection!(@parse
+            docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            props=$Props, sname=$sname,
+            pis=[$($pis)*], arrs=[$($arrs)*], jags=[$($jags)* [$g $s $C ($ty) ($pty)]],
+            globs=[$($globs)*], groups=[$($groups)*],
+            rest=[$($rest)*]
+        );
+    };
+    (@parse
+        docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        props=$Props:ident, sname=$sname:literal,
+        pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
+        globs=[$($globs:tt)*], groups=[$($groups:tt)*],
+        rest=[global $g:ident / $s:ident / $C:ident : $ty:ty ; $($rest:tt)*]
+    ) => {
+        $crate::marionette_collection!(@parse
+            docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            props=$Props, sname=$sname,
+            pis=[$($pis)*], arrs=[$($arrs)*], jags=[$($jags)*],
+            globs=[$($globs)* [$g $s $C ($ty)]], groups=[$($groups)*],
+            rest=[$($rest)*]
+        );
+    };
+
+    // ---------------- emission ------------------------------------------
+    (@parse
+        docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        props=$Props:ident, sname=$sname:literal,
+        pis=[$([$pig:ident $pis_:ident $PIC:ident ($pity:ty)])*],
+        arrs=[$([$ag:ident $as_:ident $AC:ident ($aty:ty) ($aext:expr)])*],
+        jags=[$([$jg:ident $js_:ident $JC:ident ($jty:ty) ($jpty:ty)])*],
+        globs=[$([$gg:ident $gs_:ident $GC:ident ($gty:ty)])*],
+        groups=[$([$grg:ident $GRV:ident $GRM:ident
+                   [$([$gig:ident $gis_:ident $GIC:ident ($gity:ty)])*]])*],
+        rest=[]
+    ) => {
+        /// Property descriptions of the collection: compile-time
+        /// [`FieldMeta`](crate::marionette::schema::FieldMeta) constants
+        /// (all offsets const-folded) plus the runtime
+        /// [`Schema`](crate::marionette::schema::Schema).
+        pub struct $Props;
+
+        #[allow(dead_code)]
+        impl $Props {
+            /// Field names, in schema order (per-items, arrays, jagged
+            /// prefix/value pairs, globals).
+            pub const NAMES: &'static [&'static str] = &[
+                $(stringify!($pig),)*
+                $(stringify!($ag),)*
+                $(concat!(stringify!($jg), "__prefix"), stringify!($jg),)*
+                $(stringify!($gg),)*
+            ];
+
+            pub const NUM_FIELDS: usize = Self::NAMES.len();
+
+            pub const DESCS: [$crate::marionette::schema::FieldDesc; Self::NUM_FIELDS] = [
+                $($crate::marionette::schema::FieldDesc::per_item(
+                    <$pity as $crate::marionette::pod::Pod>::DTYPE),)*
+                $($crate::marionette::schema::FieldDesc::array(
+                    <$aty as $crate::marionette::pod::Pod>::DTYPE, $aext as u32),)*
+                $($crate::marionette::schema::FieldDesc::jagged_prefix(
+                    <$jpty as $crate::marionette::pod::Pod>::DTYPE),
+                  $crate::marionette::schema::FieldDesc::jagged_values(
+                    <$jty as $crate::marionette::pod::Pod>::DTYPE),)*
+                $($crate::marionette::schema::FieldDesc::global(
+                    <$gty as $crate::marionette::pod::Pod>::DTYPE),)*
+            ];
+
+            pub const METAS: [$crate::marionette::schema::FieldMeta; Self::NUM_FIELDS] =
+                $crate::marionette::schema::compute_metas(Self::DESCS);
+
+            /// Meta of the first `Items`-tag field (record-view anchor).
+            pub const FIRST_ITEM_META: $crate::marionette::schema::FieldMeta =
+                Self::METAS[0];
+
+            $(pub const $PIC: $crate::marionette::schema::FieldMeta =
+                $crate::marionette::schema::meta_by_name(
+                    &Self::METAS, Self::NAMES, stringify!($pig));)*
+            $(pub const $AC: $crate::marionette::schema::FieldMeta =
+                $crate::marionette::schema::meta_by_name(
+                    &Self::METAS, Self::NAMES, stringify!($ag));)*
+            $(pub const $JC: $crate::marionette::schema::JaggedProp =
+                $crate::marionette::schema::JaggedProp::from_meta(
+                    $crate::marionette::schema::meta_by_name(
+                        &Self::METAS, Self::NAMES, stringify!($jg)));)*
+            $(pub const $GC: $crate::marionette::schema::FieldMeta =
+                $crate::marionette::schema::meta_by_name(
+                    &Self::METAS, Self::NAMES, stringify!($gg));)*
+
+            /// The shared runtime schema (memoised; structurally identical
+            /// to the const metas, checked at collection construction).
+            pub fn schema() -> ::std::sync::Arc<$crate::marionette::schema::Schema> {
+                static S: ::std::sync::OnceLock<
+                    ::std::sync::Arc<$crate::marionette::schema::Schema>,
+                > = ::std::sync::OnceLock::new();
+                S.get_or_init(|| {
+                    let b = $crate::marionette::schema::Schema::builder($sname)
+                        $(.per_item::<$pity>(stringify!($pig)))*
+                        $(.array::<$aty>(stringify!($ag), $aext as u32))*
+                        $(.jagged::<$jty, $jpty>(stringify!($jg)))*
+                        $(.global::<$gty>(stringify!($gg)))*;
+                    ::std::sync::Arc::new(b.build())
+                })
+                .clone()
+            }
+        }
+
+        $($docs)*
+        pub struct $Col<L: $crate::marionette::layout::Layout =
+            $crate::marionette::layout::SoAVec<$crate::marionette::memory::HostContext>>
+        {
+            raw: $crate::marionette::collection::RawCollection<L>,
+        }
+
+        impl<L: $crate::marionette::layout::Layout> $Col<L>
+        where
+            $crate::marionette::collection::InfoOf<L>: Default,
+        {
+            /// Empty collection with default context info.
+            pub fn new() -> Self {
+                Self::new_in(Default::default())
+            }
+        }
+
+        impl<L: $crate::marionette::layout::Layout> Default for $Col<L>
+        where
+            $crate::marionette::collection::InfoOf<L>: Default,
+        {
+            fn default() -> Self {
+                Self::new()
+            }
+        }
+
+        #[allow(dead_code)]
+        impl<L: $crate::marionette::layout::Layout> $Col<L> {
+            /// Empty collection with explicit context info.
+            pub fn new_in(info: $crate::marionette::collection::InfoOf<L>) -> Self {
+                let raw = $crate::marionette::collection::RawCollection::<L>::new_in(
+                    $Props::schema(),
+                    info,
+                );
+                // The const metas and the runtime schema are produced by
+                // two implementations of the same layout algorithm; pin
+                // them against each other once per construction in debug.
+                debug_assert_eq!(&$Props::METAS[..], raw.schema().metas());
+                Self { raw }
+            }
+
+            // ---- vector-like interface ------------------------------
+
+            #[inline(always)]
+            pub fn len(&self) -> usize { self.raw.len() }
+            pub fn is_empty(&self) -> bool { self.raw.is_empty() }
+            pub fn capacity(&self) -> usize { self.raw.capacity() }
+            pub fn reserve(&mut self, extra: usize) { self.raw.reserve(extra) }
+            pub fn resize(&mut self, n: usize) { self.raw.resize(n) }
+            pub fn clear(&mut self) { self.raw.clear() }
+            pub fn shrink_to_fit(&mut self) { self.raw.shrink_to_fit() }
+            pub fn push_default(&mut self) -> usize { self.raw.push_default() }
+            pub fn insert_items(&mut self, at: usize, n: usize) {
+                self.raw.insert_items(at, n)
+            }
+            pub fn erase_items(&mut self, at: usize, n: usize) {
+                self.raw.erase_items(at, n)
+            }
+
+            // ---- escape hatches & management ------------------------
+
+            /// The underlying layout-generic engine.
+            pub fn raw(&self) -> &$crate::marionette::collection::RawCollection<L> {
+                &self.raw
+            }
+            pub fn raw_mut(
+                &mut self,
+            ) -> &mut $crate::marionette::collection::RawCollection<L> {
+                &mut self.raw
+            }
+            pub fn schema(&self) -> &::std::sync::Arc<$crate::marionette::schema::Schema> {
+                self.raw.schema()
+            }
+            pub fn layout_name(&self) -> &'static str { self.raw.layout_name() }
+            pub fn context_name(&self) -> &'static str { self.raw.context_name() }
+            pub fn context_info(&self) -> &$crate::marionette::collection::InfoOf<L> {
+                self.raw.context_info()
+            }
+            /// Paper: `update_memory_context_info` — reallocate under new
+            /// context info, copying contents.
+            pub fn update_memory_context_info(
+                &mut self,
+                info: $crate::marionette::collection::InfoOf<L>,
+            ) {
+                self.raw.update_memory_context_info(info)
+            }
+
+            /// Copy from a collection of any other layout/context
+            /// (the generic rungs of the transfer ladder).
+            pub fn transfer_from<L2: $crate::marionette::layout::Layout>(
+                &mut self,
+                src: &$Col<L2>,
+            ) -> $crate::marionette::transfer::TransferPriority {
+                $crate::marionette::transfer::copy_collection(&src.raw, &mut self.raw)
+            }
+
+            // ---- per-item scalar accessors --------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $pig(&self, i: usize) -> $pity {
+                    self.raw.get::<$pity>($Props::$PIC, i)
+                }
+                #[inline(always)]
+                pub fn $pis_(&mut self, i: usize, v: $pity) {
+                    self.raw.set::<$pity>($Props::$PIC, i, v)
+                }
+            )*
+
+            // ---- array accessors ------------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $ag(&self, i: usize, k: usize) -> $aty {
+                    self.raw.get_k::<$aty>($Props::$AC, i, k)
+                }
+                #[inline(always)]
+                pub fn $as_(&mut self, i: usize, k: usize, v: $aty) {
+                    self.raw.set_k::<$aty>($Props::$AC, i, k, v)
+                }
+            )*
+
+            // ---- jagged accessors -----------------------------------
+
+            $(
+                /// Values of this item's jagged vector.
+                #[inline]
+                pub fn $jg(
+                    &self,
+                    i: usize,
+                ) -> $crate::marionette::collection::JaggedView<'_, $jty, L> {
+                    self.raw.jagged_view::<$jty>($Props::$JC.values, $Props::$JC.j, i)
+                }
+                /// Replace this item's jagged vector (resizes + copies;
+                /// shifts later items' values).
+                pub fn $js_(&mut self, i: usize, vals: &[$jty]) {
+                    self.raw.set_jagged_count($Props::$JC.j, i, vals.len());
+                    let r = self.raw.jagged_range($Props::$JC.j, i);
+                    for (n, v) in vals.iter().enumerate() {
+                        self.raw.set_value::<$jty>($Props::$JC.values, r.start + n, *v);
+                    }
+                }
+            )*
+
+            // ---- global accessors -----------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $gg(&self) -> $gty {
+                    self.raw.get_global::<$gty>($Props::$GC)
+                }
+                #[inline(always)]
+                pub fn $gs_(&mut self, v: $gty) {
+                    self.raw.set_global::<$gty>($Props::$GC, v)
+                }
+            )*
+
+            // ---- objects & proxies ----------------------------------
+
+            /// Append an owned object.
+            pub fn push(&mut self, o: &$Obj) -> usize {
+                let i = self.raw.push_default();
+                $(self.raw.set::<$pity>($Props::$PIC, i, o.$pig);)*
+                $(
+                    for k in 0..($aext as usize) {
+                        self.raw.set_k::<$aty>($Props::$AC, i, k, o.$ag[k]);
+                    }
+                )*
+                $(
+                    {
+                        let v0 = self.raw.append_values($Props::$JC.j, o.$jg.len());
+                        for (n, v) in o.$jg.iter().enumerate() {
+                            self.raw.set_value::<$jty>($Props::$JC.values, v0 + n, *v);
+                        }
+                    }
+                )*
+                i
+            }
+
+            /// Materialise item `i` as an owned object.
+            pub fn get_owned(&self, i: usize) -> $Obj {
+                $Obj {
+                    $($pig: self.raw.get::<$pity>($Props::$PIC, i),)*
+                    $($ag: {
+                        let mut a = [<$aty as Default>::default(); $aext as usize];
+                        for k in 0..($aext as usize) {
+                            a[k] = self.raw.get_k::<$aty>($Props::$AC, i, k);
+                        }
+                        a
+                    },)*
+                    $($jg: self
+                        .raw
+                        .jagged_view::<$jty>($Props::$JC.values, $Props::$JC.j, i)
+                        .to_vec(),)*
+                }
+            }
+
+            /// Immutable proxy into item `i` (paper: object proxies).
+            #[inline]
+            pub fn obj(&self, i: usize) -> $Ref<'_, L> {
+                assert!(i < self.len(), "object index out of bounds");
+                $Ref { col: self, i }
+            }
+
+            /// Mutable proxy into item `i`.
+            #[inline]
+            pub fn obj_mut(&mut self, i: usize) -> $Mut<'_, L> {
+                assert!(i < self.len(), "object index out of bounds");
+                $Mut { col: self, i }
+            }
+
+            /// Iterate object proxies.
+            pub fn iter(&self) -> impl Iterator<Item = $Ref<'_, L>> {
+                (0..self.len()).map(move |i| $Ref { col: self, i })
+            }
+        }
+
+        /// The AoS record of the `Items` tag: byte-identical to what the
+        /// `AoS` blob layout stores (the layout algorithm is `repr(C)`,
+        /// pinned by `blob::tests::aos_matches_handwritten_repr_c`).
+        #[repr(C)]
+        #[derive(Clone, Copy, Debug, Default, PartialEq)]
+        pub struct $Rec {
+            $(pub $pig: $pity,)*
+            $(pub $ag: [$aty; $aext as usize],)*
+        }
+
+        /// Split-borrowed whole-property columns (the paper's
+        /// collection-level accessors, listing 3: `energy()` returns the
+        /// entire column). Only layouts that store every per-item scalar
+        /// densely (SoA family) can produce this view.
+        /// Array properties appear as lane-major plane arrays: field
+        /// `name[k]` is the dense plane of lane `k`.
+        pub struct $Cols<'a> {
+            $(pub $pig: &'a mut [$pity],)*
+            $(pub $ag: [&'a mut [$aty]; $aext as usize],)*
+        }
+
+        #[allow(dead_code)]
+        impl<L: $crate::marionette::layout::Layout> $Col<L> {
+            /// Dense record view (AoS layouts): the whole `Items` tag as
+            /// a `&[Record]` — exactly a handwritten `Vec<Record>` view.
+            /// `None` when the layout is not record-dense.
+            pub fn records(&self) -> Option<&[$Rec]> {
+                let meta = $Props::FIRST_ITEM_META;
+                if (meta.record_size as usize) != ::std::mem::size_of::<$Rec>() {
+                    return None;
+                }
+                let p = self.raw.plane(meta, 0)?;
+                if p.stride != ::std::mem::size_of::<$Rec>() {
+                    return None;
+                }
+                let base = unsafe { p.base.sub(meta.aos_offset as usize) };
+                Some(unsafe {
+                    ::std::slice::from_raw_parts(base as *const $Rec, self.len())
+                })
+            }
+
+            /// Mutable record view; see [`Self::records`].
+            pub fn records_mut(&mut self) -> Option<&mut [$Rec]> {
+                let meta = $Props::FIRST_ITEM_META;
+                if (meta.record_size as usize) != ::std::mem::size_of::<$Rec>() {
+                    return None;
+                }
+                let len = self.len();
+                let p = self.raw.plane_mut(meta, 0)?;
+                if p.stride != ::std::mem::size_of::<$Rec>() {
+                    return None;
+                }
+                let base = unsafe { (p.base as *mut u8).sub(meta.aos_offset as usize) };
+                Some(unsafe {
+                    ::std::slice::from_raw_parts_mut(base as *mut $Rec, len)
+                })
+            }
+
+            /// Dense column view (SoA layouts): every per-item property as
+            /// a plain slice, split-borrowed simultaneously. `None` when
+            /// any per-item plane is not dense.
+            ///
+            /// Soundness: distinct fields (and distinct lanes of an array
+            /// property) occupy disjoint storage in every dense layout
+            /// (separate buffers in `SoAVec`, disjoint blob regions in
+            /// `SoABlob`), so handing out one `&mut` slice per plane from
+            /// one `&mut self` borrow cannot alias.
+            pub fn columns_mut(&mut self) -> Option<$Cols<'_>> {
+                let len = self.len();
+                $(
+                    let $pig = self.raw.plane_mut($Props::$PIC, 0)?;
+                    if $pig.stride != ::std::mem::size_of::<$pity>() {
+                        return None;
+                    }
+                )*
+                $(
+                    let mut $ag: [&mut [$aty]; $aext as usize] =
+                        ::std::array::from_fn(|_| Default::default());
+                    for k in 0..($aext as usize) {
+                        let p = self.raw.plane_mut($Props::$AC, k)?;
+                        if p.stride != ::std::mem::size_of::<$aty>() {
+                            return None;
+                        }
+                        $ag[k] = unsafe {
+                            ::std::slice::from_raw_parts_mut(p.base as *mut $aty, len)
+                        };
+                    }
+                )*
+                Some($Cols {
+                    $($pig: unsafe {
+                        ::std::slice::from_raw_parts_mut($pig.base as *mut $pity, len)
+                    },)*
+                    $($ag,)*
+                })
+            }
+        }
+
+        /// Owned object form (paper: `Object` with an owning layout).
+        #[derive(Clone, Debug, PartialEq)]
+        pub struct $Obj {
+            $(pub $pig: $pity,)*
+            $(pub $ag: [$aty; $aext as usize],)*
+            $(pub $jg: ::std::vec::Vec<$jty>,)*
+        }
+
+        impl Default for $Obj {
+            fn default() -> Self {
+                Self {
+                    $($pig: <$pity as Default>::default(),)*
+                    $($ag: [<$aty as Default>::default(); $aext as usize],)*
+                    $($jg: ::std::vec::Vec::new(),)*
+                }
+            }
+        }
+
+        /// Immutable object proxy (paper: proxy objects into collections).
+        #[derive(Clone, Copy)]
+        pub struct $Ref<'a, L: $crate::marionette::layout::Layout> {
+            col: &'a $Col<L>,
+            i: usize,
+        }
+
+        #[allow(dead_code)]
+        impl<'a, L: $crate::marionette::layout::Layout> $Ref<'a, L> {
+            #[inline(always)]
+            pub fn index(&self) -> usize { self.i }
+
+            $(
+                #[inline(always)]
+                pub fn $pig(&self) -> $pity { self.col.$pig(self.i) }
+            )*
+            $(
+                #[inline(always)]
+                pub fn $ag(&self, k: usize) -> $aty { self.col.$ag(self.i, k) }
+            )*
+            $(
+                #[inline]
+                pub fn $jg(
+                    &self,
+                ) -> $crate::marionette::collection::JaggedView<'a, $jty, L> {
+                    self.col.raw.jagged_view::<$jty>(
+                        $Props::$JC.values, $Props::$JC.j, self.i)
+                }
+            )*
+            $(
+                /// Sub-group view (paper: sub-group properties).
+                #[inline]
+                pub fn $grg(&self) -> $GRV<'a, L> {
+                    $GRV { col: self.col, i: self.i }
+                }
+            )*
+
+            /// Materialise as an owned object.
+            pub fn to_owned(&self) -> $Obj { self.col.get_owned(self.i) }
+        }
+
+        /// Mutable object proxy.
+        pub struct $Mut<'a, L: $crate::marionette::layout::Layout> {
+            col: &'a mut $Col<L>,
+            i: usize,
+        }
+
+        #[allow(dead_code)]
+        impl<'a, L: $crate::marionette::layout::Layout> $Mut<'a, L> {
+            #[inline(always)]
+            pub fn index(&self) -> usize { self.i }
+
+            $(
+                #[inline(always)]
+                pub fn $pig(&self) -> $pity { self.col.$pig(self.i) }
+                #[inline(always)]
+                pub fn $pis_(&mut self, v: $pity) {
+                    let i = self.i;
+                    self.col.$pis_(i, v)
+                }
+            )*
+            $(
+                #[inline(always)]
+                pub fn $ag(&self, k: usize) -> $aty { self.col.$ag(self.i, k) }
+                #[inline(always)]
+                pub fn $as_(&mut self, k: usize, v: $aty) {
+                    let i = self.i;
+                    self.col.$as_(i, k, v)
+                }
+            )*
+            $(
+                pub fn $js_(&mut self, vals: &[$jty]) {
+                    let i = self.i;
+                    self.col.$js_(i, vals)
+                }
+            )*
+            $(
+                /// Mutable sub-group view.
+                #[inline]
+                pub fn $grg(&mut self) -> $GRM<'_, L> {
+                    $GRM { col: &mut *self.col, i: self.i }
+                }
+            )*
+        }
+
+        $(
+            /// Immutable sub-group view.
+            #[derive(Clone, Copy)]
+            pub struct $GRV<'a, L: $crate::marionette::layout::Layout> {
+                col: &'a $Col<L>,
+                i: usize,
+            }
+
+            #[allow(dead_code)]
+            impl<'a, L: $crate::marionette::layout::Layout> $GRV<'a, L> {
+                $(
+                    #[inline(always)]
+                    pub fn $gig(&self) -> $gity { self.col.$gig(self.i) }
+                )*
+            }
+
+            /// Mutable sub-group view.
+            pub struct $GRM<'a, L: $crate::marionette::layout::Layout> {
+                col: &'a mut $Col<L>,
+                i: usize,
+            }
+
+            #[allow(dead_code)]
+            impl<'a, L: $crate::marionette::layout::Layout> $GRM<'a, L> {
+                $(
+                    #[inline(always)]
+                    pub fn $gig(&self) -> $gity { self.col.$gig(self.i) }
+                    #[inline(always)]
+                    pub fn $gis_(&mut self, v: $gity) {
+                        let i = self.i;
+                        self.col.$gis_(i, v)
+                    }
+                )*
+            }
+        )*
+    };
+}

@@ -1,0 +1,447 @@
+//! Memory contexts: where bytes live and how they are managed (paper §VII-A).
+//!
+//! A [`MemoryContext`] encapsulates allocate / deallocate / memset plus
+//! directional copies, parameterised by a per-allocation
+//! [`MemoryContext::Info`] (the paper's `ContextInfo`). Every collection
+//! carries the context info of its layout's context and can swap it at
+//! runtime via `update_memory_context_info` (reallocate + copy + free, as
+//! the paper describes).
+//!
+//! Provided contexts:
+//!
+//! * [`HostContext`] — plain host heap; the default.
+//! * [`AlignedContext`] — host heap with a minimum alignment (SIMD/page).
+//! * [`ArenaContext`] — bump allocation out of a shared arena; frees are
+//!   deferred to arena reset (typical per-event allocation pattern in
+//!   event processing frameworks).
+//! * [`CountingContext`] — host heap with full allocation/copy accounting;
+//!   used by tests, metrics and the transfer benchmarks.
+//! * [`StagingContext`] — the accelerator *staging* context of this
+//!   reproduction: host-accessible memory whose in/out copies are counted
+//!   as H2D/D2H DMA traffic. Device-resident data proper lives behind the
+//!   PJRT boundary (`runtime::devmem`); staging is the pinned-buffer
+//!   analogue the figures' transfer costs flow through (DESIGN.md §2).
+//!
+//! All methods are associated functions taking `&Info`, mirroring the
+//! paper's static, compile-time dispatch (no `dyn` anywhere on hot paths).
+
+use std::alloc::Layout as AllocLayout;
+use std::fmt;
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Abstraction over a way of managing memory (paper: memory context).
+///
+/// # Safety-relevant contract
+/// `allocate(info, layout)` returns memory valid for `layout.size()` bytes
+/// with `layout.align()` alignment, or a dangling pointer for zero-size
+/// requests; `deallocate` must be called with the same layout.
+pub trait MemoryContext: 'static {
+    /// Runtime information carried by each allocation (paper: ContextInfo).
+    type Info: Clone + Default + Send + Sync + fmt::Debug;
+
+    /// Human-readable context name (diagnostics, bench labels).
+    const NAME: &'static str;
+
+    /// Whether the CPU may dereference pointers from this context
+    /// directly. All in-tree contexts are host-accessible; the PJRT
+    /// device residency in `runtime::devmem` is not expressed as a
+    /// `MemoryContext` (it has no stable byte pointers at all).
+    const HOST_ACCESSIBLE: bool = true;
+
+    fn allocate(info: &Self::Info, layout: AllocLayout) -> NonNull<u8>;
+
+    /// # Safety
+    /// `ptr` must have been returned by `allocate` with the same `layout`.
+    unsafe fn deallocate(info: &Self::Info, ptr: NonNull<u8>, layout: AllocLayout);
+
+    /// # Safety
+    /// `[ptr, ptr+len)` must be writable memory of this context.
+    unsafe fn memset(info: &Self::Info, ptr: *mut u8, len: usize, value: u8) {
+        let _ = info;
+        std::ptr::write_bytes(ptr, value, len);
+    }
+
+    /// Copy host memory into this context ("upload").
+    ///
+    /// # Safety
+    /// `src..src+len` readable host memory, `dst..dst+len` writable memory
+    /// of this context; ranges must not overlap.
+    unsafe fn copy_in(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        let _ = info;
+        std::ptr::copy_nonoverlapping(src, dst, len);
+    }
+
+    /// Copy memory of this context out to host memory ("download").
+    ///
+    /// # Safety
+    /// As `copy_in`, with directions swapped.
+    unsafe fn copy_out(info: &Self::Info, src: *const u8, dst: *mut u8, len: usize) {
+        let _ = info;
+        std::ptr::copy_nonoverlapping(src, dst, len);
+    }
+
+    /// Copy within this context; ranges may overlap (used by the
+    /// overlapping-range transfer variants that back insert/erase).
+    ///
+    /// # Safety
+    /// Both ranges must be valid memory of this context.
+    unsafe fn copy_within(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        let _ = info;
+        std::ptr::copy(src, dst, len);
+    }
+
+    /// Accounting-only hook: `len` bytes of this context were read by a
+    /// cross-context transfer whose byte movement was performed by the
+    /// destination's `copy_in`. Default: no accounting.
+    fn note_read(info: &Self::Info, len: usize) {
+        let _ = (info, len);
+    }
+}
+
+fn host_alloc(layout: AllocLayout) -> NonNull<u8> {
+    if layout.size() == 0 {
+        // Zero-size: dangling, suitably aligned.
+        return unsafe { NonNull::new_unchecked(layout.align() as *mut u8) };
+    }
+    let ptr = unsafe { std::alloc::alloc(layout) };
+    NonNull::new(ptr).unwrap_or_else(|| std::alloc::handle_alloc_error(layout))
+}
+
+unsafe fn host_dealloc(ptr: NonNull<u8>, layout: AllocLayout) {
+    if layout.size() != 0 {
+        std::alloc::dealloc(ptr.as_ptr(), layout);
+    }
+}
+
+/// Plain host heap. The default context of every layout.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostContext;
+
+impl MemoryContext for HostContext {
+    type Info = ();
+    const NAME: &'static str = "host";
+
+    fn allocate(_: &(), layout: AllocLayout) -> NonNull<u8> {
+        host_alloc(layout)
+    }
+
+    unsafe fn deallocate(_: &(), ptr: NonNull<u8>, layout: AllocLayout) {
+        host_dealloc(ptr, layout);
+    }
+}
+
+/// Host heap with a minimum alignment `A` (e.g. 64 for cache lines /
+/// AVX-512, 4096 for pages). `A` must be a power of two.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlignedContext<const A: usize>;
+
+impl<const A: usize> MemoryContext for AlignedContext<A> {
+    type Info = ();
+    const NAME: &'static str = "aligned";
+
+    fn allocate(_: &(), layout: AllocLayout) -> NonNull<u8> {
+        let layout = layout.align_to(A).expect("invalid alignment");
+        host_alloc(layout)
+    }
+
+    unsafe fn deallocate(_: &(), ptr: NonNull<u8>, layout: AllocLayout) {
+        let layout = layout.align_to(A).expect("invalid alignment");
+        host_dealloc(ptr, layout);
+    }
+}
+
+/// Allocation statistics shared by [`CountingContext`] allocations.
+#[derive(Debug, Default)]
+pub struct CountingStats {
+    pub allocs: AtomicUsize,
+    pub deallocs: AtomicUsize,
+    pub bytes_allocated: AtomicUsize,
+    pub bytes_copied_in: AtomicUsize,
+    pub bytes_copied_out: AtomicUsize,
+    pub memsets: AtomicUsize,
+}
+
+impl CountingStats {
+    pub fn live_allocs(&self) -> isize {
+        self.allocs.load(Ordering::Relaxed) as isize
+            - self.deallocs.load(Ordering::Relaxed) as isize
+    }
+}
+
+/// Context info of [`CountingContext`]: a shared stats block.
+#[derive(Clone, Debug, Default)]
+pub struct CountingInfo(pub Arc<CountingStats>);
+
+/// Host heap with allocation/copy accounting (tests, metrics, benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CountingContext;
+
+impl MemoryContext for CountingContext {
+    type Info = CountingInfo;
+    const NAME: &'static str = "counting";
+
+    fn allocate(info: &CountingInfo, layout: AllocLayout) -> NonNull<u8> {
+        info.0.allocs.fetch_add(1, Ordering::Relaxed);
+        info.0.bytes_allocated.fetch_add(layout.size(), Ordering::Relaxed);
+        host_alloc(layout)
+    }
+
+    unsafe fn deallocate(info: &CountingInfo, ptr: NonNull<u8>, layout: AllocLayout) {
+        info.0.deallocs.fetch_add(1, Ordering::Relaxed);
+        host_dealloc(ptr, layout);
+    }
+
+    unsafe fn memset(info: &CountingInfo, ptr: *mut u8, len: usize, value: u8) {
+        info.0.memsets.fetch_add(1, Ordering::Relaxed);
+        std::ptr::write_bytes(ptr, value, len);
+    }
+
+    unsafe fn copy_in(info: &CountingInfo, dst: *mut u8, src: *const u8, len: usize) {
+        info.0.bytes_copied_in.fetch_add(len, Ordering::Relaxed);
+        std::ptr::copy_nonoverlapping(src, dst, len);
+    }
+
+    unsafe fn copy_out(info: &CountingInfo, src: *const u8, dst: *mut u8, len: usize) {
+        info.0.bytes_copied_out.fetch_add(len, Ordering::Relaxed);
+        std::ptr::copy_nonoverlapping(src, dst, len);
+    }
+
+    fn note_read(info: &CountingInfo, len: usize) {
+        info.0.bytes_copied_out.fetch_add(len, Ordering::Relaxed);
+    }
+}
+
+/// A bump arena: allocations are O(1) pointer bumps; individual frees are
+/// no-ops; all memory is released when the arena is dropped (or `reset`).
+#[derive(Debug, Default)]
+pub struct Arena {
+    chunks: Mutex<ArenaChunks>,
+}
+
+#[derive(Debug, Default)]
+struct ArenaChunks {
+    chunks: Vec<(NonNull<u8>, AllocLayout, usize)>, // (base, layout, used)
+}
+
+// SAFETY: chunk bookkeeping is protected by the mutex; handed-out pointers
+// carry their own aliasing discipline (same as any allocator).
+unsafe impl Send for ArenaChunks {}
+
+const ARENA_CHUNK: usize = 1 << 20; // 1 MiB
+
+impl Arena {
+    pub fn new() -> Arc<Arena> {
+        Arc::new(Arena::default())
+    }
+
+    fn bump(&self, layout: AllocLayout) -> NonNull<u8> {
+        let mut g = self.chunks.lock().unwrap();
+        if let Some((base, chunk_layout, used)) = g.chunks.last_mut() {
+            // Align the absolute address, not just the offset: the chunk
+            // base may be less aligned than this request.
+            let addr = base.as_ptr() as usize + *used;
+            let off = super::schema::align_up(addr, layout.align()) - base.as_ptr() as usize;
+            if off + layout.size() <= chunk_layout.size() {
+                *used = off + layout.size();
+                return unsafe { NonNull::new_unchecked(base.as_ptr().add(off)) };
+            }
+        }
+        let chunk_size = ARENA_CHUNK.max(layout.size());
+        let chunk_layout =
+            AllocLayout::from_size_align(chunk_size, layout.align().max(16)).unwrap();
+        let base = host_alloc(chunk_layout);
+        g.chunks.push((base, chunk_layout, layout.size()));
+        base
+    }
+
+    /// Bytes currently parked in the arena (sum of chunk sizes).
+    pub fn capacity(&self) -> usize {
+        self.chunks.lock().unwrap().chunks.iter().map(|(_, l, _)| l.size()).sum()
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        let g = self.chunks.get_mut().unwrap();
+        for (ptr, layout, _) in g.chunks.drain(..) {
+            unsafe { host_dealloc(ptr, layout) };
+        }
+    }
+}
+
+/// Context info of [`ArenaContext`]: which arena to bump from.
+#[derive(Clone, Debug)]
+pub struct ArenaInfo(pub Arc<Arena>);
+
+impl Default for ArenaInfo {
+    fn default() -> Self {
+        ArenaInfo(Arena::new())
+    }
+}
+
+/// Bump allocation out of a shared [`Arena`]; deallocation is deferred.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaContext;
+
+impl MemoryContext for ArenaContext {
+    type Info = ArenaInfo;
+    const NAME: &'static str = "arena";
+
+    fn allocate(info: &ArenaInfo, layout: AllocLayout) -> NonNull<u8> {
+        if layout.size() == 0 {
+            return unsafe { NonNull::new_unchecked(layout.align() as *mut u8) };
+        }
+        info.0.bump(layout)
+    }
+
+    unsafe fn deallocate(_: &ArenaInfo, _ptr: NonNull<u8>, _layout: AllocLayout) {
+        // Deferred to arena drop/reset.
+    }
+}
+
+/// DMA accounting shared by [`StagingContext`] allocations.
+#[derive(Debug, Default)]
+pub struct TransferCounters {
+    pub h2d_bytes: AtomicUsize,
+    pub d2h_bytes: AtomicUsize,
+    pub h2d_calls: AtomicUsize,
+    pub d2h_calls: AtomicUsize,
+}
+
+/// Context info of [`StagingContext`].
+#[derive(Clone, Debug, Default)]
+pub struct StagingInfo {
+    pub counters: Arc<TransferCounters>,
+}
+
+/// The accelerator staging context: host-accessible pinned-buffer analogue
+/// whose directional copies are accounted as DMA traffic. Collections in
+/// this context are what `runtime::executor` uploads to the PJRT device.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StagingContext;
+
+impl MemoryContext for StagingContext {
+    type Info = StagingInfo;
+    const NAME: &'static str = "staging";
+
+    fn allocate(info: &StagingInfo, layout: AllocLayout) -> NonNull<u8> {
+        let _ = info;
+        // Page-align staging buffers, as a pinned allocator would.
+        let layout = layout.align_to(64).expect("invalid alignment");
+        host_alloc(layout)
+    }
+
+    unsafe fn deallocate(_: &StagingInfo, ptr: NonNull<u8>, layout: AllocLayout) {
+        let layout = layout.align_to(64).expect("invalid alignment");
+        host_dealloc(ptr, layout);
+    }
+
+    unsafe fn copy_in(info: &StagingInfo, dst: *mut u8, src: *const u8, len: usize) {
+        info.counters.h2d_bytes.fetch_add(len, Ordering::Relaxed);
+        info.counters.h2d_calls.fetch_add(1, Ordering::Relaxed);
+        std::ptr::copy_nonoverlapping(src, dst, len);
+    }
+
+    unsafe fn copy_out(info: &StagingInfo, src: *const u8, dst: *mut u8, len: usize) {
+        info.counters.d2h_bytes.fetch_add(len, Ordering::Relaxed);
+        info.counters.d2h_calls.fetch_add(1, Ordering::Relaxed);
+        std::ptr::copy_nonoverlapping(src, dst, len);
+    }
+
+    fn note_read(info: &StagingInfo, len: usize) {
+        info.counters.d2h_bytes.fetch_add(len, Ordering::Relaxed);
+        info.counters.d2h_calls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<C: MemoryContext>(info: &C::Info) {
+        let layout = AllocLayout::from_size_align(1024, 8).unwrap();
+        let ptr = C::allocate(info, layout);
+        unsafe {
+            C::memset(info, ptr.as_ptr(), 1024, 0xAB);
+            let src: Vec<u8> = (0..=255u8).collect();
+            C::copy_in(info, ptr.as_ptr(), src.as_ptr(), 256);
+            let mut out = vec![0u8; 1024];
+            C::copy_out(info, ptr.as_ptr(), out.as_mut_ptr(), 1024);
+            assert_eq!(&out[..256], &src[..]);
+            assert!(out[256..].iter().all(|&b| b == 0xAB));
+            C::deallocate(info, ptr, layout);
+        }
+    }
+
+    #[test]
+    fn host_roundtrip() {
+        roundtrip::<HostContext>(&());
+    }
+
+    #[test]
+    fn aligned_returns_aligned() {
+        let layout = AllocLayout::from_size_align(100, 4).unwrap();
+        let ptr = AlignedContext::<4096>::allocate(&(), layout);
+        assert_eq!(ptr.as_ptr() as usize % 4096, 0);
+        unsafe { AlignedContext::<4096>::deallocate(&(), ptr, layout) };
+        roundtrip::<AlignedContext<64>>(&());
+    }
+
+    #[test]
+    fn counting_counts() {
+        let info = CountingInfo::default();
+        roundtrip::<CountingContext>(&info);
+        assert_eq!(info.0.allocs.load(Ordering::Relaxed), 1);
+        assert_eq!(info.0.deallocs.load(Ordering::Relaxed), 1);
+        assert_eq!(info.0.bytes_allocated.load(Ordering::Relaxed), 1024);
+        assert_eq!(info.0.bytes_copied_in.load(Ordering::Relaxed), 256);
+        assert_eq!(info.0.bytes_copied_out.load(Ordering::Relaxed), 1024);
+        assert_eq!(info.0.live_allocs(), 0);
+    }
+
+    #[test]
+    fn arena_bump_and_reuse() {
+        let info = ArenaInfo::default();
+        roundtrip::<ArenaContext>(&info);
+        let l8 = AllocLayout::from_size_align(8, 8).unwrap();
+        let a = ArenaContext::allocate(&info, l8);
+        let b = ArenaContext::allocate(&info, l8);
+        // Consecutive bumps are adjacent.
+        assert_eq!(b.as_ptr() as usize - a.as_ptr() as usize, 8);
+        // One chunk serves both.
+        assert_eq!(info.0.capacity(), ARENA_CHUNK);
+        // Oversized allocations get their own chunk.
+        let big = AllocLayout::from_size_align(2 * ARENA_CHUNK, 8).unwrap();
+        let c = ArenaContext::allocate(&info, big);
+        let _ = c; // allocation succeeded (would have aborted otherwise)
+        assert_eq!(info.0.capacity(), 3 * ARENA_CHUNK);
+    }
+
+    #[test]
+    fn arena_alignment_respected() {
+        let info = ArenaInfo::default();
+        let _ = ArenaContext::allocate(&info, AllocLayout::from_size_align(3, 1).unwrap());
+        let p = ArenaContext::allocate(&info, AllocLayout::from_size_align(64, 64).unwrap());
+        assert_eq!(p.as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn staging_accounts_dma() {
+        let info = StagingInfo::default();
+        roundtrip::<StagingContext>(&info);
+        assert_eq!(info.counters.h2d_bytes.load(Ordering::Relaxed), 256);
+        assert_eq!(info.counters.d2h_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(info.counters.h2d_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(info.counters.d2h_calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_size_allocations_are_dangling() {
+        let layout = AllocLayout::from_size_align(0, 8).unwrap();
+        let p = HostContext::allocate(&(), layout);
+        assert_eq!(p.as_ptr() as usize, 8);
+        unsafe { HostContext::deallocate(&(), p, layout) };
+    }
+}

@@ -1,0 +1,160 @@
+//! Plain-old-data element types storable in Marionette collections.
+//!
+//! The paper's properties store native C++ types; here the same role is
+//! played by [`Pod`] — types that are `Copy`, have a stable byte
+//! representation, and map onto a [`Dtype`] the device runtime understands
+//! (the AOT artifacts' input/output dtypes, see `runtime::artifact`).
+
+/// Element type tags. The numeric ones match the dtype names emitted by
+/// `python/compile/aot.py` into `artifacts/manifest.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+    I8,
+    U8,
+    I16,
+    U16,
+    I32,
+    U32,
+    I64,
+    U64,
+}
+
+impl Dtype {
+    /// Size of one element in bytes.
+    pub const fn size(self) -> usize {
+        match self {
+            Dtype::I8 | Dtype::U8 => 1,
+            Dtype::I16 | Dtype::U16 => 2,
+            Dtype::F32 | Dtype::I32 | Dtype::U32 => 4,
+            Dtype::F64 | Dtype::I64 | Dtype::U64 => 8,
+        }
+    }
+
+    /// Alignment of one element in bytes (same as size for primitives).
+    pub const fn align(self) -> usize {
+        self.size()
+    }
+
+    /// The manifest name of this dtype (`numpy` convention).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "float32",
+            Dtype::F64 => "float64",
+            Dtype::I8 => "int8",
+            Dtype::U8 => "uint8",
+            Dtype::I16 => "int16",
+            Dtype::U16 => "uint16",
+            Dtype::I32 => "int32",
+            Dtype::U32 => "uint32",
+            Dtype::I64 => "int64",
+            Dtype::U64 => "uint64",
+        }
+    }
+
+    /// Parse a manifest dtype name.
+    pub fn from_name(name: &str) -> Option<Dtype> {
+        Some(match name {
+            "float32" => Dtype::F32,
+            "float64" => Dtype::F64,
+            "int8" => Dtype::I8,
+            "uint8" => Dtype::U8,
+            "int16" => Dtype::I16,
+            "uint16" => Dtype::U16,
+            "int32" => Dtype::I32,
+            "uint32" => Dtype::U32,
+            "int64" => Dtype::I64,
+            "uint64" => Dtype::U64,
+            _ => return None,
+        })
+    }
+}
+
+/// Types storable as Marionette property elements.
+///
+/// # Safety
+/// Implementors must be inhabited `Copy` types with no padding, no
+/// interior mutability and no invalid bit patterns, whose size and
+/// alignment equal `DTYPE.size()` / `DTYPE.align()`.
+pub unsafe trait Pod:
+    Copy + Default + Send + Sync + PartialEq + std::fmt::Debug + 'static
+{
+    /// Runtime type tag for this element type.
+    const DTYPE: Dtype;
+}
+
+macro_rules! impl_pod {
+    ($($t:ty => $d:expr),* $(,)?) => {
+        $(
+            unsafe impl Pod for $t {
+                const DTYPE: Dtype = $d;
+            }
+        )*
+    };
+}
+
+impl_pod! {
+    f32 => Dtype::F32,
+    f64 => Dtype::F64,
+    i8  => Dtype::I8,
+    u8  => Dtype::U8,
+    i16 => Dtype::I16,
+    u16 => Dtype::U16,
+    i32 => Dtype::I32,
+    u32 => Dtype::U32,
+    i64 => Dtype::I64,
+    u64 => Dtype::U64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_rust_layout() {
+        assert_eq!(Dtype::F32.size(), std::mem::size_of::<f32>());
+        assert_eq!(Dtype::U8.size(), std::mem::size_of::<u8>());
+        assert_eq!(Dtype::I64.size(), std::mem::size_of::<i64>());
+        assert_eq!(Dtype::U16.size(), std::mem::size_of::<u16>());
+        assert_eq!(<f32 as Pod>::DTYPE, Dtype::F32);
+        assert_eq!(<u64 as Pod>::DTYPE, Dtype::U64);
+    }
+
+    #[test]
+    fn alignment_equals_size_for_primitives() {
+        for d in [
+            Dtype::F32,
+            Dtype::F64,
+            Dtype::I8,
+            Dtype::U8,
+            Dtype::I16,
+            Dtype::U16,
+            Dtype::I32,
+            Dtype::U32,
+            Dtype::I64,
+            Dtype::U64,
+        ] {
+            assert_eq!(d.align(), d.size());
+        }
+    }
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for d in [
+            Dtype::F32,
+            Dtype::F64,
+            Dtype::I8,
+            Dtype::U8,
+            Dtype::I16,
+            Dtype::U16,
+            Dtype::I32,
+            Dtype::U32,
+            Dtype::I64,
+            Dtype::U64,
+        ] {
+            assert_eq!(Dtype::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::from_name("complex64"), None);
+    }
+}

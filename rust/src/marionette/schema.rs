@@ -1,0 +1,644 @@
+//! Property schemas: the compile-time description of a collection.
+//!
+//! A schema is the flattened form of the paper's property list (§V–§VI):
+//! sub-groups are flattened into their parents, every per-item scalar or
+//! fixed array becomes one [`Field`], jagged vectors contribute a
+//! prefix-sum field plus a values field under a dedicated *size tag*, and
+//! global properties live under the `Global` tag.
+//!
+//! Size tags (paper §VI, "differently sized arrays may coexist within a
+//! collection"): each field belongs to exactly one tag, and all fields of
+//! a tag share one logical length:
+//!
+//! | tag            | length                      | used by                |
+//! |----------------|-----------------------------|------------------------|
+//! | `Items`        | number of objects           | per-item + array props |
+//! | `ItemsPlusOne` | objects + 1                 | jagged prefix sums     |
+//! | `Global`       | 1                           | global properties      |
+//! | `Values(j)`    | total values of jagged *j*  | jagged value arrays    |
+//!
+//! [`FieldMeta`] carries everything a layout holder needs to address an
+//! element: element size, extent, offset within the tag's AoS record, the
+//! record size, and the field's slot within its tag. The same computation
+//! exists twice on purpose: a `const fn` path ([`compute_metas`]) used by
+//! `marionette_collection!` so generated accessors see compile-time
+//! constants, and a runtime path used by [`SchemaBuilder`]; a unit test
+//! pins them equal.
+
+use super::pod::{Dtype, Pod};
+
+/// Identifies a field within a schema (index into `Schema::fields`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FieldId(pub u32);
+
+/// A size-tag slot. `Items = 0`, `ItemsPlusOne = 1`, `Global = 2`,
+/// `Values(j) = 3 + j`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TagId(pub u32);
+
+impl TagId {
+    pub const ITEMS: TagId = TagId(0);
+    pub const ITEMS_PLUS_ONE: TagId = TagId(1);
+    pub const GLOBAL: TagId = TagId(2);
+
+    /// Tag of the values of jagged property `j`.
+    pub const fn values(j: u32) -> TagId {
+        TagId(3 + j)
+    }
+
+    pub const fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Is this a jagged-values tag?
+    pub const fn is_values(self) -> bool {
+        self.0 >= 3
+    }
+}
+
+/// Semantic kind of a field (drives collection-level maintenance such as
+/// prefix-sum fix-ups on insert/erase).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldKind {
+    /// One element (or `extent` elements) per object.
+    PerItem,
+    /// Prefix-sum of jagged property `j` (length = items + 1).
+    JaggedPrefix(u32),
+    /// Values of jagged property `j` (length = total values of `j`).
+    JaggedValues(u32),
+    /// One element per collection.
+    Global,
+}
+
+/// Maximum number of size tags (3 fixed + up to 13 jagged properties).
+pub const MAX_TAGS: usize = 16;
+
+/// Kind of a [`FieldDesc`] (jagged tags are assigned by [`compute_metas`]
+/// in declaration order, so descriptions never carry explicit indices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DescKind {
+    PerItem,
+    JaggedPrefix,
+    JaggedValues,
+    Global,
+}
+
+/// Compile-time description of one field, input to the layout computation.
+#[derive(Clone, Copy, Debug)]
+pub struct FieldDesc {
+    pub dtype: Dtype,
+    pub kind: DescKind,
+    pub extent: u32,
+}
+
+impl FieldDesc {
+    pub const fn per_item(dtype: Dtype) -> FieldDesc {
+        FieldDesc { dtype, kind: DescKind::PerItem, extent: 1 }
+    }
+
+    pub const fn array(dtype: Dtype, extent: u32) -> FieldDesc {
+        FieldDesc { dtype, kind: DescKind::PerItem, extent }
+    }
+
+    /// Prefix-sum field; must immediately precede its values field(s).
+    pub const fn jagged_prefix(dtype: Dtype) -> FieldDesc {
+        FieldDesc { dtype, kind: DescKind::JaggedPrefix, extent: 1 }
+    }
+
+    /// Values field of the most recently declared jagged prefix.
+    pub const fn jagged_values(dtype: Dtype) -> FieldDesc {
+        FieldDesc { dtype, kind: DescKind::JaggedValues, extent: 1 }
+    }
+
+    pub const fn global(dtype: Dtype) -> FieldDesc {
+        FieldDesc { dtype, kind: DescKind::Global, extent: 1 }
+    }
+
+    /// Tag this desc lands in, given how many jagged prefixes precede it
+    /// (inclusive of itself for values fields).
+    const fn tag(self, jagged_seen: u32) -> TagId {
+        match self.kind {
+            DescKind::PerItem => TagId::ITEMS,
+            DescKind::JaggedPrefix => TagId::ITEMS_PLUS_ONE,
+            DescKind::JaggedValues => TagId::values(jagged_seen - 1),
+            DescKind::Global => TagId::GLOBAL,
+        }
+    }
+}
+
+/// Everything a layout holder needs to address elements of one field.
+///
+/// Addressing conventions (element `i`, array lane `k`, capacity `cap`):
+///
+/// * AoS blob:    `i * record_size + aos_offset + k * size`
+/// * AoSoA blob:  `(i / K) * K * record_size + K * aos_offset
+///                 + (k * K + i % K) * size`
+/// * SoA vec:     buffer `index`, offset `(k * cap + i) * size`
+/// * SoA blob:    `base[soa_slot] + (k * cap + i) * size` with `base`
+///                recomputed per capacity (see `blob::SoABlobScheme`)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FieldMeta {
+    /// Global field slot within the schema.
+    pub index: u32,
+    /// Size-tag slot.
+    pub tag: u32,
+    /// Element size in bytes.
+    pub size: u32,
+    /// Element alignment in bytes.
+    pub align: u32,
+    /// Array extent (1 for scalars).
+    pub extent: u32,
+    /// Byte offset of the field's first element within the tag's AoS record.
+    pub aos_offset: u32,
+    /// Padded AoS record size of the field's tag.
+    pub record_size: u32,
+    /// Slot of this field within its tag's field list.
+    pub tag_slot: u32,
+}
+
+impl FieldMeta {
+    pub const ZERO: FieldMeta = FieldMeta {
+        index: 0,
+        tag: 0,
+        size: 0,
+        align: 0,
+        extent: 0,
+        aos_offset: 0,
+        record_size: 0,
+        tag_slot: 0,
+    };
+
+    pub const fn tag_id(&self) -> TagId {
+        TagId(self.tag)
+    }
+
+    pub const fn field_id(&self) -> FieldId {
+        FieldId(self.index)
+    }
+
+    /// Bytes one element contributes to its tag's AoS record.
+    pub const fn record_bytes(&self) -> usize {
+        (self.size * self.extent) as usize
+    }
+}
+
+pub const fn align_up(x: usize, a: usize) -> usize {
+    (x + a - 1) / a * a
+}
+
+/// Const layout computation for `marionette_collection!`: identical to the
+/// runtime path in [`SchemaBuilder::build`] (pinned by a test below).
+pub const fn compute_metas<const N: usize>(descs: [FieldDesc; N]) -> [FieldMeta; N] {
+    let mut metas = [FieldMeta::ZERO; N];
+    let mut tag_cursor = [0usize; MAX_TAGS];
+    let mut tag_align = [1usize; MAX_TAGS];
+    let mut tag_slots = [0u32; MAX_TAGS];
+    let mut jagged_seen = 0u32;
+
+    // First pass: assign offsets within each tag's record.
+    let mut f = 0;
+    while f < N {
+        let d = descs[f];
+        if matches!(d.kind, DescKind::JaggedPrefix) {
+            jagged_seen += 1;
+        }
+        let tag = d.tag(jagged_seen);
+        let t = tag.index();
+        assert!(t < MAX_TAGS, "too many jagged properties");
+        let size = d.dtype.size();
+        let align = d.dtype.align();
+        let off = align_up(tag_cursor[t], align);
+        metas[f] = FieldMeta {
+            index: f as u32,
+            tag: tag.0,
+            size: size as u32,
+            align: align as u32,
+            extent: d.extent,
+            aos_offset: off as u32,
+            record_size: 0, // second pass
+            tag_slot: tag_slots[t],
+        };
+        tag_cursor[t] = off + size * d.extent as usize;
+        if align > tag_align[t] {
+            tag_align[t] = align;
+        }
+        tag_slots[t] += 1;
+        f += 1;
+    }
+
+    // Second pass: pad each tag's record to its alignment.
+    let mut f = 0;
+    while f < N {
+        let t = metas[f].tag as usize;
+        metas[f].record_size = align_up(tag_cursor[t], tag_align[t]) as u32;
+        f += 1;
+    }
+    metas
+}
+
+/// Const string equality (for [`meta_by_name`]).
+const fn str_eq(a: &str, b: &str) -> bool {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut i = 0;
+    while i < a.len() {
+        if a[i] != b[i] {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+/// Look up a field's meta by name at compile time (used by the property
+/// constants generated by `marionette_collection!`). Panics (a compile
+/// error in const context) if the name is absent.
+pub const fn meta_by_name(metas: &[FieldMeta], names: &[&str], name: &str) -> FieldMeta {
+    let mut i = 0;
+    while i < names.len() {
+        if str_eq(names[i], name) {
+            return metas[i];
+        }
+        i += 1;
+    }
+    panic!("marionette: no field with the requested name");
+}
+
+/// Handle to a jagged property: its values-field meta plus the jagged
+/// index (recovered from the values tag).
+#[derive(Clone, Copy, Debug)]
+pub struct JaggedProp {
+    pub values: FieldMeta,
+    pub j: u32,
+}
+
+impl JaggedProp {
+    pub const fn from_meta(values: FieldMeta) -> JaggedProp {
+        JaggedProp { values, j: values.tag - 3 }
+    }
+}
+
+/// One flattened property.
+#[derive(Clone, Debug)]
+pub struct Field {
+    pub name: String,
+    pub dtype: Dtype,
+    pub kind: FieldKind,
+    pub extent: u32,
+}
+
+impl Field {
+    pub const fn tag(&self) -> TagId {
+        match self.kind {
+            FieldKind::PerItem => TagId::ITEMS,
+            FieldKind::JaggedPrefix(_) => TagId::ITEMS_PLUS_ONE,
+            FieldKind::JaggedValues(j) => TagId::values(j),
+            FieldKind::Global => TagId::GLOBAL,
+        }
+    }
+}
+
+/// Per-tag record layout, shared by all blob schemes.
+#[derive(Clone, Debug, Default)]
+pub struct TagLayout {
+    /// Fields of this tag, in declaration order.
+    pub fields: Vec<FieldId>,
+    /// Padded record size in bytes (0 if the tag has no fields).
+    pub record_size: usize,
+    /// Record alignment in bytes.
+    pub record_align: usize,
+}
+
+/// A complete, immutable collection description.
+#[derive(Debug)]
+pub struct Schema {
+    fields: Vec<Field>,
+    metas: Vec<FieldMeta>,
+    tags: Vec<TagLayout>,
+    /// Jagged property index -> (prefix field, values fields).
+    jagged: Vec<(FieldId, Vec<FieldId>)>,
+    name: String,
+}
+
+impl Schema {
+    pub fn builder(name: &str) -> SchemaBuilder {
+        SchemaBuilder { name: name.to_string(), fields: Vec::new(), num_jagged: 0 }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_fields(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn num_tags(&self) -> usize {
+        self.tags.len()
+    }
+
+    pub fn num_jagged(&self) -> usize {
+        self.jagged.len()
+    }
+
+    pub fn field(&self, id: FieldId) -> &Field {
+        &self.fields[id.0 as usize]
+    }
+
+    pub fn fields(&self) -> impl Iterator<Item = (FieldId, &Field)> {
+        self.fields.iter().enumerate().map(|(i, f)| (FieldId(i as u32), f))
+    }
+
+    pub fn meta(&self, id: FieldId) -> FieldMeta {
+        self.metas[id.0 as usize]
+    }
+
+    pub fn metas(&self) -> &[FieldMeta] {
+        &self.metas
+    }
+
+    pub fn tag_layout(&self, tag: TagId) -> &TagLayout {
+        &self.tags[tag.index()]
+    }
+
+    pub fn tag_layouts(&self) -> &[TagLayout] {
+        &self.tags
+    }
+
+    /// Prefix-sum field of jagged property `j`.
+    pub fn jagged_prefix(&self, j: u32) -> FieldId {
+        self.jagged[j as usize].0
+    }
+
+    /// Value fields of jagged property `j`.
+    pub fn jagged_values(&self, j: u32) -> &[FieldId] {
+        &self.jagged[j as usize].1
+    }
+
+    /// Field id by name (linear scan; not for hot paths).
+    pub fn field_by_name(&self, name: &str) -> Option<FieldId> {
+        self.fields.iter().position(|f| f.name == name).map(|i| FieldId(i as u32))
+    }
+
+    /// Structural equality: same field names, dtypes, kinds and extents.
+    /// Collections may only be transferred between structurally equal
+    /// schemas (paper: transfers connect representations of the *same*
+    /// property list).
+    pub fn same_structure(&self, other: &Schema) -> bool {
+        self.fields.len() == other.fields.len()
+            && self
+                .fields
+                .iter()
+                .zip(&other.fields)
+                .all(|(a, b)| {
+                    a.name == b.name
+                        && a.dtype == b.dtype
+                        && a.kind == b.kind
+                        && a.extent == b.extent
+                })
+    }
+}
+
+/// Builds a [`Schema`] at runtime (the dynamic twin of the macro's const
+/// path; used by `RawCollection` tests, tooling and the transfer tests).
+pub struct SchemaBuilder {
+    name: String,
+    fields: Vec<Field>,
+    num_jagged: u32,
+}
+
+impl SchemaBuilder {
+    /// Add a per-item scalar property.
+    pub fn per_item<T: Pod>(mut self, name: &str) -> Self {
+        self.fields.push(Field {
+            name: name.to_string(),
+            dtype: T::DTYPE,
+            kind: FieldKind::PerItem,
+            extent: 1,
+        });
+        self
+    }
+
+    /// Add a fixed-extent array property (stored as `extent` separate
+    /// arrays in SoA layouts, inline `[T; extent]` in AoS records).
+    pub fn array<T: Pod>(mut self, name: &str, extent: u32) -> Self {
+        assert!(extent >= 1, "array extent must be >= 1");
+        self.fields.push(Field {
+            name: name.to_string(),
+            dtype: T::DTYPE,
+            kind: FieldKind::PerItem,
+            extent,
+        });
+        self
+    }
+
+    /// Add a simple jagged vector property: a dynamic number of `T` values
+    /// per object, with `Idx`-typed prefix sums. Returns the builder; the
+    /// jagged index is assigned in declaration order.
+    pub fn jagged<T: Pod, Idx: Pod>(mut self, name: &str) -> Self {
+        let j = self.num_jagged;
+        self.fields.push(Field {
+            name: format!("{name}__prefix"),
+            dtype: Idx::DTYPE,
+            kind: FieldKind::JaggedPrefix(j),
+            extent: 1,
+        });
+        self.fields.push(Field {
+            name: name.to_string(),
+            dtype: T::DTYPE,
+            kind: FieldKind::JaggedValues(j),
+            extent: 1,
+        });
+        self.num_jagged += 1;
+        self
+    }
+
+    /// Add an extra value field to the *most recently declared* jagged
+    /// property (the paper's general jagged form, where the per-value
+    /// payload is itself a property list).
+    pub fn jagged_extra<T: Pod>(mut self, name: &str) -> Self {
+        assert!(self.num_jagged > 0, "jagged_extra requires a prior jagged()");
+        let j = self.num_jagged - 1;
+        self.fields.push(Field {
+            name: name.to_string(),
+            dtype: T::DTYPE,
+            kind: FieldKind::JaggedValues(j),
+            extent: 1,
+        });
+        self
+    }
+
+    /// Add a global (collection-level) property.
+    pub fn global<T: Pod>(mut self, name: &str) -> Self {
+        self.fields.push(Field {
+            name: name.to_string(),
+            dtype: T::DTYPE,
+            kind: FieldKind::Global,
+            extent: 1,
+        });
+        self
+    }
+
+    pub fn build(self) -> Schema {
+        let num_tags = 3 + self.num_jagged as usize;
+        assert!(num_tags <= MAX_TAGS, "too many jagged properties");
+        for (i, f) in self.fields.iter().enumerate() {
+            assert!(
+                !self.fields[..i].iter().any(|g| g.name == f.name),
+                "duplicate field name {:?}",
+                f.name
+            );
+        }
+        let mut tags = vec![TagLayout::default(); num_tags];
+        for t in &mut tags {
+            t.record_align = 1;
+        }
+        let mut metas = Vec::with_capacity(self.fields.len());
+
+        // Identical algorithm to `compute_metas` (pinned by a test).
+        for (i, f) in self.fields.iter().enumerate() {
+            let tag = f.tag();
+            let t = &mut tags[tag.index()];
+            let size = f.dtype.size();
+            let align = f.dtype.align();
+            let off = align_up(t.record_size, align);
+            metas.push(FieldMeta {
+                index: i as u32,
+                tag: tag.0,
+                size: size as u32,
+                align: align as u32,
+                extent: f.extent,
+                aos_offset: off as u32,
+                record_size: 0,
+                tag_slot: t.fields.len() as u32,
+            });
+            t.fields.push(FieldId(i as u32));
+            t.record_size = off + size * f.extent as usize;
+            t.record_align = t.record_align.max(align);
+        }
+        for t in &mut tags {
+            t.record_size = align_up(t.record_size, t.record_align);
+        }
+        for m in &mut metas {
+            m.record_size = tags[m.tag as usize].record_size as u32;
+        }
+
+        let mut jagged = vec![(FieldId(0), Vec::new()); self.num_jagged as usize];
+        for (i, f) in self.fields.iter().enumerate() {
+            match f.kind {
+                FieldKind::JaggedPrefix(j) => jagged[j as usize].0 = FieldId(i as u32),
+                FieldKind::JaggedValues(j) => {
+                    jagged[j as usize].1.push(FieldId(i as u32))
+                }
+                _ => {}
+            }
+        }
+
+        Schema { fields: self.fields, metas, tags, jagged, name: self.name }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Schema {
+        Schema::builder("sensor")
+            .per_item::<i32>("type")
+            .per_item::<u64>("counts")
+            .per_item::<f32>("energy")
+            .per_item::<u8>("noisy")
+            .array::<f32>("significance", 3)
+            .jagged::<u64, u32>("cells")
+            .global::<u64>("event_id")
+            .build()
+    }
+
+    #[test]
+    fn record_layout_matches_handwritten_struct() {
+        // Equivalent handwritten AoS record:
+        // struct Rec { type: i32, counts: u64, energy: f32, noisy: u8,
+        //              significance: [f32; 3] }  (repr C-ish, decl order)
+        let s = example();
+        let m_type = s.meta(s.field_by_name("type").unwrap());
+        let m_counts = s.meta(s.field_by_name("counts").unwrap());
+        let m_energy = s.meta(s.field_by_name("energy").unwrap());
+        let m_noisy = s.meta(s.field_by_name("noisy").unwrap());
+        let m_sig = s.meta(s.field_by_name("significance").unwrap());
+        assert_eq!(m_type.aos_offset, 0);
+        assert_eq!(m_counts.aos_offset, 8); // aligned up from 4
+        assert_eq!(m_energy.aos_offset, 16);
+        assert_eq!(m_noisy.aos_offset, 20);
+        assert_eq!(m_sig.aos_offset, 24); // f32-aligned after the u8
+        assert_eq!(m_sig.extent, 3);
+        // 24 + 12 = 36, padded to align 8 -> 40.
+        assert_eq!(m_type.record_size, 40);
+        assert_eq!(s.tag_layout(TagId::ITEMS).record_align, 8);
+    }
+
+    #[test]
+    fn tags_are_partitioned() {
+        let s = example();
+        assert_eq!(s.num_tags(), 4); // Items, Items+1, Global, Values(0)
+        assert_eq!(s.tag_layout(TagId::ITEMS).fields.len(), 5);
+        assert_eq!(s.tag_layout(TagId::ITEMS_PLUS_ONE).fields.len(), 1);
+        assert_eq!(s.tag_layout(TagId::GLOBAL).fields.len(), 1);
+        assert_eq!(s.tag_layout(TagId::values(0)).fields.len(), 1);
+        let prefix = s.jagged_prefix(0);
+        assert_eq!(s.field(prefix).dtype, Dtype::U32);
+        assert_eq!(s.jagged_values(0).len(), 1);
+    }
+
+    #[test]
+    fn const_and_runtime_paths_agree() {
+        let s = example();
+        const DESCS: [FieldDesc; 8] = [
+            FieldDesc::per_item(Dtype::I32),
+            FieldDesc::per_item(Dtype::U64),
+            FieldDesc::per_item(Dtype::F32),
+            FieldDesc::per_item(Dtype::U8),
+            FieldDesc::array(Dtype::F32, 3),
+            FieldDesc::jagged_prefix(Dtype::U32),
+            FieldDesc::jagged_values(Dtype::U64),
+            FieldDesc::global(Dtype::U64),
+        ];
+        const METAS: [FieldMeta; 8] = compute_metas(DESCS);
+        assert_eq!(&METAS[..], s.metas());
+    }
+
+    #[test]
+    fn multi_payload_jagged() {
+        let s = Schema::builder("tracks")
+            .per_item::<f32>("pt")
+            .jagged::<u32, u32>("hits")
+            .jagged_extra::<f32>("hit_charge")
+            .build();
+        assert_eq!(s.jagged_values(0).len(), 2);
+        let vals = s.jagged_values(0);
+        // Both value fields share the Values(0) tag and its record.
+        let m0 = s.meta(vals[0]);
+        let m1 = s.meta(vals[1]);
+        assert_eq!(m0.tag, m1.tag);
+        assert_eq!(m0.record_size, 8); // u32 + f32
+        assert_eq!(m1.aos_offset, 4);
+    }
+
+    #[test]
+    fn structural_equality() {
+        let a = example();
+        let b = example();
+        assert!(a.same_structure(&b));
+        let c = Schema::builder("sensor").per_item::<i32>("type").build();
+        assert!(!a.same_structure(&c));
+    }
+
+    #[test]
+    fn align_up_properties() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 4), 12);
+    }
+}

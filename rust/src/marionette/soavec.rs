@@ -1,0 +1,380 @@
+//! The vector-per-property layout holder (paper: `VectorLikePerProperty`).
+//!
+//! Every field owns one context-allocated buffer. Fields with `extent > 1`
+//! (array properties) store their lanes *plane-major*: lane `k` of all
+//! items is contiguous — "stored in separate arrays for each type" as the
+//! paper specifies for array properties — so the element address is
+//! `buf + (k * cap + i) * size`, with `cap` the tag capacity.
+
+use std::sync::Arc;
+
+use super::buffer::RawBuf;
+use super::holder::{LayoutHolder, PlaneView};
+use super::memory::MemoryContext;
+use super::schema::{FieldMeta, Schema, TagId};
+
+pub struct SoAVecHolder<C: MemoryContext> {
+    schema: Arc<Schema>,
+    info: C::Info,
+    /// One buffer per field (indexed by `FieldMeta::index`).
+    bufs: Vec<RawBuf<C>>,
+    /// Length per tag slot.
+    lens: Vec<usize>,
+    /// Capacity (elements) per tag slot.
+    caps: Vec<usize>,
+}
+
+impl<C: MemoryContext> SoAVecHolder<C> {
+    #[inline(always)]
+    fn cap_of(&self, meta: FieldMeta) -> usize {
+        self.caps[meta.tag as usize]
+    }
+
+    /// Grow every buffer of `tag` to capacity `new_cap`, moving planes.
+    fn regrow_tag(&mut self, tag: usize, new_cap: usize) {
+        let old_cap = self.caps[tag];
+        let len = self.lens[tag];
+        let metas: Vec<FieldMeta> = self
+            .schema
+            .tag_layout(TagId(tag as u32))
+            .fields
+            .iter()
+            .map(|&f| self.schema.meta(f))
+            .collect();
+        for m in metas {
+            let esz = m.size as usize;
+            let mut nb = RawBuf::<C>::with_capacity(
+                new_cap * m.extent as usize * esz,
+                m.align as usize,
+                self.info.clone(),
+            );
+            let ob = &self.bufs[m.index as usize];
+            for k in 0..m.extent as usize {
+                unsafe {
+                    if len > 0 {
+                        C::copy_within(
+                            &self.info,
+                            nb.as_mut_ptr().add(k * new_cap * esz),
+                            ob.as_ptr().add(k * old_cap * esz),
+                            len * esz,
+                        );
+                    }
+                    // Zero the free region of the plane so future growth
+                    // within capacity exposes zeros.
+                    nb.zero_range(
+                        (k * new_cap + len) * esz,
+                        (new_cap - len) * esz,
+                    );
+                }
+            }
+            self.bufs[m.index as usize] = nb;
+        }
+        self.caps[tag] = new_cap;
+    }
+}
+
+impl<C: MemoryContext> LayoutHolder for SoAVecHolder<C> {
+    type Ctx = C;
+
+    fn new(schema: Arc<Schema>, info: C::Info) -> Self {
+        let bufs = schema
+            .metas()
+            .iter()
+            .map(|m| RawBuf::new(m.align as usize, info.clone()))
+            .collect();
+        let nt = schema.num_tags();
+        SoAVecHolder { schema, info, bufs, lens: vec![0; nt], caps: vec![0; nt] }
+    }
+
+    fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    fn info(&self) -> &C::Info {
+        &self.info
+    }
+
+    fn set_info(&mut self, info: C::Info) {
+        for b in &mut self.bufs {
+            b.rehome(info.clone());
+        }
+        self.info = info;
+    }
+
+    fn tag_len(&self, tag: TagId) -> usize {
+        self.lens[tag.index()]
+    }
+
+    fn tag_capacity(&self, tag: TagId) -> usize {
+        self.caps[tag.index()]
+    }
+
+    fn resize_tag(&mut self, tag: TagId, len: usize) {
+        let t = tag.index();
+        let old_len = self.lens[t];
+        if len > self.caps[t] {
+            let new_cap = len.max(self.caps[t] * 2).max(8);
+            self.regrow_tag(t, new_cap);
+        } else if len > old_len {
+            // Within capacity: planes keep zeroed free regions only if no
+            // erase/shrink dirtied them; zero explicitly to be safe.
+            let metas: Vec<FieldMeta> = self
+                .schema
+                .tag_layout(tag)
+                .fields
+                .iter()
+                .map(|&f| self.schema.meta(f))
+                .collect();
+            let cap = self.caps[t];
+            for m in metas {
+                let esz = m.size as usize;
+                for k in 0..m.extent as usize {
+                    unsafe {
+                        self.bufs[m.index as usize]
+                            .zero_range((k * cap + old_len) * esz, (len - old_len) * esz);
+                    }
+                }
+            }
+        }
+        self.lens[t] = len;
+    }
+
+    fn reserve_tag(&mut self, tag: TagId, cap: usize) {
+        let t = tag.index();
+        if cap > self.caps[t] {
+            self.regrow_tag(t, cap);
+        }
+    }
+
+    fn clear(&mut self) {
+        for l in &mut self.lens {
+            *l = 0;
+        }
+    }
+
+    fn shrink_to_fit(&mut self) {
+        for t in 0..self.lens.len() {
+            if self.caps[t] > self.lens[t] {
+                self.regrow_tag(t, self.lens[t]);
+            }
+        }
+    }
+
+    fn insert_gap(&mut self, tag: TagId, at: usize, n: usize) {
+        let t = tag.index();
+        let old_len = self.lens[t];
+        debug_assert!(at <= old_len);
+        self.resize_tag(tag, old_len + n);
+        let cap = self.caps[t];
+        let metas: Vec<FieldMeta> = self
+            .schema
+            .tag_layout(tag)
+            .fields
+            .iter()
+            .map(|&f| self.schema.meta(f))
+            .collect();
+        for m in metas {
+            let esz = m.size as usize;
+            let buf = &mut self.bufs[m.index as usize];
+            for k in 0..m.extent as usize 	{
+                let plane = k * cap;
+                unsafe {
+                    let base = buf.as_mut_ptr();
+                    C::copy_within(
+                        &self.info,
+                        base.add((plane + at + n) * esz),
+                        base.add((plane + at) * esz),
+                        (old_len - at) * esz,
+                    );
+                    buf.zero_range((plane + at) * esz, n * esz);
+                }
+            }
+        }
+    }
+
+    fn erase_range(&mut self, tag: TagId, at: usize, n: usize) {
+        let t = tag.index();
+        let old_len = self.lens[t];
+        debug_assert!(at + n <= old_len);
+        let cap = self.caps[t];
+        let metas: Vec<FieldMeta> = self
+            .schema
+            .tag_layout(tag)
+            .fields
+            .iter()
+            .map(|&f| self.schema.meta(f))
+            .collect();
+        for m in metas {
+            let esz = m.size as usize;
+            let buf = &mut self.bufs[m.index as usize];
+            for k in 0..m.extent as usize {
+                let plane = k * cap;
+                unsafe {
+                    let base = buf.as_mut_ptr();
+                    C::copy_within(
+                        &self.info,
+                        base.add((plane + at) * esz),
+                        base.add((plane + at + n) * esz),
+                        (old_len - at - n) * esz,
+                    );
+                    // Zero the vacated tail so growth-within-capacity
+                    // exposes zeros.
+                    buf.zero_range((plane + old_len - n) * esz, n * esz);
+                }
+            }
+        }
+        self.lens[t] = old_len - n;
+    }
+
+    #[inline(always)]
+    unsafe fn elem_ptr(&self, meta: FieldMeta, i: usize, k: usize) -> *const u8 {
+        debug_assert!(i < self.lens[meta.tag as usize]);
+        debug_assert!(k < meta.extent as usize);
+        let cap = self.cap_of(meta);
+        self.bufs
+            .get_unchecked(meta.index as usize)
+            .as_ptr()
+            .add((k * cap + i) * meta.size as usize)
+    }
+
+    #[inline(always)]
+    unsafe fn elem_ptr_mut(&mut self, meta: FieldMeta, i: usize, k: usize) -> *mut u8 {
+        debug_assert!(i < self.lens[meta.tag as usize]);
+        debug_assert!(k < meta.extent as usize);
+        let cap = self.cap_of(meta);
+        self.bufs
+            .get_unchecked_mut(meta.index as usize)
+            .as_mut_ptr()
+            .add((k * cap + i) * meta.size as usize)
+    }
+
+    fn plane(&self, meta: FieldMeta, k: usize) -> Option<PlaneView> {
+        let cap = self.cap_of(meta);
+        Some(PlaneView {
+            base: unsafe {
+                self.bufs[meta.index as usize]
+                    .as_ptr()
+                    .add(k * cap * meta.size as usize)
+            },
+            stride: meta.size as usize,
+            len: self.lens[meta.tag as usize],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::holder::{read, write};
+    use super::super::memory::HostContext;
+    use super::*;
+
+    fn schema() -> Arc<Schema> {
+        Arc::new(
+            Schema::builder("t")
+                .per_item::<f32>("e")
+                .per_item::<u8>("flag")
+                .array::<i32>("arr", 3)
+                .build(),
+        )
+    }
+
+    #[test]
+    fn resize_and_access() {
+        let s = schema();
+        let me = s.meta(s.field_by_name("e").unwrap());
+        let ma = s.meta(s.field_by_name("arr").unwrap());
+        let mut h = SoAVecHolder::<HostContext>::new(s, ());
+        h.resize_tag(TagId::ITEMS, 100);
+        assert_eq!(h.tag_len(TagId::ITEMS), 100);
+        unsafe {
+            // Growth is zero-filled.
+            assert_eq!(read::<f32, _>(&h, me, 50, 0), 0.0);
+            write::<f32, _>(&mut h, me, 50, 0, 2.5);
+            assert_eq!(read::<f32, _>(&h, me, 50, 0), 2.5);
+            write::<i32, _>(&mut h, ma, 7, 2, -9);
+            assert_eq!(read::<i32, _>(&h, ma, 7, 2), -9);
+            assert_eq!(read::<i32, _>(&h, ma, 7, 1), 0);
+        }
+    }
+
+    #[test]
+    fn growth_preserves_planes() {
+        let s = schema();
+        let ma = s.meta(s.field_by_name("arr").unwrap());
+        let mut h = SoAVecHolder::<HostContext>::new(s, ());
+        h.resize_tag(TagId::ITEMS, 4);
+        for i in 0..4 {
+            for k in 0..3 {
+                unsafe { write::<i32, _>(&mut h, ma, i, k, (10 * k + i) as i32) };
+            }
+        }
+        h.resize_tag(TagId::ITEMS, 1000); // forces regrow + plane moves
+        for i in 0..4 {
+            for k in 0..3 {
+                unsafe {
+                    assert_eq!(read::<i32, _>(&h, ma, i, k), (10 * k + i) as i32);
+                }
+            }
+        }
+        unsafe { assert_eq!(read::<i32, _>(&h, ma, 999, 2), 0) };
+    }
+
+    #[test]
+    fn planes_are_contiguous() {
+        let s = schema();
+        let ma = s.meta(s.field_by_name("arr").unwrap());
+        let mut h = SoAVecHolder::<HostContext>::new(s, ());
+        h.resize_tag(TagId::ITEMS, 10);
+        let p = h.plane(ma, 1).unwrap();
+        assert_eq!(p.stride, 4);
+        assert_eq!(p.len, 10);
+    }
+
+    #[test]
+    fn insert_erase_roundtrip() {
+        let s = schema();
+        let me = s.meta(s.field_by_name("e").unwrap());
+        let mut h = SoAVecHolder::<HostContext>::new(s, ());
+        h.resize_tag(TagId::ITEMS, 4);
+        for i in 0..4 {
+            unsafe { write::<f32, _>(&mut h, me, i, 0, i as f32 + 1.0) };
+        }
+        h.insert_gap(TagId::ITEMS, 2, 2);
+        let vals: Vec<f32> =
+            (0..6).map(|i| unsafe { read::<f32, _>(&h, me, i, 0) }).collect();
+        assert_eq!(vals, [1.0, 2.0, 0.0, 0.0, 3.0, 4.0]);
+        h.erase_range(TagId::ITEMS, 1, 3);
+        // Erasing [1, 4) from [1, 2, 0, 0, 3, 4] leaves [1, 3, 4].
+        let vals: Vec<f32> =
+            (0..3).map(|i| unsafe { read::<f32, _>(&h, me, i, 0) }).collect();
+        assert_eq!(vals, [1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn erase_then_grow_exposes_zeros() {
+        let s = schema();
+        let me = s.meta(s.field_by_name("e").unwrap());
+        let mut h = SoAVecHolder::<HostContext>::new(s, ());
+        h.resize_tag(TagId::ITEMS, 3);
+        for i in 0..3 {
+            unsafe { write::<f32, _>(&mut h, me, i, 0, 7.0) };
+        }
+        h.erase_range(TagId::ITEMS, 0, 3);
+        h.resize_tag(TagId::ITEMS, 3);
+        for i in 0..3 {
+            unsafe { assert_eq!(read::<f32, _>(&h, me, i, 0), 0.0) };
+        }
+    }
+
+    #[test]
+    fn shrink_to_fit_reduces_capacity() {
+        let s = schema();
+        let mut h = SoAVecHolder::<HostContext>::new(s, ());
+        h.resize_tag(TagId::ITEMS, 100);
+        h.resize_tag(TagId::ITEMS, 5);
+        assert!(h.tag_capacity(TagId::ITEMS) >= 100);
+        h.shrink_to_fit();
+        assert_eq!(h.tag_capacity(TagId::ITEMS), 5);
+        assert_eq!(h.tag_len(TagId::ITEMS), 5);
+    }
+}

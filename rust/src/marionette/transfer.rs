@@ -1,0 +1,358 @@
+//! Transfers between collections, layouts and memory contexts (paper
+//! §VII-A/§VII-B).
+//!
+//! [`copy_collection`] copies a source collection into a destination with
+//! the *same schema* but possibly different layout and/or context, walking
+//! a priority ladder (the paper's `TransferSpecification` /
+//! `TransferPriority` mechanism):
+//!
+//! 1. [`TransferPriority::Specialized`] — a user-registered fast path for
+//!    a concrete (src, dst) pair (e.g. the EDM's handwritten-AoS → staging
+//!    SoA converter). Implemented at the typed-collection level; the
+//!    generic ladder starts below.
+//! 2. `Plane` — both layouts expose a dense plane for a field: one
+//!    `memcopy_with_context` per plane.
+//! 3. `Strided` — both expose regular strides: strided copy loop.
+//! 4. `Elementwise` — fully general fallback via `elem_ptr`.
+//!
+//! `memcopy_with_context` and the overlapping-range variants are the free
+//! functions the paper describes for raw context-to-context byte movement.
+
+use super::collection::RawCollection;
+use super::holder::LayoutHolder;
+use super::layout::Layout;
+use super::memory::MemoryContext;
+use super::schema::TagId;
+
+/// Which rung of the ladder a transfer used (reported for tests/benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TransferPriority {
+    Specialized,
+    Plane,
+    Strided,
+    Elementwise,
+}
+
+/// Copy `len` bytes from `src` (in context `Src`) to `dst` (in context
+/// `Dst`). The copy is routed host-side: `Src::copy_out` then
+/// `Dst::copy_in` collapse to a single `memcpy` when both contexts are
+/// host-accessible and at most one needs accounting.
+///
+/// # Safety
+/// `src`/`dst` must be valid for `len` bytes in their contexts and must
+/// not overlap.
+pub unsafe fn memcopy_with_context<Src: MemoryContext, Dst: MemoryContext>(
+    src_info: &Src::Info,
+    src: *const u8,
+    dst_info: &Dst::Info,
+    dst: *mut u8,
+    len: usize,
+) {
+    // Both in-tree context families are host-accessible; the general
+    // device route (out to a host bounce buffer, then in) is only needed
+    // when either side refuses direct access.
+    if Src::HOST_ACCESSIBLE {
+        Dst::copy_in(dst_info, dst, src, len);
+        Src::note_read(src_info, len); // accounting only, no byte movement
+    } else if Dst::HOST_ACCESSIBLE {
+        Src::copy_out(src_info, src, dst, len);
+    } else {
+        let mut bounce = vec![0u8; len];
+        Src::copy_out(src_info, src, bounce.as_mut_ptr(), len);
+        Dst::copy_in(dst_info, dst, bounce.as_ptr(), len);
+    }
+}
+
+/// Overlap-tolerant copy within one context: safe for a destination range
+/// that overlaps the source to the *left* (shift-left, used by erase).
+///
+/// # Safety
+/// Both ranges valid in the context.
+pub unsafe fn memmove_left_with_context<C: MemoryContext>(
+    info: &C::Info,
+    dst: *mut u8,
+    src: *const u8,
+    len: usize,
+) {
+    debug_assert!((dst as usize) <= (src as usize));
+    C::copy_within(info, dst, src, len);
+}
+
+/// Overlap-tolerant copy within one context: safe for a destination range
+/// that overlaps the source to the *right* (shift-right, used by insert).
+///
+/// # Safety
+/// Both ranges valid in the context.
+pub unsafe fn memmove_right_with_context<C: MemoryContext>(
+    info: &C::Info,
+    dst: *mut u8,
+    src: *const u8,
+    len: usize,
+) {
+    debug_assert!((dst as usize) >= (src as usize));
+    C::copy_within(info, dst, src, len);
+}
+
+/// Copy every property of `src` into `dst` (same schema structure
+/// required; layouts and contexts may differ). `dst` is resized to match.
+/// Returns the *lowest* rung the transfer had to descend to.
+pub fn copy_collection<LS: Layout, LD: Layout>(
+    src: &RawCollection<LS>,
+    dst: &mut RawCollection<LD>,
+) -> TransferPriority {
+    assert!(
+        src.schema().same_structure(dst.schema()),
+        "transfer requires structurally equal schemas ({} vs {})",
+        src.schema().name(),
+        dst.schema().name(),
+    );
+
+    // Size the destination: drop any previous content (and its jagged
+    // values), then match the item count and each values-tag length; the
+    // raw field copy below replicates the actual prefix sums.
+    dst.resize(0);
+    dst.resize(src.len());
+    if dst.len() > 0 {
+        let last = dst.len() - 1;
+        for j in 0..src.num_jagged() as u32 {
+            let n = src.values_len(j);
+            if n > 0 {
+                dst.set_jagged_count(j, last, n);
+            }
+        }
+    }
+
+    let schema = src.schema().clone();
+    let sinfo = src.context_info().clone();
+    let dinfo = dst.context_info().clone();
+    let mut worst = TransferPriority::Plane;
+    for (fid, _field) in schema.fields() {
+        let meta = schema.meta(fid);
+        let tag = meta.tag_id();
+        let len = match tag {
+            TagId::GLOBAL => 1,
+            t if t == TagId::ITEMS => src.len(),
+            t if t == TagId::ITEMS_PLUS_ONE => src.len() + 1,
+            t => src.values_len(t.0 - 3),
+        };
+        for k in 0..meta.extent as usize {
+            let esz = meta.size as usize;
+            let sp = src.plane(meta, k);
+            let dp = dst.plane_mut(meta, k);
+            match (sp, dp) {
+                (Some(s), Some(d)) if s.stride == esz && d.stride == esz => {
+                    // Dense <-> dense: single context copy per plane.
+                    unsafe {
+                        memcopy_with_context::<LS::Ctx, LD::Ctx>(
+                            &sinfo,
+                            s.base,
+                            &dinfo,
+                            d.base as *mut u8,
+                            len * esz,
+                        );
+                    }
+                }
+                (Some(s), Some(d)) => {
+                    // Regular strides: strided copy loop.
+                    worst = worst.max(TransferPriority::Strided);
+                    unsafe {
+                        for i in 0..len {
+                            memcopy_with_context::<LS::Ctx, LD::Ctx>(
+                                &sinfo,
+                                s.base.add(i * s.stride),
+                                &dinfo,
+                                (d.base as *mut u8).add(i * d.stride),
+                                esz,
+                            );
+                        }
+                    }
+                }
+                _ => {
+                    // Irregular (AoSoA planes): element-wise.
+                    worst = worst.max(TransferPriority::Elementwise);
+                    for i in 0..len {
+                        unsafe {
+                            let s = src.holder().elem_ptr(meta, i, k);
+                            let d = dst.holder_mut().elem_ptr_mut(meta, i, k);
+                            memcopy_with_context::<LS::Ctx, LD::Ctx>(
+                                &sinfo, s, &dinfo, d, esz,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layout::{AoS, AoSoA, SoABlob, SoAVec};
+    use super::super::memory::{CountingContext, CountingInfo, StagingContext, StagingInfo};
+    use super::super::schema::Schema;
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    fn schema() -> Arc<Schema> {
+        Arc::new(
+            Schema::builder("s")
+                .per_item::<f32>("e")
+                .per_item::<i32>("t")
+                .array::<f32>("sig", 2)
+                .jagged::<u64, u32>("cells")
+                .global::<u64>("ev")
+                .build(),
+        )
+    }
+
+    fn build_src<L: Layout>() -> RawCollection<L>
+    where
+        <L::Ctx as MemoryContext>::Info: Default,
+    {
+        let s = schema();
+        let m_e = s.meta(s.field_by_name("e").unwrap());
+        let m_t = s.meta(s.field_by_name("t").unwrap());
+        let m_sig = s.meta(s.field_by_name("sig").unwrap());
+        let m_cells = s.meta(s.field_by_name("cells").unwrap());
+        let m_ev = s.meta(s.field_by_name("ev").unwrap());
+        let mut c = RawCollection::<L>::new(s);
+        c.set_global::<u64>(m_ev, 7);
+        for i in 0..5 {
+            c.push_default();
+            c.set::<f32>(m_e, i, i as f32 * 1.5);
+            c.set::<i32>(m_t, i, i as i32 - 2);
+            c.set_k::<f32>(m_sig, i, 0, i as f32);
+            c.set_k::<f32>(m_sig, i, 1, -(i as f32));
+            let v0 = c.append_values(0, i % 3);
+            for n in 0..(i % 3) {
+                c.set_value::<u64>(m_cells, v0 + n, (i * 10 + n) as u64);
+            }
+        }
+        c
+    }
+
+    fn check_equal<LA: Layout, LB: Layout>(a: &RawCollection<LA>, b: &RawCollection<LB>) {
+        let s = a.schema();
+        let m_e = s.meta(s.field_by_name("e").unwrap());
+        let m_t = s.meta(s.field_by_name("t").unwrap());
+        let m_sig = s.meta(s.field_by_name("sig").unwrap());
+        let m_cells = s.meta(s.field_by_name("cells").unwrap());
+        let m_ev = s.meta(s.field_by_name("ev").unwrap());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.get_global::<u64>(m_ev), b.get_global::<u64>(m_ev));
+        for i in 0..a.len() {
+            assert_eq!(a.get::<f32>(m_e, i), b.get::<f32>(m_e, i));
+            assert_eq!(a.get::<i32>(m_t, i), b.get::<i32>(m_t, i));
+            for k in 0..2 {
+                assert_eq!(a.get_k::<f32>(m_sig, i, k), b.get_k::<f32>(m_sig, i, k));
+            }
+            assert_eq!(
+                a.jagged_view::<u64>(m_cells, 0, i).to_vec(),
+                b.jagged_view::<u64>(m_cells, 0, i).to_vec()
+            );
+        }
+    }
+
+    #[test]
+    fn soavec_to_aos_and_back() {
+        let src = build_src::<SoAVec>();
+        let mut aos = RawCollection::<AoS>::new(src.schema().clone());
+        let p = copy_collection(&src, &mut aos);
+        check_equal(&src, &aos);
+        assert!(p <= TransferPriority::Strided);
+        let mut back = RawCollection::<SoAVec>::new(src.schema().clone());
+        copy_collection(&aos, &mut back);
+        check_equal(&src, &back);
+    }
+
+    #[test]
+    fn all_layout_pairs_roundtrip() {
+        let src = build_src::<SoAVec>();
+        macro_rules! pair {
+            ($mid:ty) => {{
+                let mut mid = RawCollection::<$mid>::new(src.schema().clone());
+                copy_collection(&src, &mut mid);
+                let mut back = RawCollection::<SoAVec>::new(src.schema().clone());
+                copy_collection(&mid, &mut back);
+                check_equal(&src, &back);
+            }};
+        }
+        pair!(AoS);
+        pair!(SoABlob);
+        pair!(AoSoA<4>);
+        pair!(AoSoA<16>);
+    }
+
+    #[test]
+    fn aosoa_is_elementwise() {
+        let src = build_src::<SoAVec>();
+        let mut dst = RawCollection::<AoSoA<8>>::new(src.schema().clone());
+        let p = copy_collection(&src, &mut dst);
+        assert_eq!(p, TransferPriority::Elementwise);
+    }
+
+    #[test]
+    fn soavec_pair_is_plane() {
+        let src = build_src::<SoAVec>();
+        let mut dst = RawCollection::<SoAVec>::new(src.schema().clone());
+        let p = copy_collection(&src, &mut dst);
+        assert_eq!(p, TransferPriority::Plane);
+    }
+
+    #[test]
+    fn cross_context_accounts_dma() {
+        let src = build_src::<SoAVec>();
+        let info = StagingInfo::default();
+        let mut dst = RawCollection::<SoAVec<StagingContext>>::new_in(
+            src.schema().clone(),
+            info.clone(),
+        );
+        copy_collection(&src, &mut dst);
+        check_equal(&src, &dst);
+        // Every plane upload is H2D traffic.
+        assert!(info.counters.h2d_bytes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn counting_context_observes_copy_out() {
+        let s = schema();
+        let m_e = s.meta(s.field_by_name("e").unwrap());
+        let info = CountingInfo::default();
+        let mut src =
+            RawCollection::<SoAVec<CountingContext>>::new_in(s.clone(), info.clone());
+        src.resize(4);
+        src.set::<f32>(m_e, 2, 5.0);
+        let mut dst = RawCollection::<SoAVec>::new(s);
+        copy_collection(&src, &mut dst);
+        assert_eq!(dst.get::<f32>(m_e, 2), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "structurally equal")]
+    fn schema_mismatch_rejected() {
+        let a = build_src::<SoAVec>();
+        let other = Arc::new(Schema::builder("x").per_item::<f32>("y").build());
+        let mut b = RawCollection::<SoAVec>::new(other);
+        copy_collection(&a, &mut b);
+    }
+
+    #[test]
+    fn raw_memcopy_between_contexts() {
+        let staging = StagingInfo::default();
+        let src: Vec<u8> = (0..100).collect();
+        let mut dst = vec![0u8; 100];
+        unsafe {
+            memcopy_with_context::<super::super::memory::HostContext, StagingContext>(
+                &(),
+                src.as_ptr(),
+                &staging,
+                dst.as_mut_ptr(),
+                100,
+            );
+        }
+        assert_eq!(src, dst);
+        assert_eq!(staging.counters.h2d_bytes.load(Ordering::Relaxed), 100);
+    }
+}

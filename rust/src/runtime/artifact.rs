@@ -1,0 +1,223 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.json` lists every lowered HLO program with its
+//! grid bucket and tensor signature, plus the physics constants both
+//! languages must agree on; [`Manifest::load`] re-validates those against
+//! `edm::constants` so drift is a hard error, not a silent wrong answer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::edm::constants;
+use crate::marionette::pod::Dtype;
+use crate::util::json::{self, Value};
+
+/// Dtype + shape of one artifact input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn num_bytes(&self) -> usize {
+        self.num_elems() * self.dtype.size()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let dt = v.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype not a string"))?;
+        Ok(TensorSpec {
+            dtype: Dtype::from_name(dt).ok_or_else(|| anyhow!("unknown dtype {dt}"))?,
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One lowered HLO program.
+#[derive(Clone, Debug)]
+pub struct ArtifactRecord {
+    pub entry: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    records: BTreeMap<(String, usize, usize), ArtifactRecord>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = json::parse(&src).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let version = v.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        Self::check_constants(v.req("constants")?)?;
+
+        let mut records = BTreeMap::new();
+        for a in v.req("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts"))? {
+            let rec = ArtifactRecord {
+                entry: a.req("entry")?.as_str().unwrap_or_default().to_string(),
+                rows: a.req("rows")?.as_usize().unwrap_or(0),
+                cols: a.req("cols")?.as_usize().unwrap_or(0),
+                file: dir.join(a.req("file")?.as_str().unwrap_or_default()),
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                sha256: a
+                    .get("sha256")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            };
+            records.insert((rec.entry.clone(), rec.rows, rec.cols), rec);
+        }
+        if records.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), records })
+    }
+
+    /// Load from the default artifacts directory
+    /// (`$MARIONETTE_ARTIFACTS` or `<crate>/artifacts`).
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&crate::edm::golden::artifacts_dir())
+    }
+
+    fn check_constants(c: &Value) -> Result<()> {
+        let pairs: [(&str, f64); 5] = [
+            ("num_sensor_types", constants::NUM_SENSOR_TYPES as f64),
+            ("window", constants::WINDOW as f64),
+            ("halo", constants::HALO as f64),
+            ("seed_significance", constants::SEED_SIGNIFICANCE as f64),
+            ("contrib_significance", constants::CONTRIB_SIGNIFICANCE as f64),
+        ];
+        for (key, want) in pairs {
+            let got = c.req(key)?.as_f64().unwrap_or(f64::NAN);
+            if (got - want).abs() > 1e-9 {
+                bail!("constant {key} drifted: python={got}, rust={want}");
+            }
+        }
+        let planes = c.req("num_planes")?.as_usize().unwrap_or(0);
+        if planes != constants::NUM_PLANES {
+            bail!("num_planes drifted: python={planes}, rust={}", constants::NUM_PLANES);
+        }
+        Ok(())
+    }
+
+    /// Look up an artifact by entry point and exact grid bucket.
+    pub fn get(&self, entry: &str, rows: usize, cols: usize) -> Result<&ArtifactRecord> {
+        self.records
+            .get(&(entry.to_string(), rows, cols))
+            .ok_or_else(|| anyhow!("no artifact {entry} for {rows}x{cols} (rebuild with --grids)"))
+    }
+
+    /// The grid buckets available for an entry point, ascending.
+    pub fn buckets(&self, entry: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = self
+            .records
+            .keys()
+            .filter(|(e, _, _)| e == entry)
+            .map(|&(_, r, c)| (r, c))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Smallest bucket that fits a `rows x cols` grid, if any.
+    pub fn bucket_for(&self, entry: &str, rows: usize, cols: usize) -> Option<(usize, usize)> {
+        self.buckets(entry)
+            .into_iter()
+            .find(|&(r, c)| r >= rows && c >= cols)
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = &ArtifactRecord> {
+        self.records.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load_default().ok()
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rec = m.get("sensor_stage", 64, 64).unwrap();
+        assert_eq!(rec.inputs.len(), 6);
+        assert_eq!(rec.inputs[0].dtype, Dtype::I32);
+        assert_eq!(rec.outputs.len(), 3);
+        assert!(rec.file.exists());
+        assert_eq!(rec.inputs[0].num_bytes(), 64 * 64 * 4);
+    }
+
+    #[test]
+    fn particle_stage_signature() {
+        let Some(m) = manifest() else { return };
+        let rec = m.get("particle_stage", 32, 32).unwrap();
+        assert_eq!(rec.outputs[0].dtype, Dtype::I32); // seeds
+        assert_eq!(
+            rec.outputs[1].shape,
+            vec![crate::edm::constants::NUM_PLANES, 32, 32]
+        );
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.bucket_for("sensor_stage", 50, 50), Some((64, 64)));
+        assert_eq!(m.bucket_for("sensor_stage", 16, 16), Some((16, 16)));
+        assert_eq!(m.bucket_for("sensor_stage", 5000, 5000), None);
+        assert!(m.buckets("full_event").len() >= 5);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let Some(m) = manifest() else { return };
+        assert!(m.get("sensor_stage", 17, 17).is_err());
+        assert!(m.get("nonexistent", 16, 16).is_err());
+    }
+}

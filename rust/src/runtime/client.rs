@@ -1,0 +1,52 @@
+//! Per-thread PJRT client (the "device" of this reproduction).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and not `Send`, so the
+//! client is thread-local: whichever thread drives the device (the
+//! coordinator's dedicated device worker, a bench, a test) lazily gets
+//! its own client. `PjRtClient` is a cheap `Rc` clone.
+//!
+//! The client is the boundary that gives the figures their genuine
+//! transfer costs: inputs cross it as host buffers, outputs come back
+//! via `to_literal_sync`.
+
+use std::cell::OnceCell;
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// This thread's PJRT client (created on first use). Panics if the XLA
+/// runtime cannot initialise — the device path is first-class, not
+/// optional.
+pub fn client() -> xla::PjRtClient {
+    try_client().expect("PJRT CPU client must initialise")
+}
+
+/// Non-panicking variant (tests, the CLI `doctor` command).
+pub fn try_client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|c| {
+        if c.get().is_none() {
+            let made = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let _ = c.set(made);
+        }
+        Ok(c.get().unwrap().clone())
+    })
+}
+
+/// Human-readable device description.
+pub fn device_description() -> String {
+    let c = client();
+    format!("{} ({} devices)", c.platform_name(), c.device_count())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_initialises_and_describes() {
+        assert!(super::device_description().contains("cpu"));
+        // Second call reuses the thread-local.
+        let _ = super::client();
+    }
+}

@@ -1,0 +1,87 @@
+//! Device-resident event planes (the paper's device-side collections).
+//!
+//! A [`DeviceEvent`] is the device twin of a `SensorCollection`: its data
+//! lives in PJRT buffers and its interface is *transfers and kernel
+//! launches only* — exactly the paper's point that a collection's
+//! `interface_properties` differ per execution context (§VII-B). Upload
+//! once, run both stages against the resident buffers, download results.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::edm::generator::RawEvent;
+
+use super::client::client;
+
+/// Raw sensor planes resident on the PJRT device.
+pub struct DeviceEvent {
+    pub event_id: u64,
+    pub rows: usize,
+    pub cols: usize,
+    pub counts: xla::PjRtBuffer,
+    pub a: xla::PjRtBuffer,
+    pub b: xla::PjRtBuffer,
+    pub na: xla::PjRtBuffer,
+    pub nb: xla::PjRtBuffer,
+    pub noisy: xla::PjRtBuffer,
+    pub types: xla::PjRtBuffer,
+    /// Wall time of the H2D upload that created this event.
+    pub upload_time: Duration,
+}
+
+impl DeviceEvent {
+    /// Upload a raw event's planes to the device.
+    pub fn upload(ev: &RawEvent) -> Result<DeviceEvent> {
+        let c = client();
+        let dims = [ev.rows, ev.cols];
+        let t = Instant::now();
+        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let out = DeviceEvent {
+            event_id: ev.event_id,
+            rows: ev.rows,
+            cols: ev.cols,
+            counts: c.buffer_from_host_buffer(&ev.counts, &dims, None)?,
+            a: c.buffer_from_host_buffer(&ev.a, &dims, None)?,
+            b: c.buffer_from_host_buffer(&ev.b, &dims, None)?,
+            na: c.buffer_from_host_buffer(&ev.na, &dims, None)?,
+            nb: c.buffer_from_host_buffer(&ev.nb, &dims, None)?,
+            noisy: c.buffer_from_host_buffer(&noisy, &dims, None)?,
+            types: c.buffer_from_host_buffer(&ev.types, &dims, None)?,
+            upload_time: Duration::ZERO,
+        };
+        let mut out = out;
+        out.upload_time = t.elapsed();
+        Ok(out)
+    }
+
+    /// H2D bytes this event occupies (7 planes of 4-byte elements).
+    pub fn device_bytes(&self) -> usize {
+        7 * self.rows * self.cols * 4
+    }
+
+    /// Input buffers of the fused `full_event` entry, in signature order.
+    pub fn full_event_inputs(&self) -> [&xla::PjRtBuffer; 7] {
+        [&self.counts, &self.a, &self.b, &self.na, &self.nb, &self.noisy, &self.types]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edm::generator::{EventConfig, EventGenerator};
+
+    #[test]
+    fn upload_and_shapes() {
+        let ev = EventGenerator::new(EventConfig::grid(16, 16, 1), 2).generate();
+        let Ok(dev) = DeviceEvent::upload(&ev) else {
+            eprintln!("skipping: no PJRT");
+            return;
+        };
+        assert_eq!(dev.device_bytes(), 7 * 16 * 16 * 4);
+        assert!(dev.upload_time > Duration::ZERO);
+        // Round-trip one plane to prove residency.
+        let lit = dev.counts.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), ev.counts);
+    }
+}

@@ -1,0 +1,407 @@
+//! Typed execution of the AOT artifacts, with explicit
+//! upload / execute / download phases.
+//!
+//! The figures decompose device time into transfer and compute; to keep
+//! that decomposition honest the engine uploads inputs to device buffers
+//! first (`buffer_from_host_buffer`, timed as H2D), runs the executable
+//! over buffers (`execute_b`, timed as compute), and reads outputs back
+//! as literals (`to_literal_sync` + copy-out, timed as D2H).
+//!
+//! Executables are compiled once per (entry, bucket) and cached; the
+//! first call pays XLA compilation (reported separately via [`Engine::warm`]).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::edm::constants::NUM_PLANES;
+use crate::edm::generator::RawEvent;
+
+use super::artifact::Manifest;
+use super::client::client;
+
+/// Wall-clock decomposition of one device call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecTiming {
+    pub upload: Duration,
+    pub execute: Duration,
+    pub download: Duration,
+}
+
+impl ExecTiming {
+    pub fn total(&self) -> Duration {
+        self.upload + self.execute + self.download
+    }
+
+    pub fn add(&mut self, o: &ExecTiming) {
+        self.upload += o.upload;
+        self.execute += o.execute;
+        self.download += o.download;
+    }
+}
+
+/// Outputs of the device sensor stage (Figure 1).
+#[derive(Debug)]
+pub struct SensorStageOut {
+    pub energy: Vec<f32>,
+    pub noise: Vec<f32>,
+    pub sig: Vec<f32>,
+}
+
+/// Outputs of the device particle stage (Figure 2).
+#[derive(Debug)]
+pub struct ParticleStageOut {
+    pub seeds: Vec<i32>,
+    /// `NUM_PLANES` stacked window-sum planes, plane-major.
+    pub sums: Vec<f32>,
+}
+
+/// Compiled-executable cache keyed by (entry, rows, cols).
+///
+/// `Engine` is deliberately single-threaded (`!Send`): PJRT handles in
+/// the `xla` crate are `Rc`-based, so each device-driving thread owns
+/// its own engine (see `coordinator::pipeline`'s dedicated device
+/// worker).
+pub struct Engine {
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, usize, usize), Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Engine {
+        Engine { manifest, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Ok(Engine::new(Manifest::load_default()?))
+    }
+
+    pub fn load(dir: &Path) -> Result<Engine> {
+        Ok(Engine::new(Manifest::load(dir)?))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch) the executable for an entry/bucket.
+    fn executable(
+        &self,
+        entry: &str,
+        rows: usize,
+        cols: usize,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (entry.to_string(), rows, cols);
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let rec = self.manifest.get(entry, rows, cols)?;
+        let path = rec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()
+            .compile(&comp)
+            .with_context(|| format!("compiling {entry} {rows}x{cols}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an entry/bucket; returns the compile wall time (zero
+    /// when already cached).
+    pub fn warm(&self, entry: &str, rows: usize, cols: usize) -> Result<Duration> {
+        let key = (entry.to_string(), rows, cols);
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(Duration::ZERO);
+        }
+        let t = Instant::now();
+        self.executable(entry, rows, cols)?;
+        Ok(t.elapsed())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    // ------------------------------------------------------------------
+    // Marshalling helpers
+    // ------------------------------------------------------------------
+
+    fn upload_f32(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        Ok(client().buffer_from_host_buffer(data, &[rows, cols], None)?)
+    }
+
+    fn upload_i32(&self, data: &[i32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        Ok(client().buffer_from_host_buffer(data, &[rows, cols], None)?)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::PjRtBuffer],
+        timing: &mut ExecTiming,
+    ) -> Result<Vec<xla::Literal>> {
+        let t = Instant::now();
+        let out = exe.execute_b(inputs)?;
+        timing.execute += t.elapsed();
+
+        let t = Instant::now();
+        let lit = out
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("executable produced no output"))?
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple()?;
+        timing.download += t.elapsed();
+        Ok(parts)
+    }
+
+    // ------------------------------------------------------------------
+    // Entry points
+    // ------------------------------------------------------------------
+
+    /// Device sensor stage: counts + calibration planes → energy/noise/sig.
+    pub fn run_sensor_stage(&self, ev: &RawEvent) -> Result<(SensorStageOut, ExecTiming)> {
+        let (rows, cols) = (ev.rows, ev.cols);
+        let exe = self.executable("sensor_stage", rows, cols)?;
+        let mut timing = ExecTiming::default();
+
+        let t = Instant::now();
+        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let inputs = vec![
+            self.upload_i32(&ev.counts, rows, cols)?,
+            self.upload_f32(&ev.a, rows, cols)?,
+            self.upload_f32(&ev.b, rows, cols)?,
+            self.upload_f32(&ev.na, rows, cols)?,
+            self.upload_f32(&ev.nb, rows, cols)?,
+            self.upload_i32(&noisy, rows, cols)?,
+        ];
+        timing.upload += t.elapsed();
+
+        let parts = self.run(&exe, &inputs, &mut timing)?;
+        if parts.len() != 3 {
+            bail!("sensor_stage returned {} outputs", parts.len());
+        }
+        let t = Instant::now();
+        let out = SensorStageOut {
+            energy: parts[0].to_vec::<f32>()?,
+            noise: parts[1].to_vec::<f32>()?,
+            sig: parts[2].to_vec::<f32>()?,
+        };
+        timing.download += t.elapsed();
+        Ok((out, timing))
+    }
+
+    /// Device particle stage: calibrated planes → seed mask + window sums.
+    pub fn run_particle_stage(
+        &self,
+        rows: usize,
+        cols: usize,
+        energy: &[f32],
+        sig: &[f32],
+        types: &[i32],
+        noisy: &[i32],
+    ) -> Result<(ParticleStageOut, ExecTiming)> {
+        let exe = self.executable("particle_stage", rows, cols)?;
+        let mut timing = ExecTiming::default();
+
+        let t = Instant::now();
+        let inputs = vec![
+            self.upload_f32(energy, rows, cols)?,
+            self.upload_f32(sig, rows, cols)?,
+            self.upload_i32(types, rows, cols)?,
+            self.upload_i32(noisy, rows, cols)?,
+        ];
+        timing.upload += t.elapsed();
+
+        let parts = self.run(&exe, &inputs, &mut timing)?;
+        if parts.len() != 2 {
+            bail!("particle_stage returned {} outputs", parts.len());
+        }
+        let t = Instant::now();
+        let out = ParticleStageOut {
+            seeds: parts[0].to_vec::<i32>()?,
+            sums: parts[1].to_vec::<f32>()?,
+        };
+        timing.download += t.elapsed();
+        debug_assert_eq!(out.sums.len(), NUM_PLANES * rows * cols);
+        Ok((out, timing))
+    }
+
+    /// Fused pipeline: raw event → calibrated planes + seeds + sums with
+    /// no intermediate host round-trip (the paper's "sidestepping
+    /// unnecessary conversions").
+    pub fn run_full_event(
+        &self,
+        ev: &RawEvent,
+    ) -> Result<(SensorStageOut, ParticleStageOut, ExecTiming)> {
+        let (rows, cols) = (ev.rows, ev.cols);
+        let exe = self.executable("full_event", rows, cols)?;
+        let mut timing = ExecTiming::default();
+
+        let t = Instant::now();
+        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let inputs = vec![
+            self.upload_i32(&ev.counts, rows, cols)?,
+            self.upload_f32(&ev.a, rows, cols)?,
+            self.upload_f32(&ev.b, rows, cols)?,
+            self.upload_f32(&ev.na, rows, cols)?,
+            self.upload_f32(&ev.nb, rows, cols)?,
+            self.upload_i32(&noisy, rows, cols)?,
+            self.upload_i32(&ev.types, rows, cols)?,
+        ];
+        timing.upload += t.elapsed();
+
+        let parts = self.run(&exe, &inputs, &mut timing)?;
+        if parts.len() != 5 {
+            bail!("full_event returned {} outputs", parts.len());
+        }
+        let t = Instant::now();
+        let sensor = SensorStageOut {
+            energy: parts[0].to_vec::<f32>()?,
+            noise: parts[1].to_vec::<f32>()?,
+            sig: parts[2].to_vec::<f32>()?,
+        };
+        let particle = ParticleStageOut {
+            seeds: parts[3].to_vec::<i32>()?,
+            sums: parts[4].to_vec::<f32>()?,
+        };
+        timing.download += t.elapsed();
+        Ok((sensor, particle, timing))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edm::calib;
+    use crate::edm::generator::{EventConfig, EventGenerator};
+    use crate::edm::reco;
+    use crate::marionette::layout::SoAVec;
+
+    fn engine() -> Option<Engine> {
+        Engine::load_default().ok()
+    }
+
+    #[test]
+    fn sensor_stage_matches_host() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ev = EventGenerator::new(EventConfig::grid(32, 32, 3), 42).generate();
+        let (dev, timing) = eng.run_sensor_stage(&ev).unwrap();
+        assert!(timing.total() > Duration::ZERO);
+
+        let mut host = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut host);
+        for i in 0..ev.num_sensors() {
+            assert!(
+                (dev.energy[i] - host.energy(i)).abs() <= 1e-3 * host.energy(i).abs().max(1.0),
+                "energy[{i}]: dev={} host={}",
+                dev.energy[i],
+                host.energy(i)
+            );
+            assert!((dev.sig[i] - host.sig(i)).abs() <= 1e-3 * host.sig(i).abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn particle_stage_matches_host_reco() {
+        let Some(eng) = engine() else { return };
+        let ev = EventGenerator::new(EventConfig::grid(64, 64, 4), 7).generate();
+        let mut host = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut host);
+        let host_particles = reco::reconstruct(&host);
+
+        let (s, _) = eng.run_sensor_stage(&ev).unwrap();
+        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let (p, _) = eng
+            .run_particle_stage(64, 64, &s.energy, &s.sig, &ev.types, &noisy)
+            .unwrap();
+        let dev_particles = reco::particles_from_planes::<SoAVec>(
+            64, 64, ev.event_id, &p.seeds, &p.sums, &s.sig,
+        );
+
+        assert_eq!(dev_particles.len(), host_particles.len());
+        for (i, hp) in host_particles.iter().enumerate() {
+            assert_eq!(dev_particles.origin(i), hp.origin);
+            let rel = |a: f32, b: f32| (a - b).abs() <= 2e-3 * b.abs().max(1.0);
+            assert!(rel(dev_particles.energy(i), hp.energy));
+            assert!(rel(dev_particles.x(i), hp.x));
+            assert!(rel(dev_particles.y(i), hp.y));
+            assert_eq!(dev_particles.sensors(i).to_vec(), hp.sensors);
+            for t in 0..3 {
+                assert!(rel(dev_particles.e_contribution(i, t), hp.e_contribution[t]));
+                assert_eq!(dev_particles.noisy_count(i, t), hp.noisy_count[t]);
+            }
+        }
+    }
+
+    #[test]
+    fn full_event_equals_staged() {
+        let Some(eng) = engine() else { return };
+        let ev = EventGenerator::new(EventConfig::grid(32, 32, 2), 5).generate();
+        let (s1, _) = eng.run_sensor_stage(&ev).unwrap();
+        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let (p1, _) = eng
+            .run_particle_stage(32, 32, &s1.energy, &s1.sig, &ev.types, &noisy)
+            .unwrap();
+        let (s2, p2, _) = eng.run_full_event(&ev).unwrap();
+        assert_eq!(s1.energy, s2.energy);
+        assert_eq!(p1.seeds, p2.seeds);
+        assert_eq!(p1.sums, p2.sums);
+    }
+
+    #[test]
+    fn executable_cache_reused() {
+        let Some(eng) = engine() else { return };
+        let d1 = eng.warm("sensor_stage", 16, 16).unwrap();
+        let d2 = eng.warm("sensor_stage", 16, 16).unwrap();
+        assert!(d1 > Duration::ZERO);
+        assert_eq!(d2, Duration::ZERO);
+        assert_eq!(eng.cached(), 1);
+    }
+
+    #[test]
+    fn golden_event_through_device() {
+        let Some(eng) = engine() else { return };
+        let Some(g) = crate::edm::golden::load_golden() else { return };
+        let ev = RawEvent {
+            event_id: 0,
+            rows: g.rows,
+            cols: g.cols,
+            counts: g.tensor("counts").as_i32(),
+            types: g.tensor("types").as_i32(),
+            noisy: g.tensor("noisy").as_i32().iter().map(|&x| x as u8).collect(),
+            a: g.tensor("a").as_f32(),
+            b: g.tensor("b").as_f32(),
+            na: g.tensor("na").as_f32(),
+            nb: g.tensor("nb").as_f32(),
+            truth: vec![],
+        };
+        let (s, p, _) = eng.run_full_event(&ev).unwrap();
+        let want_energy = g.tensor("energy").as_f32();
+        let want_seeds = g.tensor("seeds").as_i32();
+        let want_sums = g.tensor("sums").as_f32();
+        for i in 0..s.energy.len() {
+            assert!((s.energy[i] - want_energy[i]).abs() <= 1e-3 * want_energy[i].abs().max(1.0));
+        }
+        assert_eq!(p.seeds, want_seeds);
+        for i in 0..p.sums.len() {
+            assert!((p.sums[i] - want_sums[i]).abs() <= 1e-2 * want_sums[i].abs().max(1.0));
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The device runtime: loads AOT artifacts and runs them on PJRT.
+//!
+//! This is the "accelerator" half of the reproduction (DESIGN.md §2):
+//! `python/compile/aot.py` lowers the JAX + Pallas compute graph to HLO
+//! text once at build time; this module loads those artifacts
+//! ([`artifact`]), compiles them on the XLA CPU PJRT client ([`client`]),
+//! and executes them from the Rust request path ([`executor`]) with
+//! genuine upload/execute/download phases. Python never runs here.
+//!
+//! [`devmem`] keeps event planes resident on the device between stages
+//! (the paper's device-side collections, whose interface is transfers and
+//! kernel launches rather than element access).
+
+pub mod artifact;
+pub mod client;
+pub mod devmem;
+pub mod executor;
+
+pub use artifact::{ArtifactRecord, Manifest, TensorSpec};
+pub use executor::{Engine, ExecTiming, ParticleStageOut, SensorStageOut};

@@ -1,0 +1,10 @@
+//! In-tree substrate utilities.
+//!
+//! The build image has no network access and only the `xla` crate's
+//! vendored dependency set, so the usual ecosystem crates (serde_json,
+//! rand, criterion, proptest) are unavailable; these modules provide the
+//! small slices of them this project needs (DESIGN.md §3).
+
+pub mod json;
+pub mod prop;
+pub mod rng;

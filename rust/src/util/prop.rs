@@ -1,0 +1,167 @@
+//! Mini property-testing framework (substrate: proptest is not vendored).
+//!
+//! Runs a closure over many seeded-random cases; on failure it reports the
+//! failing case number and seed so the case can be replayed. Includes a
+//! simple integer-shrinking pass for `Vec`-shaped inputs via
+//! [`Cases::shrinkable`]. Used by the invariant tests in
+//! `rust/tests/prop_marionette.rs`.
+
+use super::rng::Rng;
+
+/// Property-test driver: `CASES` seeded cases per property.
+pub struct Cases {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        // Seed can be pinned for replay: MARIONETTE_PROP_SEED=1234
+        let seed = std::env::var("MARIONETTE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Cases { cases: 64, seed }
+    }
+}
+
+impl Cases {
+    pub fn new(cases: usize) -> Self {
+        Cases { cases, ..Default::default() }
+    }
+
+    /// Check `prop` on `self.cases` random cases. `prop` returns
+    /// `Err(description)` to fail. Panics with the seed on failure.
+    pub fn check<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B9);
+            let mut rng = Rng::seed_from_u64(case_seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property {name:?} failed on case {case} \
+                     (replay: MARIONETTE_PROP_SEED={}): {msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+
+    /// Check a property driven by a generated `Vec<u64>` *program* (e.g. a
+    /// sequence of operations). On failure, greedily shrinks the program
+    /// (removing chunks, then halving values) and reports the smallest
+    /// failing program found.
+    pub fn shrinkable<F>(&self, name: &str, max_len: usize, mut prop: F)
+    where
+        F: FnMut(&[u64]) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x2545F491);
+            let mut rng = Rng::seed_from_u64(case_seed);
+            let len = rng.range_usize(0, max_len + 1);
+            let program: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            if let Err(first) = prop(&program) {
+                let (small, last) = shrink(&program, first, &mut prop);
+                panic!(
+                    "property {name:?} failed on case {case} \
+                     (replay: MARIONETTE_PROP_SEED={}); shrunk program \
+                     ({} ops): {:?}: {last}",
+                    self.seed,
+                    small.len(),
+                    &small[..small.len().min(16)],
+                );
+            }
+        }
+    }
+}
+
+fn shrink<F>(program: &[u64], first_msg: String, prop: &mut F) -> (Vec<u64>, String)
+where
+    F: FnMut(&[u64]) -> Result<(), String>,
+{
+    let mut best = program.to_vec();
+    let mut msg = first_msg;
+    // Pass 1: remove halves/quarters/single elements.
+    let mut chunk = (best.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        while i < best.len() {
+            let mut cand = best.clone();
+            let end = (i + chunk).min(cand.len());
+            cand.drain(i..end);
+            match prop(&cand) {
+                Err(m) => {
+                    best = cand;
+                    msg = m;
+                    // retry same position
+                }
+                Ok(()) => i += chunk,
+            }
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    // Pass 2: shrink values toward zero.
+    for i in 0..best.len() {
+        while best[i] > 0 {
+            let mut cand = best.clone();
+            cand[i] /= 2;
+            match prop(&cand) {
+                Err(m) => {
+                    best = cand;
+                    msg = m;
+                }
+                Ok(()) => break,
+            }
+        }
+    }
+    (best, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Cases::new(32).check("u64-roundtrip", |rng| {
+            let x = rng.next_u64();
+            if x.rotate_left(13).rotate_right(13) == x {
+                Ok(())
+            } else {
+                Err("rotation broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_seed() {
+        Cases::new(4).check("always-fails", |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn shrink_finds_minimal_program() {
+        // Property: fails iff program contains a value >= 100.
+        let mut calls = 0usize;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Cases::new(8).shrinkable("has-big", 64, |p| {
+                calls += 1;
+                if p.iter().any(|&x| x >= 100) {
+                    Err("big value".into())
+                } else {
+                    Ok(())
+                }
+            });
+        }));
+        // Some case contains a big value with overwhelming probability;
+        // the shrunk program should be a single element in [100, 200).
+        let err = res.unwrap_err();
+        let s = err.downcast_ref::<String>().unwrap();
+        assert!(s.contains("1 ops"), "{s}");
+    }
+}

