@@ -1,9 +1,12 @@
 //! Bench: **transfer machinery** (§VII-A/B) — layout-conversion ladder
 //! (plane / strided / element-wise rungs), host→staging uploads with DMA
-//! accounting, and raw `memcopy_with_context` bandwidth.
+//! accounting, raw `memcopy_with_context` bandwidth, and the
+//! plan-amortisation comparison (one cached `TransferPlan` executed N
+//! times vs the per-call ladder walk).
 
-use marionette::bench_support::figures::transfers;
+use marionette::bench_support::figures::{transfers, PLANNED_SERIES, UNPLANNED_SERIES};
 use marionette::bench_support::Harness;
+use marionette::marionette::transfer::plan_cache_stats;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("MARIONETTE_BENCH_QUICK").is_ok();
@@ -11,6 +14,35 @@ fn main() -> anyhow::Result<()> {
     let h = if quick { Harness::quick() } else { Harness::default() };
     let table = transfers(grid, h)?;
     println!("{}", table.render());
+
+    // Plan amortisation: compiled-once execution vs walking the ladder
+    // on every call (the paper's compile-time TransferSpecification
+    // claim, §VII-B).
+    let time_of = |label: &str| {
+        table
+            .series
+            .iter()
+            .find(|s| s.label == label)
+            .and_then(|s| s.points.first())
+            .map(|&(_, t)| t)
+    };
+    if let (Some(unplanned), Some(planned)) =
+        (time_of(UNPLANNED_SERIES), time_of(PLANNED_SERIES))
+    {
+        let ratio = unplanned.as_secs_f64() / planned.as_secs_f64().max(1e-12);
+        println!(
+            "plan amortisation (SoAVec -> staging SoABlob): \
+             ladder {:.1}us vs planned {:.1}us -> {ratio:.2}x",
+            unplanned.as_secs_f64() * 1e6,
+            planned.as_secs_f64() * 1e6,
+        );
+    }
+    let cache = plan_cache_stats();
+    println!(
+        "plan cache: {} entries, {} hits, {} misses",
+        cache.entries, cache.hits, cache.misses
+    );
+
     let path = table.save_csv("transfers")?;
     println!("csv -> {}", path.display());
     Ok(())

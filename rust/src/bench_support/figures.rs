@@ -26,7 +26,7 @@ use crate::edm::handwritten::{HwParticlesAoS, HwSensorsAoS, HwSensorsSoA};
 use crate::edm::{calib, reco};
 use crate::marionette::layout::{AoS, AoSoA, SoABlob, SoAVec};
 use crate::marionette::memory::{StagingContext, StagingInfo};
-use crate::marionette::transfer::copy_collection;
+use crate::marionette::transfer::{copy_collection, copy_collection_unplanned, plan_for};
 use crate::runtime::Engine;
 
 use super::{Harness, Series, Table};
@@ -390,8 +390,15 @@ pub fn zero_cost(grid: usize, harness: Harness) -> Result<Table> {
 // Transfer benchmarks (§VII)
 // ---------------------------------------------------------------------
 
+/// Series labels of the planned-vs-unplanned comparison in
+/// [`transfers`] (shared with `benches/transfers.rs`, which prints the
+/// amortisation ratio).
+pub const PLANNED_SERIES: &str = "planned-exec";
+pub const UNPLANNED_SERIES: &str = "ladder-per-call";
+
 /// Transfer table: layout-conversion times for a fixed collection size,
-/// plus raw `memcopy_with_context` bandwidth points. X encodes bytes.
+/// plus raw `memcopy_with_context` bandwidth points and the
+/// planned-vs-unplanned amortisation comparison. X encodes bytes.
 pub fn transfers(grid: usize, harness: Harness) -> Result<Table> {
     let ev = event_for_grid(grid, 4, 17);
     let mut table = Table::new(
@@ -429,6 +436,37 @@ pub fn transfers(grid: usize, harness: Harness) -> Result<Table> {
             copy_collection(s0.raw(), d.raw_mut());
         }));
         table.push(s);
+    }
+
+    // Plan amortisation: the multi-field SoAVec -> staging SoABlob case,
+    // per-call ladder walk (strategy re-derived + destination rebuilt
+    // every call) vs one cached plan executed into a reused staging
+    // buffer. A deliberately small grid, so the per-call overhead the
+    // plan removes is visible next to the memcpy floor.
+    {
+        let small = event_for_grid(32, 2, 19);
+        let s0 = small.to_collection::<SoAVec>();
+        let xbytes = (s0.len() * 30) as f64;
+        let info = StagingInfo::default();
+        let mut d =
+            crate::edm::SensorCollection::<SoABlob<StagingContext>>::new_in(info);
+        let mut unplanned = Series::new(UNPLANNED_SERIES);
+        unplanned.push(
+            xbytes,
+            harness.measure(|| {
+                copy_collection_unplanned(s0.raw(), d.raw_mut());
+            }),
+        );
+        table.push(unplanned);
+        let plan = plan_for::<SoAVec, SoABlob<StagingContext>>(s0.schema());
+        let mut planned = Series::new(PLANNED_SERIES);
+        planned.push(
+            xbytes,
+            harness.measure(|| {
+                plan.execute(s0.raw(), d.raw_mut());
+            }),
+        );
+        table.push(planned);
     }
 
     // Raw byte-bandwidth points.
@@ -587,6 +625,8 @@ mod tests {
         let h = Harness { runs: 2, keep: 1, warmup: 0 };
         let t = transfers(32, h).unwrap();
         assert!(t.series.iter().any(|s| s.label == "host->staging"));
+        assert!(t.series.iter().any(|s| s.label == PLANNED_SERIES));
+        assert!(t.series.iter().any(|s| s.label == UNPLANNED_SERIES));
         assert!(t.to_csv().contains("raw-memcpy"));
     }
 

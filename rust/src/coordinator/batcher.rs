@@ -14,11 +14,12 @@ use std::collections::VecDeque;
 pub struct Batcher<T> {
     pending: VecDeque<(usize, T)>,
     max_batch: usize,
+    formed: usize,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize) -> Self {
-        Batcher { pending: VecDeque::new(), max_batch: max_batch.max(1) }
+        Batcher { pending: VecDeque::new(), max_batch: max_batch.max(1), formed: 0 }
     }
 
     pub fn push(&mut self, bucket: usize, item: T) {
@@ -31,6 +32,18 @@ impl<T> Batcher<T> {
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Bucket of the batch the next [`Self::drain_batch`] call would
+    /// return. The device worker peeks this to warm the bucket's
+    /// executable (and its staging plan) before the batch lands.
+    pub fn next_bucket(&self) -> Option<usize> {
+        self.pending.front().map(|&(b, _)| b)
+    }
+
+    /// Non-empty batches drained so far.
+    pub fn batches_formed(&self) -> usize {
+        self.formed
     }
 
     /// Drain the next batch: items sharing the bucket of the oldest
@@ -50,6 +63,9 @@ impl<T> Batcher<T> {
             }
         }
         self.pending = rest;
+        if !batch.is_empty() {
+            self.formed += 1;
+        }
         batch
     }
 }
@@ -99,5 +115,20 @@ mod tests {
     fn empty_drain() {
         let mut b: Batcher<u32> = Batcher::new(4);
         assert!(b.drain_batch().is_empty());
+        assert_eq!(b.batches_formed(), 0);
+    }
+
+    #[test]
+    fn peeks_next_bucket_and_counts_batches() {
+        let mut b = Batcher::new(8);
+        assert_eq!(b.next_bucket(), None);
+        b.push(64, 0);
+        b.push(128, 1);
+        assert_eq!(b.next_bucket(), Some(64));
+        b.drain_batch();
+        assert_eq!(b.next_bucket(), Some(128));
+        b.drain_batch();
+        assert_eq!(b.next_bucket(), None);
+        assert_eq!(b.batches_formed(), 2);
     }
 }

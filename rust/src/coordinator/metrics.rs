@@ -73,6 +73,11 @@ pub struct PipelineMetrics {
     pub events_device: AtomicUsize,
     pub events_spilled: AtomicUsize,
     pub particles_out: AtomicUsize,
+    /// Planned layout/context transfers executed by the workers
+    /// (staging copies through cached `TransferPlan`s).
+    pub planned_transfers: AtomicUsize,
+    /// Payload bytes those planned transfers moved.
+    pub planned_bytes: AtomicUsize,
     pub device_batches: AtomicUsize,
     pub device_upload_us: AtomicU64,
     pub device_execute_us: AtomicU64,
@@ -90,6 +95,12 @@ pub struct MetricsSnapshot {
     pub events_device: usize,
     pub events_spilled: usize,
     pub particles_out: usize,
+    pub planned_transfers: usize,
+    pub planned_bytes: usize,
+    /// Process-wide transfer-plan-cache hits at snapshot time.
+    pub plan_cache_hits: u64,
+    /// Process-wide transfer-plan-cache misses at snapshot time.
+    pub plan_cache_misses: u64,
     pub device_batches: usize,
     pub device_upload: Duration,
     pub device_execute: Duration,
@@ -102,12 +113,18 @@ pub struct MetricsSnapshot {
 
 impl PipelineMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // One consistent read of the process-wide plan-cache counters.
+        let plan_cache = crate::marionette::transfer::plan_cache_stats();
         MetricsSnapshot {
             events_in: self.events_in.load(Ordering::Relaxed),
             events_host: self.events_host.load(Ordering::Relaxed),
             events_device: self.events_device.load(Ordering::Relaxed),
             events_spilled: self.events_spilled.load(Ordering::Relaxed),
             particles_out: self.particles_out.load(Ordering::Relaxed),
+            planned_transfers: self.planned_transfers.load(Ordering::Relaxed),
+            planned_bytes: self.planned_bytes.load(Ordering::Relaxed),
+            plan_cache_hits: plan_cache.hits,
+            plan_cache_misses: plan_cache.misses,
             device_batches: self.device_batches.load(Ordering::Relaxed),
             device_upload: Duration::from_micros(self.device_upload_us.load(Ordering::Relaxed)),
             device_execute: Duration::from_micros(
@@ -130,6 +147,7 @@ impl MetricsSnapshot {
         format!(
             "events: in={} host={} device={} spilled={}\n\
              particles: {}\n\
+             transfers: planned={} bytes={} plan-cache hits={} misses={}\n\
              device: batches={} upload={:?} execute={:?} download={:?}\n\
              latency: host-mean={:?} device-mean={:?} e2e-mean={:?} e2e-p99={:?}",
             self.events_in,
@@ -137,6 +155,10 @@ impl MetricsSnapshot {
             self.events_device,
             self.events_spilled,
             self.particles_out,
+            self.planned_transfers,
+            self.planned_bytes,
+            self.plan_cache_hits,
+            self.plan_cache_misses,
             self.device_batches,
             self.device_upload,
             self.device_execute,

@@ -3,16 +3,27 @@
 //! * Source: synthetic event stream (`edm::generator`), routed as it is
 //!   produced.
 //! * Host workers: the CPU path — fill a Marionette SoA collection,
-//!   calibrate, reconstruct, fill back the handwritten AoS (exactly the
-//!   Figure 1+2 CPU pipeline).
+//!   calibrate, reconstruct, stage the particle collection into the
+//!   handwritten-AoS output form through a cached [`TransferPlan`], fill
+//!   back (exactly the Figure 1+2 CPU pipeline).
 //! * Device worker: one dedicated thread owning a `runtime::Engine`
 //!   (PJRT handles are single-threaded); drains its bounded queue
-//!   through the bucket [`Batcher`], runs the fused `full_event`
-//!   executable, gathers particles from the returned planes, fills back.
+//!   through the bucket [`Batcher`], stages each event through its
+//!   pinned staging buffer (DMA-accounted, DESIGN.md §2), runs the fused
+//!   `full_event` executable, gathers particles from the returned
+//!   planes, fills back.
 //! * Collector: aggregates per-event results + metrics.
+//!
+//! Transfer strategy is **compiled once**: workers warm the staging
+//! plans at startup and every per-event copy is a plan-cache hit that
+//! executes into a reused destination collection (no re-derivation of
+//! the ladder, no reallocation in steady state). Plan-level byte
+//! counters feed [`metrics`](super::metrics).
 //!
 //! Every queue is a bounded `sync_channel`: a slow stage backpressures
 //! the source instead of growing memory.
+//!
+//! [`TransferPlan`]: crate::marionette::transfer::TransferPlan
 
 use std::sync::mpsc::{channel, sync_channel};
 use std::sync::{Arc, Mutex};
@@ -21,8 +32,12 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::edm::generator::{EventGenerator, RawEvent};
+use crate::edm::particle::{ParticleCollection, ParticleProps};
+use crate::edm::sensor::{SensorCollection, SensorProps};
 use crate::edm::{calib, reco};
-use crate::marionette::layout::SoAVec;
+use crate::marionette::layout::{AoS, SoAVec};
+use crate::marionette::memory::{StagingContext, StagingInfo};
+use crate::marionette::transfer;
 use crate::runtime::Engine;
 
 use super::batcher::Batcher;
@@ -83,28 +98,69 @@ struct Task {
 
 /// Process one event on the host path (shared by workers and benches).
 pub fn process_host(ev: &RawEvent) -> (usize, f64) {
+    let mut staged = ParticleCollection::<AoS>::new();
+    let (n, energy, _bytes) = process_host_staged(ev, &mut staged);
+    (n, energy)
+}
+
+/// Host path with an explicit reusable staging collection: fill +
+/// calibrate + reconstruct over SoA, then stage the particle collection
+/// into the handwritten-AoS output form through the cached transfer
+/// plan and fill back through its dense record view. Returns
+/// (particles, energy, staged bytes).
+pub fn process_host_staged(
+    ev: &RawEvent,
+    staged: &mut ParticleCollection<AoS>,
+) -> (usize, f64, usize) {
     let mut col = ev.to_collection::<SoAVec>();
     calib::calibrate_collection(&mut col);
     let particles = reco::reconstruct_collection(&col);
     let pc = reco::into_collection::<SoAVec>(ev.event_id, &particles);
-    let back = reco::fill_back_aos(&pc);
+    let stats = staged.transfer_from_stats(&pc);
+    let back = reco::fill_back_aos(staged);
     let energy = back.data.iter().map(|p| p.energy as f64).sum();
-    (back.data.len(), energy)
+    (back.data.len(), energy, stats.bytes)
 }
 
 /// Process one event on the device path (engine-owning thread only).
-pub fn process_device(engine: &Engine, ev: &RawEvent) -> Result<(usize, f64, crate::runtime::ExecTiming)> {
+pub fn process_device(
+    engine: &Engine,
+    ev: &RawEvent,
+) -> Result<(usize, f64, crate::runtime::ExecTiming)> {
+    let mut staged = ParticleCollection::<AoS>::new();
+    let (n, energy, timing, _bytes) = process_device_staged(engine, ev, &mut staged)?;
+    Ok((n, energy, timing))
+}
+
+/// Device path with an explicit reusable staging collection; see
+/// [`process_host_staged`]. Returns (particles, energy, timing, staged
+/// bytes).
+pub fn process_device_staged(
+    engine: &Engine,
+    ev: &RawEvent,
+    staged: &mut ParticleCollection<AoS>,
+) -> Result<(usize, f64, crate::runtime::ExecTiming, usize)> {
     let (s, p, timing) = engine.run_full_event(ev)?;
     let pc = reco::particles_from_planes::<SoAVec>(
         ev.rows, ev.cols, ev.event_id, &p.seeds, &p.sums, &s.sig,
     );
-    let back = reco::fill_back_aos(&pc);
+    let stats = staged.transfer_from_stats(&pc);
+    let back = reco::fill_back_aos(staged);
     let energy = back.data.iter().map(|p| p.energy as f64).sum();
-    Ok((back.data.len(), energy, timing))
+    Ok((back.data.len(), energy, timing, stats.bytes))
 }
 
 /// Run the full pipeline to completion.
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
+    // Compile-once setup: register the EDM's specialized rungs and warm
+    // the staging plans before any worker starts, so every per-event
+    // plan lookup below is a cache hit.
+    crate::edm::convert::register_edm_specializations();
+    let _ = transfer::plan_for::<SoAVec, AoS>(&ParticleProps::schema());
+    if cfg.device {
+        let _ = transfer::plan_for::<SoAVec, SoAVec<StagingContext>>(&SensorProps::schema());
+    }
+
     let metrics = Arc::new(PipelineMetrics::default());
     let gauge = QueueGauge::default();
     let router = Router::new(cfg.policy, cfg.device, gauge.clone());
@@ -126,16 +182,22 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         let tx = res_tx.clone();
         let metrics = metrics.clone();
         workers.push(std::thread::spawn(move || {
+            // Staging built once per worker: the cached plan executes
+            // into this reused collection for every event.
+            let mut staged = ParticleCollection::<AoS>::new();
             loop {
                 let task = {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
                 let Ok(task) = task else { break };
-                let (n, energy) = process_host(&task.ev);
+                let (n, energy, bytes) = process_host_staged(&task.ev, &mut staged);
                 let latency = task.enqueued.elapsed();
-                metrics.events_host.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                metrics.particles_out.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                use std::sync::atomic::Ordering::Relaxed;
+                metrics.events_host.fetch_add(1, Relaxed);
+                metrics.particles_out.fetch_add(n, Relaxed);
+                metrics.planned_transfers.fetch_add(1, Relaxed);
+                metrics.planned_bytes.fetch_add(bytes, Relaxed);
                 metrics.host_latency.record(latency);
                 metrics.e2e_latency.record(latency);
                 let _ = tx.send(EventResult {
@@ -157,22 +219,22 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         let max_batch = cfg.max_batch;
         let warm_buckets = cfg.warm_buckets.clone();
         workers.push(std::thread::spawn(move || {
+            use std::sync::atomic::Ordering::Relaxed;
             let engine = match Engine::load_default() {
                 Ok(e) => e,
                 Err(e) => {
                     eprintln!("device worker disabled: {e:#}");
                     // Drain and bounce everything to nowhere: the router
                     // already sent events here, so process on host path.
+                    let mut staged = ParticleCollection::<AoS>::new();
                     while let Ok(task) = dev_rx.recv() {
                         gauge.dec();
-                        let (n, energy) = process_host(&task.ev);
+                        let (n, energy, bytes) = process_host_staged(&task.ev, &mut staged);
                         let latency = task.enqueued.elapsed();
-                        metrics
-                            .events_host
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        metrics
-                            .particles_out
-                            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                        metrics.events_host.fetch_add(1, Relaxed);
+                        metrics.particles_out.fetch_add(n, Relaxed);
+                        metrics.planned_transfers.fetch_add(1, Relaxed);
+                        metrics.planned_bytes.fetch_add(bytes, Relaxed);
                         metrics.e2e_latency.record(latency);
                         let _ = tx.send(EventResult {
                             event_id: task.ev.event_id,
@@ -192,6 +254,16 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                     eprintln!("device warmup for {b}x{b} skipped: {e:#}");
                 }
             }
+            // Staging state built once at worker startup and reused per
+            // event: the host-side sensor collection, the pinned staging
+            // buffer its planned copy lands in (the DMA-accounted upload
+            // analogue, DESIGN.md §2), and the particle output staging.
+            let staging_info = StagingInfo::default();
+            let mut sensors_host = SensorCollection::<SoAVec>::new();
+            let mut sensors_staged =
+                SensorCollection::<SoAVec<StagingContext>>::new_in(staging_info.clone());
+            let mut particles_staged = ParticleCollection::<AoS>::new();
+            let mut warmed_bucket = None;
             let mut batcher: Batcher<Task> = Batcher::new(max_batch);
             loop {
                 // Block for one task, then opportunistically drain more.
@@ -206,18 +278,34 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                     Err(_) => {}
                 }
                 while !batcher.is_empty() {
+                    // Peek the upcoming bucket and pre-compile its
+                    // executable off the per-event path (warm_buckets
+                    // may not have covered it).
+                    if let Some(b) = batcher.next_bucket() {
+                        if warmed_bucket != Some(b) {
+                            let _ = engine.warm("full_event", b, b);
+                            warmed_bucket = Some(b);
+                        }
+                    }
                     let batch = batcher.drain_batch();
-                    metrics
-                        .device_batches
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.device_batches.fetch_add(1, Relaxed);
                     for (_, task) in batch {
                         gauge.dec();
-                        use std::sync::atomic::Ordering::Relaxed;
-                        match process_device(&engine, &task.ev) {
-                            Ok((n, energy, timing)) => {
+                        // Stage the event through the pinned buffer: the
+                        // cached host→staging plan reuses the buffer and
+                        // books the H2D traffic the upload represents.
+                        task.ev.fill_collection(&mut sensors_host);
+                        let up = sensors_staged.transfer_from_stats(&sensors_host);
+                        metrics.planned_transfers.fetch_add(1, Relaxed);
+                        metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
+                        match process_device_staged(&engine, &task.ev, &mut particles_staged)
+                        {
+                            Ok((n, energy, timing, bytes)) => {
                                 let latency = task.enqueued.elapsed();
                                 metrics.events_device.fetch_add(1, Relaxed);
                                 metrics.particles_out.fetch_add(n, Relaxed);
+                                metrics.planned_transfers.fetch_add(1, Relaxed);
+                                metrics.planned_bytes.fetch_add(bytes, Relaxed);
                                 metrics
                                     .device_upload_us
                                     .fetch_add(timing.upload.as_micros() as u64, Relaxed);
@@ -242,10 +330,13 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                                     "device failed on event {}: {e:#}; host fallback",
                                     task.ev.event_id
                                 );
-                                let (n, energy) = process_host(&task.ev);
+                                let (n, energy, bytes) =
+                                    process_host_staged(&task.ev, &mut particles_staged);
                                 let latency = task.enqueued.elapsed();
                                 metrics.events_host.fetch_add(1, Relaxed);
                                 metrics.particles_out.fetch_add(n, Relaxed);
+                                metrics.planned_transfers.fetch_add(1, Relaxed);
+                                metrics.planned_bytes.fetch_add(bytes, Relaxed);
                                 metrics.e2e_latency.record(latency);
                                 let _ = tx.send(EventResult {
                                     event_id: task.ev.event_id,
@@ -318,6 +409,9 @@ mod tests {
         assert_eq!(rep.metrics.events_host, 12);
         assert_eq!(rep.metrics.events_device, 0);
         assert!(rep.total_particles() > 0, "3 deposits per event must seed");
+        // One planned staging transfer per event, through the cache.
+        assert_eq!(rep.metrics.planned_transfers, 12);
+        assert!(rep.metrics.planned_bytes > 0);
         // Results are sorted and complete.
         for (i, r) in rep.results.iter().enumerate() {
             assert_eq!(r.event_id, i as u64);
@@ -367,5 +461,6 @@ mod tests {
         let rep = run_pipeline(&cfg).unwrap();
         assert!(rep.events_per_sec() > 0.0);
         assert!(rep.report().contains("events"));
+        assert!(rep.report().contains("plan-cache"));
     }
 }

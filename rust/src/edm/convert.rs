@@ -1,0 +1,244 @@
+//! Specialized transfer rungs for the EDM (paper §VII-B).
+//!
+//! The paper's `TransferSpecification` lets users register a fast path
+//! for a concrete (source, destination) pair that outranks the generic
+//! ladder. Here the handwritten sensor AoS↔SoA conversions — the code a
+//! programmer would write by hand to move between listing-1-style
+//! records and per-property arrays — are registered as `Specialized`
+//! rungs *inside* the transfer plans for the sensor schema, so
+//! `transfer_from` / `copy_collection` dispatch to them automatically
+//! instead of bypassing the ladder.
+//!
+//! The converters are one-pass: dense column slices on the SoA side,
+//! the `#[repr(C)]` record view on the AoS side (byte-identical to
+//! `HwSensor`, pinned by `blob::tests::aos_matches_handwritten_repr_c`).
+
+use std::sync::Once;
+
+use crate::marionette::collection::RawCollection;
+use crate::marionette::layout::{AoS, SoAVec};
+use crate::marionette::transfer::register_specialized;
+
+use super::sensor::{SensorProps, SensorRecord};
+
+/// Register the EDM's specialized converters (idempotent). Call before
+/// the first sensor-collection transfer whose pair should take the fast
+/// path; the pipeline does this at startup.
+pub fn register_edm_specializations() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let schema = SensorProps::schema();
+        register_specialized::<SoAVec, AoS, _>(&schema, soavec_sensors_to_aos);
+        register_specialized::<AoS, SoAVec, _>(&schema, aos_sensors_to_soavec);
+    });
+}
+
+fn copy_globals<LS, LD>(src: &RawCollection<LS>, dst: &mut RawCollection<LD>)
+where
+    LS: crate::marionette::layout::Layout,
+    LD: crate::marionette::layout::Layout,
+{
+    dst.set_global::<u32>(SensorProps::ROWS, src.get_global::<u32>(SensorProps::ROWS));
+    dst.set_global::<u32>(SensorProps::COLS, src.get_global::<u32>(SensorProps::COLS));
+    dst.set_global::<u64>(
+        SensorProps::EVENT_ID,
+        src.get_global::<u64>(SensorProps::EVENT_ID),
+    );
+}
+
+/// Bytes a whole-collection sensor conversion moves (records + globals).
+fn sensor_bytes(n: usize) -> usize {
+    n * std::mem::size_of::<SensorRecord>() + 2 * 4 + 8
+}
+
+/// Handwritten one-pass SoA → AoS: read every dense column, write whole
+/// records (exactly the loop `RawEvent::fill_hw_aos` runs by hand).
+fn soavec_sensors_to_aos(src: &RawCollection<SoAVec>, dst: &mut RawCollection<AoS>) -> usize {
+    let n = src.len();
+    if dst.len() != n {
+        dst.resize(0);
+        dst.resize(n);
+    }
+    copy_globals(src, dst);
+    if n == 0 {
+        return sensor_bytes(0);
+    }
+
+    let type_id = src.field_slice::<i32>(SensorProps::TYPE_ID).expect("soa-vec dense");
+    let counts = src.field_slice::<i32>(SensorProps::COUNTS).expect("soa-vec dense");
+    let energy = src.field_slice::<f32>(SensorProps::ENERGY).expect("soa-vec dense");
+    let noise = src.field_slice::<f32>(SensorProps::NOISE).expect("soa-vec dense");
+    let sig = src.field_slice::<f32>(SensorProps::SIG).expect("soa-vec dense");
+    let noisy = src.field_slice::<u8>(SensorProps::NOISY).expect("soa-vec dense");
+    let param_a = src.field_slice::<f32>(SensorProps::PARAM_A).expect("soa-vec dense");
+    let param_b = src.field_slice::<f32>(SensorProps::PARAM_B).expect("soa-vec dense");
+    let noise_a = src.field_slice::<f32>(SensorProps::NOISE_A).expect("soa-vec dense");
+    let noise_b = src.field_slice::<f32>(SensorProps::NOISE_B).expect("soa-vec dense");
+
+    let recs = aos_records_mut(dst, n);
+    for (i, r) in recs.iter_mut().enumerate() {
+        *r = SensorRecord {
+            type_id: type_id[i],
+            counts: counts[i],
+            energy: energy[i],
+            noise: noise[i],
+            sig: sig[i],
+            noisy: noisy[i],
+            param_a: param_a[i],
+            param_b: param_b[i],
+            noise_a: noise_a[i],
+            noise_b: noise_b[i],
+        };
+    }
+    sensor_bytes(n)
+}
+
+/// Handwritten one-pass AoS → SoA: read the record view, fill every
+/// dense column (the loop `RawEvent::fill_hw_soa` runs by hand).
+fn aos_sensors_to_soavec(src: &RawCollection<AoS>, dst: &mut RawCollection<SoAVec>) -> usize {
+    let n = src.len();
+    if dst.len() != n {
+        dst.resize(0);
+        dst.resize(n);
+    }
+    copy_globals(src, dst);
+    if n == 0 {
+        return sensor_bytes(0);
+    }
+
+    let recs = aos_records(src, n);
+    macro_rules! fill_column {
+        ($meta:expr, $ty:ty, $field:ident) => {{
+            let p = dst.plane_mut($meta, 0).expect("soa-vec dense plane");
+            debug_assert_eq!(p.stride, ::std::mem::size_of::<$ty>());
+            // SAFETY: dense plane of `n` `$ty` elements, derived from a
+            // mutable borrow of `dst`; `recs` borrows `src`.
+            let out =
+                unsafe { ::std::slice::from_raw_parts_mut(p.base as *mut $ty, n) };
+            for (o, r) in out.iter_mut().zip(recs) {
+                *o = r.$field;
+            }
+        }};
+    }
+    fill_column!(SensorProps::TYPE_ID, i32, type_id);
+    fill_column!(SensorProps::COUNTS, i32, counts);
+    fill_column!(SensorProps::ENERGY, f32, energy);
+    fill_column!(SensorProps::NOISE, f32, noise);
+    fill_column!(SensorProps::SIG, f32, sig);
+    fill_column!(SensorProps::NOISY, u8, noisy);
+    fill_column!(SensorProps::PARAM_A, f32, param_a);
+    fill_column!(SensorProps::PARAM_B, f32, param_b);
+    fill_column!(SensorProps::NOISE_A, f32, noise_a);
+    fill_column!(SensorProps::NOISE_B, f32, noise_b);
+    sensor_bytes(n)
+}
+
+/// The AoS record view of a raw sensor collection (what the generated
+/// `records()` exposes on the typed collection).
+fn aos_records(src: &RawCollection<AoS>, n: usize) -> &[SensorRecord] {
+    debug_assert_eq!(
+        SensorProps::FIRST_ITEM_META.record_size as usize,
+        std::mem::size_of::<SensorRecord>()
+    );
+    let p = src.plane(SensorProps::TYPE_ID, 0).expect("aos record plane");
+    debug_assert_eq!(p.stride, std::mem::size_of::<SensorRecord>());
+    // SAFETY: the AoS blob stores `n` records byte-identical to
+    // `SensorRecord` starting at the first field's plane base minus its
+    // record offset (0 for the leading field).
+    unsafe {
+        let base = p.base.sub(SensorProps::TYPE_ID.aos_offset as usize);
+        std::slice::from_raw_parts(base as *const SensorRecord, n)
+    }
+}
+
+/// Mutable record view; see [`aos_records`].
+fn aos_records_mut(dst: &mut RawCollection<AoS>, n: usize) -> &mut [SensorRecord] {
+    let p = dst.plane_mut(SensorProps::TYPE_ID, 0).expect("aos record plane");
+    debug_assert_eq!(p.stride, std::mem::size_of::<SensorRecord>());
+    // SAFETY: as `aos_records`, derived from a mutable borrow.
+    unsafe {
+        let base = (p.base as *mut u8).sub(SensorProps::TYPE_ID.aos_offset as usize);
+        std::slice::from_raw_parts_mut(base as *mut SensorRecord, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::generator::{EventConfig, EventGenerator};
+    use super::super::sensor::SensorCollection;
+    use super::*;
+    use crate::marionette::transfer::{copy_collection_stats, TransferPriority};
+
+    fn event_collections() -> (SensorCollection<SoAVec>, SensorCollection<AoS>) {
+        let ev = EventGenerator::new(EventConfig::grid(24, 24, 3), 5).generate();
+        let soa = ev.to_collection::<SoAVec>();
+        let aos = ev.to_collection::<AoS>();
+        (soa, aos)
+    }
+
+    fn assert_sensors_equal<LA, LB>(a: &SensorCollection<LA>, b: &SensorCollection<LB>)
+    where
+        LA: crate::marionette::layout::Layout,
+        LB: crate::marionette::layout::Layout,
+    {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        assert_eq!(a.event_id(), b.event_id());
+        for i in 0..a.len() {
+            assert_eq!(a.type_id(i), b.type_id(i), "sensor {i}");
+            assert_eq!(a.counts(i), b.counts(i), "sensor {i}");
+            assert_eq!(a.energy(i), b.energy(i), "sensor {i}");
+            assert_eq!(a.noise(i), b.noise(i), "sensor {i}");
+            assert_eq!(a.sig(i), b.sig(i), "sensor {i}");
+            assert_eq!(a.noisy(i), b.noisy(i), "sensor {i}");
+            assert_eq!(a.param_a(i), b.param_a(i), "sensor {i}");
+            assert_eq!(a.param_b(i), b.param_b(i), "sensor {i}");
+            assert_eq!(a.noise_a(i), b.noise_a(i), "sensor {i}");
+            assert_eq!(a.noise_b(i), b.noise_b(i), "sensor {i}");
+        }
+    }
+
+    #[test]
+    fn specialized_sensor_pair_outranks_the_ladder() {
+        register_edm_specializations();
+        let (soa, aos_truth) = event_collections();
+
+        let mut aos = SensorCollection::<AoS>::new();
+        let stats = copy_collection_stats(soa.raw(), aos.raw_mut());
+        assert_eq!(stats.priority, TransferPriority::Specialized);
+        assert_eq!(stats.ops, 1);
+        assert!(stats.bytes > 0);
+        assert_sensors_equal(&aos, &aos_truth);
+
+        // Round trip through the reverse specialization.
+        let mut back = SensorCollection::<SoAVec>::new();
+        let stats = copy_collection_stats(aos.raw(), back.raw_mut());
+        assert_eq!(stats.priority, TransferPriority::Specialized);
+        assert_sensors_equal(&back, &soa);
+    }
+
+    #[test]
+    fn specialized_pair_reuses_destination() {
+        register_edm_specializations();
+        let (soa, _) = event_collections();
+        let mut aos = SensorCollection::<AoS>::new();
+        for _ in 0..3 {
+            let rung = aos.transfer_from(&soa);
+            assert_eq!(rung, TransferPriority::Specialized);
+            assert_sensors_equal(&aos, &soa);
+        }
+    }
+
+    #[test]
+    fn unregistered_pairs_stay_generic() {
+        register_edm_specializations();
+        let (soa, _) = event_collections();
+        // SoAVec -> SoABlob has no registered converter.
+        let mut blob =
+            SensorCollection::<crate::marionette::layout::SoABlob>::new();
+        let stats = copy_collection_stats(soa.raw(), blob.raw_mut());
+        assert_eq!(stats.priority, TransferPriority::Plane);
+        assert_sensors_equal(&blob, &soa);
+    }
+}

@@ -18,11 +18,15 @@
 //!   and Figure 2's particle stage), each implemented over Marionette
 //!   collections *and* over the handwritten baselines with identical
 //!   semantics, matching `python/compile/kernels/ref.py`.
+//! * [`convert`] — the handwritten AoS↔SoA sensor conversions registered
+//!   as `Specialized` rungs inside the transfer plans (paper's
+//!   `TransferSpecification` user fast paths).
 //! * [`golden`] — loads the Python-generated golden vectors for
 //!   cross-language equivalence tests.
 
 pub mod calib;
 pub mod constants;
+pub mod convert;
 pub mod generator;
 pub mod golden;
 pub mod handwritten;

@@ -11,11 +11,32 @@
 //!   struct vectors.
 //! * [`SoABlob<C>`] — one blob per tag, field-major.
 //! * [`AoSoA<K, C>`] — one blob per tag, K-wide blocked hybrid.
+//!
+//! Beyond the holder, a layout also exposes its *static geometry* —
+//! [`Layout::plane_shape`] and [`Layout::BLOB_IDENTITY`] — which the
+//! transfer engine uses to compile a [`TransferPlan`] once per
+//! (schema, layouts, contexts) tuple instead of re-deriving the copy
+//! strategy field-by-field on every call (paper §VII-B: the
+//! `TransferSpecification` ladder is resolved at compile time).
+//!
+//! [`TransferPlan`]: super::transfer::TransferPlan
 
-use super::blob::{AoSScheme, AoSoAScheme, BlobHolder, SoABlobScheme};
+use super::blob::{AoSScheme, AoSoAScheme, BlobHolder, BlobLayoutKind, SoABlobScheme};
 use super::holder::LayoutHolder;
 use super::memory::{HostContext, MemoryContext};
+use super::schema::FieldMeta;
 use super::soavec::SoAVecHolder;
+
+/// Capacity-independent description of how a layout stores one plane
+/// (field, array lane). Mirrors what [`LayoutHolder::plane`] returns at
+/// runtime — the agreement is pinned by the transfer tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneShape {
+    /// The plane exists with this byte stride at any capacity.
+    Regular { stride: usize },
+    /// No regular plane: element-wise access only (e.g. AoSoA lanes).
+    Irregular,
+}
 
 /// A way of storing a collection: holder + memory context (paper §V, the
 /// first template parameter of `Collection`).
@@ -25,6 +46,18 @@ pub trait Layout: 'static {
 
     /// Label used in diagnostics and bench tables.
     const NAME: &'static str;
+
+    /// Capacity-independent blob identity. Two layouts with equal
+    /// identities store a size tag's used element prefix byte-identically
+    /// in one contiguous region, so a whole-tag transfer collapses to a
+    /// single block copy (plan coalescing). `None` for per-field storage
+    /// ([`SoAVec`]) and capacity-dependent blobs ([`SoABlob`], whose
+    /// plane bases move with capacity).
+    const BLOB_IDENTITY: Option<BlobLayoutKind> = None;
+
+    /// Static geometry of plane `(meta, k)`; must agree with what the
+    /// holder's `plane` reports at runtime for every capacity.
+    fn plane_shape(meta: FieldMeta, k: usize) -> PlaneShape;
 }
 
 /// Vector-per-property storage (the default).
@@ -34,6 +67,10 @@ impl<C: MemoryContext> Layout for SoAVec<C> {
     type Ctx = C;
     type Holder = SoAVecHolder<C>;
     const NAME: &'static str = "soa-vec";
+
+    fn plane_shape(meta: FieldMeta, _k: usize) -> PlaneShape {
+        PlaneShape::Regular { stride: meta.size as usize }
+    }
 }
 
 /// Array-of-structures blob storage.
@@ -43,6 +80,11 @@ impl<C: MemoryContext> Layout for AoS<C> {
     type Ctx = C;
     type Holder = BlobHolder<AoSScheme, C>;
     const NAME: &'static str = "aos";
+    const BLOB_IDENTITY: Option<BlobLayoutKind> = Some(BlobLayoutKind::AoS);
+
+    fn plane_shape(meta: FieldMeta, _k: usize) -> PlaneShape {
+        PlaneShape::Regular { stride: meta.record_size as usize }
+    }
 }
 
 /// Structure-of-arrays blob storage.
@@ -52,6 +94,10 @@ impl<C: MemoryContext> Layout for SoABlob<C> {
     type Ctx = C;
     type Holder = BlobHolder<SoABlobScheme, C>;
     const NAME: &'static str = "soa-blob";
+
+    fn plane_shape(meta: FieldMeta, _k: usize) -> PlaneShape {
+        PlaneShape::Regular { stride: meta.size as usize }
+    }
 }
 
 /// Blocked AoSoA storage with block size `K`.
@@ -61,4 +107,76 @@ impl<const K: usize, C: MemoryContext> Layout for AoSoA<K, C> {
     type Ctx = C;
     type Holder = BlobHolder<AoSoAScheme<K>, C>;
     const NAME: &'static str = "aosoa";
+    const BLOB_IDENTITY: Option<BlobLayoutKind> = Some(BlobLayoutKind::AoSoA(K));
+
+    fn plane_shape(_meta: FieldMeta, _k: usize) -> PlaneShape {
+        // Lanes jump at block boundaries: no single regular stride.
+        PlaneShape::Irregular
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::schema::Schema;
+    use super::*;
+    use std::sync::Arc;
+
+    /// `plane_shape` must agree with the holder's runtime `plane` view.
+    #[test]
+    fn static_geometry_matches_runtime_planes() {
+        let s = Arc::new(
+            Schema::builder("geom")
+                .per_item::<f32>("a")
+                .per_item::<u8>("b")
+                .array::<i32>("arr", 2)
+                .jagged::<u64, u32>("j")
+                .global::<u64>("g")
+                .build(),
+        );
+
+        fn check<L: Layout>(s: &Arc<Schema>)
+        where
+            <L::Ctx as MemoryContext>::Info: Default,
+        {
+            use super::super::collection::RawCollection;
+            let mut c = RawCollection::<L>::new(s.clone());
+            c.resize(10);
+            c.append_values(0, 4);
+            for (fid, _f) in s.fields() {
+                let meta = s.meta(fid);
+                for k in 0..meta.extent as usize {
+                    match L::plane_shape(meta, k) {
+                        PlaneShape::Regular { stride } => {
+                            let p = c.plane(meta, k).expect("plane promised by shape");
+                            assert_eq!(p.stride, stride, "{} field {fid:?}", L::NAME);
+                        }
+                        PlaneShape::Irregular => {
+                            assert!(c.plane(meta, k).is_none(), "{} field {fid:?}", L::NAME);
+                        }
+                    }
+                }
+            }
+        }
+
+        check::<SoAVec>(&s);
+        check::<AoS>(&s);
+        check::<SoABlob>(&s);
+        check::<AoSoA<4>>(&s);
+        check::<AoSoA<16>>(&s);
+    }
+
+    #[test]
+    fn blob_identities() {
+        assert_eq!(<AoS as Layout>::BLOB_IDENTITY, Some(BlobLayoutKind::AoS));
+        assert_eq!(
+            <AoSoA<8> as Layout>::BLOB_IDENTITY,
+            Some(BlobLayoutKind::AoSoA(8))
+        );
+        assert_ne!(
+            <AoSoA<8> as Layout>::BLOB_IDENTITY,
+            <AoSoA<4> as Layout>::BLOB_IDENTITY
+        );
+        assert_eq!(<SoAVec as Layout>::BLOB_IDENTITY, None);
+        assert_eq!(<SoABlob as Layout>::BLOB_IDENTITY, None);
+    }
 }

@@ -319,12 +319,39 @@ macro_rules! marionette_collection {
             }
 
             /// Copy from a collection of any other layout/context
-            /// (the generic rungs of the transfer ladder).
+            /// through the cached [`TransferPlan`]: the ladder is
+            /// resolved once per (schema, layouts, contexts) tuple and
+            /// reused by every later copy.
+            ///
+            /// [`TransferPlan`]: crate::marionette::transfer::TransferPlan
             pub fn transfer_from<L2: $crate::marionette::layout::Layout>(
                 &mut self,
                 src: &$Col<L2>,
             ) -> $crate::marionette::transfer::TransferPriority {
-                $crate::marionette::transfer::copy_collection(&src.raw, &mut self.raw)
+                self.transfer_from_stats(src).priority
+            }
+
+            /// As [`Self::transfer_from`], returning full execution
+            /// stats (bytes moved, copy ops issued, rung).
+            pub fn transfer_from_stats<L2: $crate::marionette::layout::Layout>(
+                &mut self,
+                src: &$Col<L2>,
+            ) -> $crate::marionette::transfer::TransferStats {
+                let plan =
+                    $crate::marionette::transfer::plan_for::<L2, L>(src.raw.schema());
+                plan.execute(&src.raw, &mut self.raw)
+            }
+
+            /// The cached transfer plan used when copying *from* a
+            /// collection of layout `L2` into this collection's layout
+            /// (compiled on first request, then shared). Typed
+            /// collections of one declaration all share the memoised
+            /// `Props::schema()` instance, so this resolves to exactly
+            /// the plan [`Self::transfer_from`] executes.
+            pub fn transfer_plan_from<L2: $crate::marionette::layout::Layout>(
+                &self,
+            ) -> ::std::sync::Arc<$crate::marionette::transfer::TransferPlan> {
+                $crate::marionette::transfer::plan_for::<L2, L>(self.raw.schema())
             }
 
             // ---- per-item scalar accessors --------------------------

@@ -95,7 +95,21 @@ pub trait MemoryContext: 'static {
     /// Accounting-only hook: `len` bytes of this context were read by a
     /// cross-context transfer whose byte movement was performed by the
     /// destination's `copy_in`. Default: no accounting.
+    ///
+    /// Accounting contract (pinned by `transfer::tests`): every
+    /// cross-context transfer books exactly one read on the source side
+    /// (`copy_out` *or* `note_read`) and exactly one write on the
+    /// destination side (`copy_in` *or* `note_write`), whichever route
+    /// the transfer takes.
     fn note_read(info: &Self::Info, len: usize) {
+        let _ = (info, len);
+    }
+
+    /// Accounting-only hook, mirror of [`Self::note_read`]: `len` bytes
+    /// of this context were written by a cross-context transfer whose
+    /// byte movement was performed by the source's `copy_out`. Default:
+    /// no accounting.
+    fn note_write(info: &Self::Info, len: usize) {
         let _ = (info, len);
     }
 }
@@ -210,6 +224,10 @@ impl MemoryContext for CountingContext {
 
     fn note_read(info: &CountingInfo, len: usize) {
         info.0.bytes_copied_out.fetch_add(len, Ordering::Relaxed);
+    }
+
+    fn note_write(info: &CountingInfo, len: usize) {
+        info.0.bytes_copied_in.fetch_add(len, Ordering::Relaxed);
     }
 }
 
@@ -353,6 +371,11 @@ impl MemoryContext for StagingContext {
     fn note_read(info: &StagingInfo, len: usize) {
         info.counters.d2h_bytes.fetch_add(len, Ordering::Relaxed);
         info.counters.d2h_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_write(info: &StagingInfo, len: usize) {
+        info.counters.h2d_bytes.fetch_add(len, Ordering::Relaxed);
+        info.counters.h2d_calls.fetch_add(1, Ordering::Relaxed);
     }
 }
 

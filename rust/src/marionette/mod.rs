@@ -44,7 +44,7 @@ pub mod prelude {
     pub use super::blob::{AoSScheme, AoSoAScheme, BlobLayoutKind, SoABlobScheme};
     pub use super::collection::{JaggedView, RawCollection};
     pub use super::holder::LayoutHolder;
-    pub use super::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
+    pub use super::layout::{AoS, AoSoA, Layout, PlaneShape, SoABlob, SoAVec};
     pub use super::memory::{
         AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, HostContext,
         MemoryContext, StagingContext, StagingInfo,
@@ -54,5 +54,9 @@ pub mod prelude {
         compute_metas, meta_by_name, DescKind, FieldDesc, FieldId, FieldKind, FieldMeta,
         JaggedProp, Schema, SchemaBuilder, TagId,
     };
-    pub use super::transfer::{copy_collection, memcopy_with_context, TransferPriority};
+    pub use super::transfer::{
+        copy_collection, copy_collection_stats, copy_collection_unplanned,
+        memcopy_with_context, plan_cache_stats, plan_for, register_specialized,
+        PlanCacheStats, PlanOp, TransferPlan, TransferPriority, TransferStats,
+    };
 }

@@ -2,9 +2,12 @@
 //!
 //! The build image has no network access and only the `xla` crate's
 //! vendored dependency set, so the usual ecosystem crates (serde_json,
-//! rand, criterion, proptest) are unavailable; these modules provide the
-//! small slices of them this project needs (DESIGN.md §3).
+//! rand, criterion, proptest, rayon) are unavailable; these modules
+//! provide the small slices of them this project needs (DESIGN.md §3):
+//! JSON ([`json`]), a PRNG ([`rng`]), a mini property-testing framework
+//! ([`prop`]) and a scoped thread pool ([`pool`]).
 
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;

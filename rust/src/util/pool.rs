@@ -1,0 +1,232 @@
+//! A minimal fixed-size thread pool (in-tree substrate; DESIGN.md §3).
+//!
+//! The vendored dependency set has no rayon, so the small slice this
+//! project needs is implemented here: a process-wide pool of worker
+//! threads plus a *scoped* batch API — [`ThreadPool::scoped`] runs a set
+//! of jobs that may borrow from the caller's stack and blocks until all
+//! of them have finished. The transfer engine uses it to split large
+//! plane/block copies into chunks ([`crate::marionette::transfer`]).
+//!
+//! Scoped jobs must not themselves call [`ThreadPool::scoped`] on the
+//! same pool: with every worker parked inside the outer batch, the
+//! inner batch could never be picked up.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Fixed set of worker threads draining a shared job queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers (at least one).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(sh))
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// The process-wide pool, sized to the available parallelism (min 2).
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            ThreadPool::new(n.max(2))
+        })
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn submit(&self, job: Job) {
+        let mut g = self.shared.queue.lock().unwrap();
+        g.jobs.push_back(job);
+        drop(g);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run every job to completion, blocking the caller until the last
+    /// one has finished. Jobs may borrow from the caller's stack; the
+    /// borrow is sound because this function never returns (panic
+    /// included) before every job has executed.
+    pub fn scoped<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        for job in jobs {
+            // SAFETY: `latch.wait()` below blocks until this job has run
+            // (the latch counts down even when the job panics), so every
+            // borrow captured in `job` outlives its use on the worker.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            let latch = latch.clone();
+            let panicked = panicked.clone();
+            self.submit(Box::new(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panicked.store(true, Ordering::Relaxed);
+                }
+                latch.count_down();
+            }));
+        }
+        latch.wait();
+        if panicked.load(Ordering::Relaxed) {
+            panic!("thread-pool job panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut g = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = g.jobs.pop_front() {
+                    break j;
+                }
+                if g.shutdown {
+                    return;
+                }
+                g = sh.cv.wait(g).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Count-down latch: `wait` blocks until `count_down` has been called
+/// the initial-count number of times.
+struct Latch {
+    state: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.state.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.state.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scoped(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn jobs_may_borrow_stack_data() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..1000).collect();
+        let sums: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|c| {
+                let chunk = &data[c * 250..(c + 1) * 250];
+                let slot = &sums[c];
+                Box::new(move || {
+                    let s: u64 = chunk.iter().sum();
+                    slot.store(s as usize, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scoped(jobs);
+        let total: usize = sums.iter().map(|s| s.load(Ordering::Relaxed)).sum();
+        assert_eq!(total as u64, (0..1000u64).sum());
+    }
+
+    #[test]
+    #[should_panic(expected = "thread-pool job panicked")]
+    fn panics_propagate_after_batch_completes() {
+        let pool = ThreadPool::new(2);
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("boom")),
+            Box::new(|| {
+                ok.fetch_add(1, Ordering::Relaxed);
+            }),
+        ];
+        pool.scoped(jobs);
+    }
+
+    #[test]
+    fn global_pool_has_multiple_workers() {
+        assert!(ThreadPool::global().workers() >= 2);
+    }
+
+    #[test]
+    fn sequential_batches_reuse_workers() {
+        let pool = ThreadPool::new(2);
+        for round in 0..10 {
+            let hit = AtomicUsize::new(0);
+            pool.scoped(vec![Box::new(|| {
+                hit.fetch_add(1, Ordering::Relaxed);
+            }) as Box<dyn FnOnce() + Send + '_>]);
+            assert_eq!(hit.load(Ordering::Relaxed), 1, "round {round}");
+        }
+    }
+}

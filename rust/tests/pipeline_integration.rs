@@ -10,6 +10,31 @@ fn have_artifacts() -> bool {
 }
 
 #[test]
+fn plan_cache_steady_state_hits() {
+    let before = marionette::marionette::transfer::plan_cache_stats();
+    let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 2), 30);
+    cfg.device = false;
+    cfg.policy = RoutePolicy::HostOnly;
+    cfg.host_workers = 2;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.results.len(), 30);
+    // Every event runs exactly one planned staging transfer...
+    assert_eq!(rep.metrics.planned_transfers, 30);
+    assert!(rep.metrics.planned_bytes > 0);
+    // ...and the plan is compiled at most once (warmed at pipeline
+    // startup): each per-event lookup is a cache hit — at least one hit
+    // per steady-state event. (Counters are process-global and only
+    // ever increase, so concurrent tests cannot deflate the delta.)
+    let after = marionette::marionette::transfer::plan_cache_stats();
+    assert!(
+        after.hits - before.hits >= 30,
+        "plan-cache hits {} -> {}",
+        before.hits,
+        after.hits
+    );
+}
+
+#[test]
 fn hundred_events_host_only() {
     let mut cfg = PipelineConfig::new(EventConfig::grid(48, 48, 2), 100);
     cfg.device = false;

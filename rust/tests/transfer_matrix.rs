@@ -1,0 +1,209 @@
+//! Rung-matrix test for the compiled transfer plans (§VII-B).
+//!
+//! For **every** (SoAVec, AoS, SoABlob, AoSoA<4>) × (Host, Aligned<64>,
+//! Arena, Counting, Staging) source/destination pair — the full 20×20
+//! cross product — this asserts:
+//!
+//! * the `TransferPriority` the compiled plan resolves to (rung
+//!   selection is a property of the layout pair, never of the contexts);
+//! * the plan's op count after coalescing (identical blob layouts
+//!   collapse to one block copy per size tag — fewer memcpy ops than
+//!   field-lanes);
+//! * round-trip equality src → dst → src, jagged fields included.
+//!
+//! The schema exercises every field kind: per-item scalars, a
+//! fixed-extent array, a jagged vector (prefix + values), and a global.
+
+use std::sync::Arc;
+
+use marionette::marionette::collection::RawCollection;
+use marionette::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
+use marionette::marionette::memory::{
+    AlignedContext, ArenaContext, CountingContext, HostContext, MemoryContext,
+    StagingContext,
+};
+use marionette::marionette::schema::Schema;
+use marionette::marionette::transfer::{copy_collection, plan_for, TransferPriority};
+
+/// The blocked layout with its context still open (macro-friendly).
+type AoSoA4<C> = AoSoA<4, C>;
+
+/// Field-lane count of the test schema: e + t + sig[2 lanes] +
+/// cells prefix + cells values + ev = 7.
+const FIELD_LANES: usize = 7;
+/// Non-empty size tags: Items, ItemsPlusOne, Global, Values(0).
+const TAGS: usize = 4;
+
+fn schema() -> Arc<Schema> {
+    Arc::new(
+        Schema::builder("matrix")
+            .per_item::<f32>("e")
+            .per_item::<i32>("t")
+            .array::<f32>("sig", 2)
+            .jagged::<u64, u32>("cells")
+            .global::<u64>("ev")
+            .build(),
+    )
+}
+
+fn build_src<L: Layout>(s: &Arc<Schema>) -> RawCollection<L>
+where
+    <L::Ctx as MemoryContext>::Info: Default,
+{
+    let m_e = s.meta(s.field_by_name("e").unwrap());
+    let m_t = s.meta(s.field_by_name("t").unwrap());
+    let m_sig = s.meta(s.field_by_name("sig").unwrap());
+    let m_cells = s.meta(s.field_by_name("cells").unwrap());
+    let m_ev = s.meta(s.field_by_name("ev").unwrap());
+    let mut c = RawCollection::<L>::new(s.clone());
+    c.set_global::<u64>(m_ev, 77);
+    for i in 0..6 {
+        c.push_default();
+        c.set::<f32>(m_e, i, i as f32 * 1.25);
+        c.set::<i32>(m_t, i, 3 - i as i32);
+        c.set_k::<f32>(m_sig, i, 0, i as f32);
+        c.set_k::<f32>(m_sig, i, 1, -(i as f32));
+        let v0 = c.append_values(0, i % 3);
+        for n in 0..(i % 3) {
+            c.set_value::<u64>(m_cells, v0 + n, (100 * i + n) as u64);
+        }
+    }
+    c
+}
+
+fn check_equal<LA: Layout, LB: Layout>(a: &RawCollection<LA>, b: &RawCollection<LB>) {
+    let s = a.schema();
+    let m_e = s.meta(s.field_by_name("e").unwrap());
+    let m_t = s.meta(s.field_by_name("t").unwrap());
+    let m_sig = s.meta(s.field_by_name("sig").unwrap());
+    let m_cells = s.meta(s.field_by_name("cells").unwrap());
+    let m_ev = s.meta(s.field_by_name("ev").unwrap());
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.get_global::<u64>(m_ev), b.get_global::<u64>(m_ev));
+    for i in 0..a.len() {
+        assert_eq!(a.get::<f32>(m_e, i), b.get::<f32>(m_e, i));
+        assert_eq!(a.get::<i32>(m_t, i), b.get::<i32>(m_t, i));
+        for k in 0..2 {
+            assert_eq!(a.get_k::<f32>(m_sig, i, k), b.get_k::<f32>(m_sig, i, k));
+        }
+        assert_eq!(
+            a.jagged_view::<u64>(m_cells, 0, i).to_vec(),
+            b.jagged_view::<u64>(m_cells, 0, i).to_vec(),
+        );
+    }
+}
+
+/// One (layout+context) → (layout+context) combination: plan
+/// introspection + forward copy + round trip.
+macro_rules! combo {
+    ($s:expr, $L1:ident, $C1:ty, $L2:ident, $C2:ty, $prio:expr, $ops:expr) => {{
+        let src = build_src::<$L1<$C1>>($s);
+        let plan = plan_for::<$L1<$C1>, $L2<$C2>>(src.schema());
+        assert_eq!(plan.priority(), $prio, "{}", plan.describe());
+        assert_eq!(plan.num_ops(), $ops, "{}", plan.describe());
+        assert_eq!(plan.field_lane_ops(), FIELD_LANES, "{}", plan.describe());
+        if $ops < FIELD_LANES {
+            // Coalesced: adjacent planes collapsed below one-per-lane.
+            assert!(plan.num_ops() < plan.field_lane_ops(), "{}", plan.describe());
+        }
+        let mut dst = RawCollection::<$L2<$C2>>::new(src.schema().clone());
+        let p = copy_collection(&src, &mut dst);
+        assert_eq!(p, $prio, "{}", plan.describe());
+        check_equal(&src, &dst);
+        let mut back = RawCollection::<$L1<$C1>>::new(src.schema().clone());
+        copy_collection(&dst, &mut back);
+        check_equal(&src, &back);
+    }};
+}
+
+/// Expand a layout pair across every destination context.
+macro_rules! with_dst_ctx {
+    ($s:expr, $L1:ident, $C1:ty, $L2:ident, $prio:expr, $ops:expr) => {
+        combo!($s, $L1, $C1, $L2, HostContext, $prio, $ops);
+        combo!($s, $L1, $C1, $L2, AlignedContext<64>, $prio, $ops);
+        combo!($s, $L1, $C1, $L2, ArenaContext, $prio, $ops);
+        combo!($s, $L1, $C1, $L2, CountingContext, $prio, $ops);
+        combo!($s, $L1, $C1, $L2, StagingContext, $prio, $ops);
+    };
+}
+
+/// Expand a layout pair across every (src, dst) context pair.
+macro_rules! with_ctx_pairs {
+    ($s:expr, $L1:ident, $L2:ident, $prio:expr, $ops:expr) => {
+        with_dst_ctx!($s, $L1, HostContext, $L2, $prio, $ops);
+        with_dst_ctx!($s, $L1, AlignedContext<64>, $L2, $prio, $ops);
+        with_dst_ctx!($s, $L1, ArenaContext, $L2, $prio, $ops);
+        with_dst_ctx!($s, $L1, CountingContext, $L2, $prio, $ops);
+        with_dst_ctx!($s, $L1, StagingContext, $L2, $prio, $ops);
+    };
+}
+
+#[test]
+fn matrix_from_soavec() {
+    let s = schema();
+    with_ctx_pairs!(&s, SoAVec, SoAVec, TransferPriority::Plane, FIELD_LANES);
+    with_ctx_pairs!(&s, SoAVec, AoS, TransferPriority::Strided, FIELD_LANES);
+    with_ctx_pairs!(&s, SoAVec, SoABlob, TransferPriority::Plane, FIELD_LANES);
+    with_ctx_pairs!(&s, SoAVec, AoSoA4, TransferPriority::Elementwise, FIELD_LANES);
+}
+
+#[test]
+fn matrix_from_aos() {
+    let s = schema();
+    with_ctx_pairs!(&s, AoS, SoAVec, TransferPriority::Strided, FIELD_LANES);
+    // Identical record layout on both sides: every plane of a tag is
+    // byte-adjacent and the plan coalesces to one block copy per tag.
+    with_ctx_pairs!(&s, AoS, AoS, TransferPriority::Plane, TAGS);
+    with_ctx_pairs!(&s, AoS, SoABlob, TransferPriority::Strided, FIELD_LANES);
+    with_ctx_pairs!(&s, AoS, AoSoA4, TransferPriority::Elementwise, FIELD_LANES);
+}
+
+#[test]
+fn matrix_from_soablob() {
+    let s = schema();
+    with_ctx_pairs!(&s, SoABlob, SoAVec, TransferPriority::Plane, FIELD_LANES);
+    with_ctx_pairs!(&s, SoABlob, AoS, TransferPriority::Strided, FIELD_LANES);
+    with_ctx_pairs!(&s, SoABlob, SoABlob, TransferPriority::Plane, FIELD_LANES);
+    with_ctx_pairs!(&s, SoABlob, AoSoA4, TransferPriority::Elementwise, FIELD_LANES);
+}
+
+#[test]
+fn matrix_from_aosoa() {
+    let s = schema();
+    with_ctx_pairs!(&s, AoSoA4, SoAVec, TransferPriority::Elementwise, FIELD_LANES);
+    with_ctx_pairs!(&s, AoSoA4, AoS, TransferPriority::Elementwise, FIELD_LANES);
+    with_ctx_pairs!(&s, AoSoA4, SoABlob, TransferPriority::Elementwise, FIELD_LANES);
+    // Same block size both sides: byte-identical blobs, one block copy
+    // per tag.
+    with_ctx_pairs!(&s, AoSoA4, AoSoA4, TransferPriority::Plane, TAGS);
+}
+
+/// The coalescing claim in isolation: same-layout blob pairs use fewer
+/// memcpy ops than the schema has field-lanes, and still round-trip.
+#[test]
+fn coalescing_beats_per_field_ops() {
+    let s = schema();
+    let aos = plan_for::<AoS, AoS>(&s);
+    assert_eq!(aos.num_ops(), TAGS);
+    assert!(aos.num_ops() < aos.field_lane_ops());
+    let blocked = plan_for::<AoSoA4<HostContext>, AoSoA4<HostContext>>(&s);
+    assert_eq!(blocked.num_ops(), TAGS);
+    assert!(blocked.num_ops() < blocked.field_lane_ops());
+    // Mixed block sizes must NOT coalesce (different byte layouts).
+    let mixed = plan_for::<AoSoA<4>, AoSoA<16>>(&s);
+    assert_eq!(mixed.priority(), TransferPriority::Elementwise);
+    assert_eq!(mixed.num_ops(), FIELD_LANES);
+}
+
+/// Plans for the matrix are compiled once per (schema, pair) tuple: the
+/// second lookup of any combination is a cache hit.
+#[test]
+fn matrix_lookups_hit_the_cache() {
+    let s = schema();
+    let p1 = plan_for::<SoAVec<CountingContext>, SoABlob<StagingContext>>(&s);
+    let before = marionette::marionette::transfer::plan_cache_stats();
+    let p2 = plan_for::<SoAVec<CountingContext>, SoABlob<StagingContext>>(&s);
+    let after = marionette::marionette::transfer::plan_cache_stats();
+    assert!(Arc::ptr_eq(&p1, &p2));
+    assert!(after.hits > before.hits);
+}
