@@ -15,6 +15,18 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+echo "== tier-1 gate: pooled-memory test files =="
+# The memory-subsystem suites must exist and pass by name (guards
+# against the files being dropped while the blanket run stays green).
+cargo test -q --test memory_conformance
+cargo test -q --test transfer_matrix
+cargo test -q --test pipeline_integration
+
+if [[ "${MARIONETTE_STRESS:-0}" == "1" ]]; then
+    echo "== stress: thread-pool + memory-pool contention (--ignored) =="
+    cargo test -q --release thread_and_memory_pool_contention_stress -- --ignored
+fi
+
 echo "== python tests =="
 if command -v python3 >/dev/null 2>&1 && python3 -c "import pytest" >/dev/null 2>&1; then
     # The `compile` package is imported relative to python/, so run

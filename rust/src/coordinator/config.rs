@@ -1,6 +1,10 @@
 //! Pipeline configuration.
 
+use std::sync::Arc;
+
 use crate::edm::generator::EventConfig;
+
+use super::pipeline::StagePool;
 
 /// Where events may execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,6 +54,11 @@ pub struct PipelineConfig {
     /// work (XLA compilation would otherwise land on the first event's
     /// latency).
     pub warm_buckets: Vec<usize>,
+    /// Stage pool workers draw per-event staging destinations from.
+    /// `None` (the default) shares the process-wide pool so warmup
+    /// amortises across runs; tests inject a private pool to observe
+    /// its counters in isolation.
+    pub stage_pool: Option<Arc<StagePool>>,
 }
 
 impl PipelineConfig {
@@ -67,6 +76,7 @@ impl PipelineConfig {
             queue_depth: 128,
             max_batch: 16,
             warm_buckets: vec![bucket],
+            stage_pool: None,
         }
     }
 }

@@ -1,6 +1,6 @@
 //! Pipeline metrics: lock-free counters + log₂-bucket latency histograms.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
 
 /// Power-of-two latency histogram from 1 µs to ~1 h.
@@ -82,9 +82,43 @@ pub struct PipelineMetrics {
     pub device_upload_us: AtomicU64,
     pub device_execute_us: AtomicU64,
     pub device_download_us: AtomicU64,
+    /// Staging-collection checkouts served warm from the stage pool.
+    pub stage_hits: AtomicUsize,
+    /// Staging-collection checkouts that built a fresh collection.
+    pub stage_misses: AtomicUsize,
+    /// Byte-pool allocations served from a recycled block.
+    pub pool_hits: AtomicUsize,
+    /// Byte-pool allocations that fell through to the inner allocator.
+    pub pool_misses: AtomicUsize,
+    /// Byte-pool blocks released by high-water trimming.
+    pub pool_trims: AtomicUsize,
+    /// Idle bytes parked in the byte pool at snapshot time.
+    pub pool_held_bytes: AtomicUsize,
+    /// Byte-pool blocks checked out at snapshot time.
+    pub pool_outstanding: AtomicUsize,
+    /// Net inner allocations of the stage pool's counting heap: flat in
+    /// steady state (the zero-alloc-per-event invariant).
+    pub pool_live_allocs: AtomicI64,
     pub host_latency: LatencyHisto,
     pub device_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
+}
+
+impl PipelineMetrics {
+    /// Record the stage pool's counters (called once at end of run; the
+    /// pool is shared and monotone, so these are point-in-time values).
+    pub fn set_pool_counters(&self, pool: &super::pipeline::StagePool) {
+        let b = pool.byte_stats();
+        let c = pool.collection_stats();
+        self.stage_hits.store(c.hits, Ordering::Relaxed);
+        self.stage_misses.store(c.misses, Ordering::Relaxed);
+        self.pool_hits.store(b.hits, Ordering::Relaxed);
+        self.pool_misses.store(b.misses, Ordering::Relaxed);
+        self.pool_trims.store(b.trims, Ordering::Relaxed);
+        self.pool_held_bytes.store(b.held_bytes, Ordering::Relaxed);
+        self.pool_outstanding.store(b.outstanding, Ordering::Relaxed);
+        self.pool_live_allocs.store(pool.live_allocs() as i64, Ordering::Relaxed);
+    }
 }
 
 /// Plain-data snapshot for reports.
@@ -105,6 +139,17 @@ pub struct MetricsSnapshot {
     pub device_upload: Duration,
     pub device_execute: Duration,
     pub device_download: Duration,
+    /// Stage-pool collection checkouts served warm / built fresh.
+    pub stage_hits: usize,
+    pub stage_misses: usize,
+    /// Byte-pool hits / misses / trims and point-in-time gauges.
+    pub pool_hits: usize,
+    pub pool_misses: usize,
+    pub pool_trims: usize,
+    pub pool_held_bytes: usize,
+    pub pool_outstanding: usize,
+    /// Net allocations of the stage pool's inner counting heap.
+    pub pool_live_allocs: i64,
     pub host_mean: Duration,
     pub device_mean: Duration,
     pub e2e_mean: Duration,
@@ -133,6 +178,14 @@ impl PipelineMetrics {
             device_download: Duration::from_micros(
                 self.device_download_us.load(Ordering::Relaxed),
             ),
+            stage_hits: self.stage_hits.load(Ordering::Relaxed),
+            stage_misses: self.stage_misses.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            pool_trims: self.pool_trims.load(Ordering::Relaxed),
+            pool_held_bytes: self.pool_held_bytes.load(Ordering::Relaxed),
+            pool_outstanding: self.pool_outstanding.load(Ordering::Relaxed),
+            pool_live_allocs: self.pool_live_allocs.load(Ordering::Relaxed),
             host_mean: self.host_latency.mean(),
             device_mean: self.device_latency.mean(),
             e2e_mean: self.e2e_latency.mean(),
@@ -148,6 +201,8 @@ impl MetricsSnapshot {
             "events: in={} host={} device={} spilled={}\n\
              particles: {}\n\
              transfers: planned={} bytes={} plan-cache hits={} misses={}\n\
+             pool: stage hits={} misses={} | bytes hits={} misses={} trims={} \
+             held={} outstanding={} live-allocs={}\n\
              device: batches={} upload={:?} execute={:?} download={:?}\n\
              latency: host-mean={:?} device-mean={:?} e2e-mean={:?} e2e-p99={:?}",
             self.events_in,
@@ -159,6 +214,14 @@ impl MetricsSnapshot {
             self.planned_bytes,
             self.plan_cache_hits,
             self.plan_cache_misses,
+            self.stage_hits,
+            self.stage_misses,
+            self.pool_hits,
+            self.pool_misses,
+            self.pool_trims,
+            self.pool_held_bytes,
+            self.pool_outstanding,
+            self.pool_live_allocs,
             self.device_batches,
             self.device_upload,
             self.device_execute,

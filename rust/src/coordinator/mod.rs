@@ -22,4 +22,6 @@ pub mod router;
 
 pub use config::{PipelineConfig, RoutePolicy};
 pub use metrics::{MetricsSnapshot, PipelineMetrics};
-pub use pipeline::{run_pipeline, EventResult, PipelineReport, Route};
+pub use pipeline::{
+    run_pipeline, EventResult, PipelineReport, Route, StageCtx, StagePool, StagedParticles,
+};

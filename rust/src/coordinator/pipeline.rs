@@ -20,13 +20,23 @@
 //! the ladder, no reallocation in steady state). Plan-level byte
 //! counters feed [`metrics`](super::metrics).
 //!
+//! Staging memory is **pooled** (DESIGN.md §5): workers draw their
+//! per-event staging destination from a shared [`StagePool`] — an
+//! object pool of warm collections over a recycling
+//! [`PoolContext`]`<CountingContext>` byte pool — and check it back in
+//! on drop. After warmup every checkout is a hit and no per-event
+//! allocation reaches the heap; the pool counters in
+//! [`metrics`](super::metrics) (and `tests/pipeline_integration.rs`)
+//! pin that steady state.
+//!
 //! Every queue is a bounded `sync_channel`: a slow stage backpressures
 //! the source instead of growing memory.
 //!
 //! [`TransferPlan`]: crate::marionette::transfer::TransferPlan
+//! [`PoolContext`]: crate::marionette::memory::PoolContext
 
 use std::sync::mpsc::{channel, sync_channel};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -35,10 +45,14 @@ use crate::edm::generator::{EventGenerator, RawEvent};
 use crate::edm::particle::{ParticleCollection, ParticleProps};
 use crate::edm::sensor::{SensorCollection, SensorProps};
 use crate::edm::{calib, reco};
-use crate::marionette::layout::{AoS, SoAVec};
-use crate::marionette::memory::{StagingContext, StagingInfo};
+use crate::marionette::layout::{AoS, Layout, SoAVec};
+use crate::marionette::memory::{
+    CountingContext, CountingInfo, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext,
+    StagingInfo,
+};
 use crate::marionette::transfer;
 use crate::runtime::Engine;
+use crate::util::pool::{ObjectPool, ObjectPoolStats, Recycler};
 
 use super::batcher::Batcher;
 use super::config::PipelineConfig;
@@ -96,6 +110,78 @@ struct Task {
     enqueued: Instant,
 }
 
+/// Memory context of pooled staging collections: a recycling size-class
+/// pool over a counting heap, so the steady-state zero-alloc claim is
+/// observable (pool hit/miss counters + inner `live_allocs`).
+pub type StageCtx = PoolContext<CountingContext>;
+
+/// The pooled per-event staging destination workers draw and return.
+pub type StagedParticles = ParticleCollection<AoS<StageCtx>>;
+
+/// Shared pool of per-event staging destinations: an object pool of
+/// warm [`StagedParticles`] collections whose storage comes from one
+/// recycling byte pool. Checkouts return on drop (capacity intact), so
+/// after warmup neither level touches the heap again.
+pub struct StagePool {
+    bytes: PoolInfo<CountingContext>,
+    collections: Arc<ObjectPool<StagedParticles>>,
+}
+
+impl StagePool {
+    /// A fresh, private pool (tests; production runs share
+    /// [`StagePool::shared`] so warmup amortises across runs).
+    pub fn new() -> Arc<StagePool> {
+        let bytes = PoolInfo(Pool::<CountingContext>::with_inner(CountingInfo::default()));
+        let info = bytes.clone();
+        let collections =
+            ObjectPool::new(move || ParticleCollection::<AoS<StageCtx>>::new_in(info.clone()));
+        Arc::new(StagePool { bytes, collections })
+    }
+
+    /// The process-wide stage pool (the default when
+    /// `PipelineConfig::stage_pool` is `None`).
+    pub fn shared() -> Arc<StagePool> {
+        static POOL: OnceLock<Arc<StagePool>> = OnceLock::new();
+        POOL.get_or_init(StagePool::new).clone()
+    }
+
+    /// Draw a staging collection; it checks back in on drop.
+    pub fn checkout(&self) -> Recycler<StagedParticles> {
+        self.collections.clone().checkout()
+    }
+
+    /// Byte-pool counters (hits/misses/trims/held/outstanding).
+    pub fn byte_stats(&self) -> PoolSnapshot {
+        self.bytes.0.stats()
+    }
+
+    /// Collection-pool counters (checkout hits/misses/returns).
+    pub fn collection_stats(&self) -> ObjectPoolStats {
+        self.collections.stats()
+    }
+
+    /// Net allocations of the inner counting heap: flat in steady state.
+    pub fn live_allocs(&self) -> isize {
+        self.bytes.0.inner().0.live_allocs()
+    }
+
+    /// The byte-pool context info (for building extra pooled storage).
+    pub fn byte_info(&self) -> &PoolInfo<CountingContext> {
+        &self.bytes
+    }
+}
+
+impl std::fmt::Debug for StagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "StagePool(bytes={:?}, collections={:?})",
+            self.byte_stats(),
+            self.collection_stats()
+        )
+    }
+}
+
 /// Process one event on the host path (shared by workers and benches).
 pub fn process_host(ev: &RawEvent) -> (usize, f64) {
     let mut staged = ParticleCollection::<AoS>::new();
@@ -105,12 +191,14 @@ pub fn process_host(ev: &RawEvent) -> (usize, f64) {
 
 /// Host path with an explicit reusable staging collection: fill +
 /// calibrate + reconstruct over SoA, then stage the particle collection
-/// into the handwritten-AoS output form through the cached transfer
-/// plan and fill back through its dense record view. Returns
-/// (particles, energy, staged bytes).
-pub fn process_host_staged(
+/// into the staged output form through the cached transfer plan and
+/// fill back through its dense record view. Generic over the staging
+/// layout/context so the pipeline's pooled destinations
+/// ([`StagedParticles`]) and the benches' plain `AoS` both fit.
+/// Returns (particles, energy, staged bytes).
+pub fn process_host_staged<L: Layout>(
     ev: &RawEvent,
-    staged: &mut ParticleCollection<AoS>,
+    staged: &mut ParticleCollection<L>,
 ) -> (usize, f64, usize) {
     let mut col = ev.to_collection::<SoAVec>();
     calib::calibrate_collection(&mut col);
@@ -135,10 +223,10 @@ pub fn process_device(
 /// Device path with an explicit reusable staging collection; see
 /// [`process_host_staged`]. Returns (particles, energy, timing, staged
 /// bytes).
-pub fn process_device_staged(
+pub fn process_device_staged<L: Layout>(
     engine: &Engine,
     ev: &RawEvent,
-    staged: &mut ParticleCollection<AoS>,
+    staged: &mut ParticleCollection<L>,
 ) -> Result<(usize, f64, crate::runtime::ExecTiming, usize)> {
     let (s, p, timing) = engine.run_full_event(ev)?;
     let pc = reco::particles_from_planes::<SoAVec>(
@@ -157,9 +245,15 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     // plan lookup below is a cache hit.
     crate::edm::convert::register_edm_specializations();
     let _ = transfer::plan_for::<SoAVec, AoS>(&ParticleProps::schema());
+    let _ = transfer::plan_for::<SoAVec, AoS<StageCtx>>(&ParticleProps::schema());
     if cfg.device {
         let _ = transfer::plan_for::<SoAVec, SoAVec<StagingContext>>(&SensorProps::schema());
     }
+
+    // Amortise-once setup: the stage pool every worker draws per-event
+    // staging destinations from (shared across runs unless the config
+    // injects a private one).
+    let stage_pool = cfg.stage_pool.clone().unwrap_or_else(StagePool::shared);
 
     let metrics = Arc::new(PipelineMetrics::default());
     let gauge = QueueGauge::default();
@@ -181,17 +275,20 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         let rx = host_rx.clone();
         let tx = res_tx.clone();
         let metrics = metrics.clone();
+        let pool = stage_pool.clone();
         workers.push(std::thread::spawn(move || {
-            // Staging built once per worker: the cached plan executes
-            // into this reused collection for every event.
-            let mut staged = ParticleCollection::<AoS>::new();
             loop {
                 let task = {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
                 let Ok(task) = task else { break };
-                let (n, energy, bytes) = process_host_staged(&task.ev, &mut staged);
+                // Draw the staging destination from the pool: after
+                // warmup this is a warm collection whose capacity
+                // already fits the workload — the cached plan executes
+                // into it with zero allocations.
+                let mut staged = pool.checkout();
+                let (n, energy, bytes) = process_host_staged(&task.ev, &mut *staged);
                 let latency = task.enqueued.elapsed();
                 use std::sync::atomic::Ordering::Relaxed;
                 metrics.events_host.fetch_add(1, Relaxed);
@@ -218,6 +315,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         let gauge = gauge.clone();
         let max_batch = cfg.max_batch;
         let warm_buckets = cfg.warm_buckets.clone();
+        let pool = stage_pool.clone();
         workers.push(std::thread::spawn(move || {
             use std::sync::atomic::Ordering::Relaxed;
             let engine = match Engine::load_default() {
@@ -226,10 +324,11 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                     eprintln!("device worker disabled: {e:#}");
                     // Drain and bounce everything to nowhere: the router
                     // already sent events here, so process on host path.
-                    let mut staged = ParticleCollection::<AoS>::new();
                     while let Ok(task) = dev_rx.recv() {
                         gauge.dec();
-                        let (n, energy, bytes) = process_host_staged(&task.ev, &mut staged);
+                        let mut staged = pool.checkout();
+                        let (n, energy, bytes) =
+                            process_host_staged(&task.ev, &mut *staged);
                         let latency = task.enqueued.elapsed();
                         metrics.events_host.fetch_add(1, Relaxed);
                         metrics.particles_out.fetch_add(n, Relaxed);
@@ -255,14 +354,14 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                 }
             }
             // Staging state built once at worker startup and reused per
-            // event: the host-side sensor collection, the pinned staging
-            // buffer its planned copy lands in (the DMA-accounted upload
-            // analogue, DESIGN.md §2), and the particle output staging.
+            // event: the host-side sensor collection and the pinned
+            // staging buffer its planned copy lands in (the
+            // DMA-accounted upload analogue, DESIGN.md §2). The particle
+            // output staging is drawn from the stage pool per event.
             let staging_info = StagingInfo::default();
             let mut sensors_host = SensorCollection::<SoAVec>::new();
             let mut sensors_staged =
                 SensorCollection::<SoAVec<StagingContext>>::new_in(staging_info.clone());
-            let mut particles_staged = ParticleCollection::<AoS>::new();
             let mut warmed_bucket = None;
             let mut batcher: Batcher<Task> = Batcher::new(max_batch);
             loop {
@@ -298,7 +397,8 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                         let up = sensors_staged.transfer_from_stats(&sensors_host);
                         metrics.planned_transfers.fetch_add(1, Relaxed);
                         metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
-                        match process_device_staged(&engine, &task.ev, &mut particles_staged)
+                        let mut particles_staged = pool.checkout();
+                        match process_device_staged(&engine, &task.ev, &mut *particles_staged)
                         {
                             Ok((n, energy, timing, bytes)) => {
                                 let latency = task.enqueued.elapsed();
@@ -331,7 +431,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                                     task.ev.event_id
                                 );
                                 let (n, energy, bytes) =
-                                    process_host_staged(&task.ev, &mut particles_staged);
+                                    process_host_staged(&task.ev, &mut *particles_staged);
                                 let latency = task.enqueued.elapsed();
                                 metrics.events_host.fetch_add(1, Relaxed);
                                 metrics.particles_out.fetch_add(n, Relaxed);
@@ -383,6 +483,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     results.sort_by_key(|r| r.event_id);
     let wall = start.elapsed();
 
+    metrics.set_pool_counters(&stage_pool);
     Ok(PipelineReport { wall, results, metrics: metrics.snapshot() })
 }
 
@@ -412,10 +513,49 @@ mod tests {
         // One planned staging transfer per event, through the cache.
         assert_eq!(rep.metrics.planned_transfers, 12);
         assert!(rep.metrics.planned_bytes > 0);
+        // Every event drew its staging destination from the stage pool
+        // (counters are shared-pool cumulative, so only lower bounds).
+        assert!(
+            rep.metrics.stage_hits + rep.metrics.stage_misses >= 12,
+            "stage pool not used: {} hits + {} misses",
+            rep.metrics.stage_hits,
+            rep.metrics.stage_misses,
+        );
         // Results are sorted and complete.
         for (i, r) in rep.results.iter().enumerate() {
             assert_eq!(r.event_id, i as u64);
         }
+    }
+
+    #[test]
+    fn private_stage_pool_reaches_steady_state() {
+        let pool = StagePool::new();
+        let mk = |n: usize| {
+            let mut cfg = base_cfg(n);
+            cfg.device = false;
+            cfg.policy = RoutePolicy::HostOnly;
+            cfg.host_workers = 1;
+            cfg.stage_pool = Some(pool.clone());
+            cfg
+        };
+        run_pipeline(&mk(10)).unwrap();
+        let warm_b = pool.byte_stats();
+        let warm_c = pool.collection_stats();
+        let warm_live = pool.live_allocs();
+        // Same workload again: the single worker replays the identical
+        // event stream through the warm collection — no fresh
+        // collections, no byte-pool misses, no net allocations.
+        let rep = run_pipeline(&mk(10)).unwrap();
+        assert_eq!(rep.results.len(), 10);
+        let b = pool.byte_stats();
+        let c = pool.collection_stats();
+        assert_eq!(c.misses, warm_c.misses, "fresh staging collections built");
+        assert!(c.hits >= warm_c.hits + 10);
+        assert_eq!(b.misses, warm_b.misses, "byte-pool misses in steady state");
+        assert_eq!(pool.live_allocs(), warm_live, "net allocations in steady state");
+        // The run's metrics surface the same counters.
+        assert_eq!(rep.metrics.pool_misses, b.misses);
+        assert_eq!(rep.metrics.stage_misses, c.misses);
     }
 
     #[test]
@@ -462,5 +602,6 @@ mod tests {
         assert!(rep.events_per_sec() > 0.0);
         assert!(rep.report().contains("events"));
         assert!(rep.report().contains("plan-cache"));
+        assert!(rep.report().contains("pool: stage"));
     }
 }

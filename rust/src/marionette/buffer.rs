@@ -97,13 +97,34 @@ impl<C: MemoryContext> RawBuf<C> {
     /// Re-home this buffer onto new context info (the paper's
     /// `update_memory_context_info`: allocate with the new info, copy,
     /// free the old allocation).
+    ///
+    /// Accounting follows the cross-context transfer contract
+    /// (`transfer.rs`): the move books one read on the *source* info and
+    /// one write on the *destination* info, and the release of the old
+    /// allocation is booked against the source info — so a counting
+    /// source sees its bytes go away and an arena source's live ledger
+    /// balances instead of drifting.
     pub fn rehome(&mut self, new_info: C::Info) {
         let layout = self.layout_for(self.cap);
         let new_ptr = C::allocate(&new_info, layout);
         if self.cap > 0 {
-            unsafe {
-                // Conservative route via host: old-ctx out, new-ctx in.
-                C::copy_within(&new_info, new_ptr.as_ptr(), self.ptr.as_ptr(), self.cap);
+            if C::HOST_ACCESSIBLE {
+                unsafe {
+                    C::copy_in(&new_info, new_ptr.as_ptr(), self.ptr.as_ptr(), self.cap);
+                }
+                C::note_read(&self.info, self.cap);
+            } else {
+                // Neither side is directly addressable: bounce via the
+                // recycled host scratch shelf (transfer.rs).
+                let cap = self.cap;
+                let src = self.ptr.as_ptr();
+                let src_info = &self.info;
+                // SAFETY: both buffers are valid for `cap` bytes in
+                // their contexts; the scratch covers `cap`.
+                super::transfer::with_bounce_scratch(cap, |bounce| unsafe {
+                    C::copy_out(src_info, src, bounce.as_mut_ptr(), cap);
+                    C::copy_in(&new_info, new_ptr.as_ptr(), bounce.as_ptr(), cap);
+                });
             }
         }
         unsafe { C::deallocate(&self.info, self.ptr, layout) };
@@ -402,5 +423,76 @@ mod tests {
         let b = RawBuf::<HostContext>::new(8, ());
         assert_eq!(b.capacity(), 0);
         drop(b);
+    }
+
+    #[test]
+    fn rehome_books_transfer_and_release_on_both_sides() {
+        use std::sync::atomic::Ordering;
+        let info_a = CountingInfo::default();
+        let info_b = CountingInfo::default();
+        let mut b = RawBuf::<CountingContext>::with_capacity(256, 8, info_a.clone());
+        assert_eq!(info_a.0.live_bytes(), 256);
+        b.rehome(info_b.clone());
+        // The move reads the source once and writes the destination once
+        // (the cross-context accounting contract)...
+        assert_eq!(info_a.0.bytes_copied_out.load(Ordering::Relaxed), 256);
+        assert_eq!(info_b.0.bytes_copied_in.load(Ordering::Relaxed), 256);
+        // ...and the source books the release: no live bytes left behind.
+        assert_eq!(info_a.0.live_allocs(), 0);
+        assert_eq!(info_a.0.live_bytes(), 0);
+        assert_eq!(info_b.0.live_bytes(), 256);
+        drop(b);
+        assert_eq!(info_b.0.live_bytes(), 0);
+    }
+
+    #[test]
+    fn rehome_out_of_arena_balances_its_ledger() {
+        use super::super::memory::{Arena, ArenaContext};
+        let from = ArenaInfo(Arena::new());
+        let to = ArenaInfo(Arena::new());
+        let mut b = RawBuf::<ArenaContext>::with_capacity(512, 16, from.clone());
+        unsafe { b.zero_range(0, 512) };
+        assert_eq!(from.0.live_bytes(), 512);
+        b.rehome(to.clone());
+        // The source arena saw the release and can reclaim its chunks.
+        assert_eq!(from.0.live_bytes(), 0);
+        assert!(from.0.reset());
+        assert_eq!(from.0.capacity(), 0);
+        assert_eq!(to.0.live_bytes(), 512);
+        drop(b);
+        assert_eq!(to.0.live_bytes(), 0);
+    }
+
+    #[test]
+    fn pooled_vec_checks_buffers_back_in_on_drop() {
+        use super::super::memory::{PoolContext, PoolInfo};
+        let info = PoolInfo::<CountingContext>::default();
+        let inner = info.0.inner().clone();
+        {
+            let mut v =
+                ContextAwareVec::<u64, PoolContext<CountingContext>>::new_in(info.clone());
+            for i in 0..1000u64 {
+                v.push(i);
+            }
+            assert!(info.0.outstanding() >= 1);
+        } // drop: capacity parks in the pool instead of being freed
+        assert_eq!(info.0.outstanding(), 0);
+        assert!(info.0.held_bytes() >= 1000 * 8);
+        let misses_before = info.0.stats().misses;
+        // A second vec replays the same growth ladder entirely from the
+        // recycled blocks: zero new inner allocations.
+        let inner_allocs = inner.0.allocs.load(std::sync::atomic::Ordering::Relaxed);
+        let mut v2 =
+            ContextAwareVec::<u64, PoolContext<CountingContext>>::new_in(info.clone());
+        for i in 0..1000u64 {
+            v2.push(i);
+        }
+        assert_eq!(v2[999], 999);
+        assert_eq!(info.0.stats().misses, misses_before);
+        assert_eq!(
+            inner.0.allocs.load(std::sync::atomic::Ordering::Relaxed),
+            inner_allocs,
+            "steady-state growth must not touch the inner allocator"
+        );
     }
 }

@@ -21,12 +21,20 @@
 //!   as H2D/D2H DMA traffic. Device-resident data proper lives behind the
 //!   PJRT boundary (`runtime::devmem`); staging is the pinned-buffer
 //!   analogue the figures' transfer costs flow through (DESIGN.md §2).
+//! * [`PoolContext<Inner>`] — a recycling memory resource: power-of-two
+//!   size-class free lists over any inner context, with high-water-mark
+//!   trimming and hit/miss/outstanding statistics. Buffers check
+//!   themselves back in on drop (their `deallocate` routes to the pool),
+//!   so steady-state workloads stop touching the inner allocator
+//!   entirely (DESIGN.md §5).
 //!
 //! All methods are associated functions taking `&Info`, mirroring the
 //! paper's static, compile-time dispatch (no `dyn` anywhere on hot paths).
 
 use std::alloc::Layout as AllocLayout;
+use std::collections::HashMap;
 use std::fmt;
+use std::marker::PhantomData;
 use std::ptr::NonNull;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -172,6 +180,10 @@ pub struct CountingStats {
     pub allocs: AtomicUsize,
     pub deallocs: AtomicUsize,
     pub bytes_allocated: AtomicUsize,
+    /// Bytes released back (the source-side booking of every
+    /// deallocation, including releases caused by `RawBuf::rehome`
+    /// moving a buffer onto other context info).
+    pub bytes_deallocated: AtomicUsize,
     pub bytes_copied_in: AtomicUsize,
     pub bytes_copied_out: AtomicUsize,
     pub memsets: AtomicUsize,
@@ -181,6 +193,13 @@ impl CountingStats {
     pub fn live_allocs(&self) -> isize {
         self.allocs.load(Ordering::Relaxed) as isize
             - self.deallocs.load(Ordering::Relaxed) as isize
+    }
+
+    /// Net bytes currently allocated (allocated − deallocated). Zero
+    /// after every allocation has been released, rehomes included.
+    pub fn live_bytes(&self) -> isize {
+        self.bytes_allocated.load(Ordering::Relaxed) as isize
+            - self.bytes_deallocated.load(Ordering::Relaxed) as isize
     }
 }
 
@@ -204,6 +223,7 @@ impl MemoryContext for CountingContext {
 
     unsafe fn deallocate(info: &CountingInfo, ptr: NonNull<u8>, layout: AllocLayout) {
         info.0.deallocs.fetch_add(1, Ordering::Relaxed);
+        info.0.bytes_deallocated.fetch_add(layout.size(), Ordering::Relaxed);
         host_dealloc(ptr, layout);
     }
 
@@ -231,11 +251,19 @@ impl MemoryContext for CountingContext {
     }
 }
 
-/// A bump arena: allocations are O(1) pointer bumps; individual frees are
-/// no-ops; all memory is released when the arena is dropped (or `reset`).
+/// A bump arena: allocations are O(1) pointer bumps; individual frees
+/// don't return memory, but they *are* booked in a live-byte ledger so
+/// the arena knows when everything handed out has been released
+/// (rehomes to another context included) and [`Arena::reset`] may
+/// reclaim the chunks. Without the ledger, `capacity()` drifts upward
+/// forever relative to what is actually in use.
 #[derive(Debug, Default)]
 pub struct Arena {
     chunks: Mutex<ArenaChunks>,
+    /// Bytes handed out (sum of allocation sizes).
+    allocated: AtomicUsize,
+    /// Bytes released back (sum of deallocation sizes).
+    released: AtomicUsize,
 }
 
 #[derive(Debug, Default)]
@@ -256,6 +284,9 @@ impl Arena {
 
     fn bump(&self, layout: AllocLayout) -> NonNull<u8> {
         let mut g = self.chunks.lock().unwrap();
+        // Booked under the chunk lock so `reset`'s live check cannot
+        // race a concurrent allocation.
+        self.allocated.fetch_add(layout.size(), Ordering::Relaxed);
         if let Some((base, chunk_layout, used)) = g.chunks.last_mut() {
             // Align the absolute address, not just the offset: the chunk
             // base may be less aligned than this request.
@@ -277,6 +308,41 @@ impl Arena {
     /// Bytes currently parked in the arena (sum of chunk sizes).
     pub fn capacity(&self) -> usize {
         self.chunks.lock().unwrap().chunks.iter().map(|(_, l, _)| l.size()).sum()
+    }
+
+    /// Book `bytes` as released without going through `deallocate`
+    /// (accounting hook; byte movement already happened elsewhere).
+    /// Booked under the chunk lock so [`Arena::reset`]'s live check
+    /// synchronises with the releasing thread's last use of the memory
+    /// — a lock-free booking would let `reset` free a chunk while the
+    /// releaser's prior writes are still unordered against it.
+    pub fn note_release(&self, bytes: usize) {
+        let _g = self.chunks.lock().unwrap();
+        self.released.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Net bytes still checked out of the arena (allocated − released).
+    /// Zero once every allocation has been deallocated or rehomed away.
+    pub fn live_bytes(&self) -> usize {
+        self.allocated
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.released.load(Ordering::Relaxed))
+    }
+
+    /// Free every chunk — but only when the live ledger shows nothing
+    /// outstanding. Returns whether the reset happened. This is the
+    /// reclamation step the release bookings exist for: after buffers
+    /// rehome to another context (or drop), `live_bytes()` reaches zero
+    /// and the arena's capacity can be returned to the heap.
+    pub fn reset(&self) -> bool {
+        let mut g = self.chunks.lock().unwrap();
+        if self.live_bytes() != 0 {
+            return false;
+        }
+        for (ptr, layout, _) in g.chunks.drain(..) {
+            unsafe { host_dealloc(ptr, layout) };
+        }
+        true
     }
 }
 
@@ -314,8 +380,11 @@ impl MemoryContext for ArenaContext {
         info.0.bump(layout)
     }
 
-    unsafe fn deallocate(_: &ArenaInfo, _ptr: NonNull<u8>, _layout: AllocLayout) {
-        // Deferred to arena drop/reset.
+    unsafe fn deallocate(info: &ArenaInfo, _ptr: NonNull<u8>, layout: AllocLayout) {
+        // Memory reclamation is deferred to arena drop/reset, but the
+        // release IS booked so the live ledger balances (fixes the
+        // capacity drift when `RawBuf::rehome` moves buffers out).
+        info.0.note_release(layout.size());
     }
 }
 
@@ -376,6 +445,299 @@ impl MemoryContext for StagingContext {
     fn note_write(info: &StagingInfo, len: usize) {
         info.counters.h2d_bytes.fetch_add(len, Ordering::Relaxed);
         info.counters.h2d_calls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// PoolContext: recycling size-class pool over any inner context
+// ---------------------------------------------------------------------
+
+/// Smallest pool size class in bytes; requests round up to the next
+/// power of two at or above this.
+pub const POOL_MIN_CLASS: usize = 64;
+
+/// Default idle-byte high-water mark: exceeding it on a return trims
+/// the free lists back down (largest classes first).
+pub const POOL_DEFAULT_HIGH_WATER: usize = 512 << 20; // 512 MiB
+
+#[inline]
+fn pool_class(bytes: usize) -> usize {
+    bytes.max(POOL_MIN_CLASS).next_power_of_two()
+}
+
+/// Counters of one [`Pool`] (monotone except `outstanding`/`held_bytes`).
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Allocations served from a free list (no inner allocator call).
+    pub hits: AtomicUsize,
+    /// Allocations that fell through to the inner context.
+    pub misses: AtomicUsize,
+    /// Blocks checked back in.
+    pub returns: AtomicUsize,
+    /// Blocks released to the inner context by high-water trimming.
+    pub trims: AtomicUsize,
+    /// Blocks currently checked out.
+    pub outstanding: AtomicUsize,
+    /// Idle bytes currently parked in the free lists.
+    pub held_bytes: AtomicUsize,
+}
+
+/// Plain-data snapshot of a pool's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolSnapshot {
+    pub hits: usize,
+    pub misses: usize,
+    pub returns: usize,
+    pub trims: usize,
+    pub outstanding: usize,
+    pub held_bytes: usize,
+}
+
+/// Free blocks, keyed by (class bytes, alignment).
+#[derive(Default)]
+struct PoolShelves {
+    shelves: HashMap<(usize, usize), Vec<NonNull<u8>>>,
+}
+
+// SAFETY: the shelves only park exclusively-owned blocks between a
+// `deallocate` and the next `allocate`; access is mutex-guarded.
+unsafe impl Send for PoolShelves {}
+
+/// A recycling memory resource: size-class free lists over an inner
+/// [`MemoryContext`]. `deallocate` parks blocks instead of freeing, so
+/// a steady-state workload whose capacity classes have all been seen
+/// stops calling the inner allocator entirely — the amortisation that
+/// makes per-event staging allocation-free after warmup.
+pub struct Pool<Inner: MemoryContext = HostContext> {
+    inner: Inner::Info,
+    state: Mutex<PoolShelves>,
+    high_water: AtomicUsize,
+    stats: PoolStats,
+}
+
+impl<Inner: MemoryContext> Pool<Inner> {
+    /// Pool over explicit inner context info with the default high water.
+    pub fn with_inner(inner: Inner::Info) -> Arc<Pool<Inner>> {
+        Self::with_config(inner, POOL_DEFAULT_HIGH_WATER)
+    }
+
+    /// Pool with an explicit idle-byte high-water mark.
+    pub fn with_config(inner: Inner::Info, high_water: usize) -> Arc<Pool<Inner>> {
+        Arc::new(Pool {
+            inner,
+            state: Mutex::new(PoolShelves::default()),
+            high_water: AtomicUsize::new(high_water),
+            stats: PoolStats::default(),
+        })
+    }
+
+    /// The inner context info pooled blocks are drawn from.
+    pub fn inner(&self) -> &Inner::Info {
+        &self.inner
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            returns: self.stats.returns.load(Ordering::Relaxed),
+            trims: self.stats.trims.load(Ordering::Relaxed),
+            outstanding: self.stats.outstanding.load(Ordering::Relaxed),
+            held_bytes: self.stats.held_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Blocks currently checked out.
+    pub fn outstanding(&self) -> usize {
+        self.stats.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// Idle bytes parked in the free lists.
+    pub fn held_bytes(&self) -> usize {
+        self.stats.held_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Change the idle-byte high-water mark and trim down to it.
+    pub fn set_high_water(&self, bytes: usize) {
+        self.high_water.store(bytes, Ordering::Relaxed);
+        self.trim_to(bytes);
+    }
+
+    /// Release idle blocks (largest classes first) until at most
+    /// `target` idle bytes remain. Returns the bytes released.
+    pub fn trim_to(&self, target: usize) -> usize {
+        let mut g = self.state.lock().unwrap();
+        self.trim_locked(&mut g, target)
+    }
+
+    /// Trim with the shelf lock already held (`held_bytes` only mutates
+    /// under the lock, so it always matches the shelf contents).
+    fn trim_locked(&self, g: &mut PoolShelves, target: usize) -> usize {
+        let mut held = self.stats.held_bytes.load(Ordering::Relaxed);
+        if held <= target {
+            return 0;
+        }
+        let mut keys: Vec<(usize, usize)> = g.shelves.keys().copied().collect();
+        keys.sort_unstable_by(|a, b| b.0.cmp(&a.0)); // largest class first
+        let mut released = 0usize;
+        'outer: for key in keys {
+            let Some(list) = g.shelves.get_mut(&key) else { continue };
+            while let Some(ptr) = list.pop() {
+                let layout = AllocLayout::from_size_align(key.0, key.1)
+                    .expect("pool shelf layout");
+                unsafe { Inner::deallocate(&self.inner, ptr, layout) };
+                self.stats.trims.fetch_add(1, Ordering::Relaxed);
+                self.stats.held_bytes.fetch_sub(key.0, Ordering::Relaxed);
+                released += key.0;
+                held = held.saturating_sub(key.0);
+                if held <= target {
+                    break 'outer;
+                }
+            }
+        }
+        released
+    }
+
+    fn take(&self, layout: AllocLayout) -> NonNull<u8> {
+        let class = pool_class(layout.size());
+        let key = (class, layout.align());
+        let recycled = {
+            let mut g = self.state.lock().unwrap();
+            let hit = g.shelves.get_mut(&key).and_then(|v| v.pop());
+            if hit.is_some() {
+                self.stats.held_bytes.fetch_sub(class, Ordering::Relaxed);
+            }
+            hit
+        };
+        let ptr = match recycled {
+            Some(p) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                p
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                let inner_layout = AllocLayout::from_size_align(class, layout.align())
+                    .expect("pool class layout");
+                Inner::allocate(&self.inner, inner_layout)
+            }
+        };
+        self.stats.outstanding.fetch_add(1, Ordering::Relaxed);
+        ptr
+    }
+
+    /// # Safety
+    /// `ptr` must come from [`Self::take`] with the same layout.
+    unsafe fn put(&self, ptr: NonNull<u8>, layout: AllocLayout) {
+        let class = pool_class(layout.size());
+        let key = (class, layout.align());
+        self.stats.outstanding.fetch_sub(1, Ordering::Relaxed);
+        self.stats.returns.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.state.lock().unwrap();
+        g.shelves.entry(key).or_default().push(ptr);
+        let held = self.stats.held_bytes.fetch_add(class, Ordering::Relaxed) + class;
+        let high = self.high_water.load(Ordering::Relaxed);
+        if held > high {
+            self.trim_locked(&mut g, high);
+        }
+    }
+}
+
+impl<Inner: MemoryContext> Drop for Pool<Inner> {
+    fn drop(&mut self) {
+        let g = self.state.get_mut().unwrap();
+        for ((class, align), list) in g.shelves.drain() {
+            let layout = AllocLayout::from_size_align(class, align).expect("pool layout");
+            for ptr in list {
+                unsafe { Inner::deallocate(&self.inner, ptr, layout) };
+            }
+        }
+    }
+}
+
+impl<Inner: MemoryContext> fmt::Debug for Pool<Inner> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "Pool<{}>(hits={} misses={} outstanding={} held={}B)",
+            Inner::NAME,
+            s.hits,
+            s.misses,
+            s.outstanding,
+            s.held_bytes
+        )
+    }
+}
+
+/// Context info of [`PoolContext`]: which pool to draw from.
+pub struct PoolInfo<Inner: MemoryContext = HostContext>(pub Arc<Pool<Inner>>);
+
+impl<Inner: MemoryContext> Clone for PoolInfo<Inner> {
+    fn clone(&self) -> Self {
+        PoolInfo(self.0.clone())
+    }
+}
+
+impl<Inner: MemoryContext> Default for PoolInfo<Inner> {
+    fn default() -> Self {
+        PoolInfo(Pool::with_inner(Inner::Info::default()))
+    }
+}
+
+impl<Inner: MemoryContext> fmt::Debug for PoolInfo<Inner> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PoolInfo({:?})", self.0)
+    }
+}
+
+/// Pooled, recycling allocation over an inner context. Copies, memsets
+/// and accounting hooks delegate to the inner context unchanged — the
+/// pool only intercepts allocate/deallocate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolContext<Inner: MemoryContext = HostContext>(PhantomData<Inner>);
+
+impl<Inner: MemoryContext> MemoryContext for PoolContext<Inner> {
+    type Info = PoolInfo<Inner>;
+    const NAME: &'static str = "pool";
+    const HOST_ACCESSIBLE: bool = Inner::HOST_ACCESSIBLE;
+
+    fn allocate(info: &Self::Info, layout: AllocLayout) -> NonNull<u8> {
+        if layout.size() == 0 {
+            return unsafe { NonNull::new_unchecked(layout.align() as *mut u8) };
+        }
+        info.0.take(layout)
+    }
+
+    unsafe fn deallocate(info: &Self::Info, ptr: NonNull<u8>, layout: AllocLayout) {
+        if layout.size() == 0 {
+            return;
+        }
+        info.0.put(ptr, layout);
+    }
+
+    unsafe fn memset(info: &Self::Info, ptr: *mut u8, len: usize, value: u8) {
+        Inner::memset(&info.0.inner, ptr, len, value);
+    }
+
+    unsafe fn copy_in(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        Inner::copy_in(&info.0.inner, dst, src, len);
+    }
+
+    unsafe fn copy_out(info: &Self::Info, src: *const u8, dst: *mut u8, len: usize) {
+        Inner::copy_out(&info.0.inner, src, dst, len);
+    }
+
+    unsafe fn copy_within(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        Inner::copy_within(&info.0.inner, dst, src, len);
+    }
+
+    fn note_read(info: &Self::Info, len: usize) {
+        Inner::note_read(&info.0.inner, len);
+    }
+
+    fn note_write(info: &Self::Info, len: usize) {
+        Inner::note_write(&info.0.inner, len);
     }
 }
 
@@ -466,5 +828,127 @@ mod tests {
         let p = HostContext::allocate(&(), layout);
         assert_eq!(p.as_ptr() as usize, 8);
         unsafe { HostContext::deallocate(&(), p, layout) };
+    }
+
+    #[test]
+    fn arena_ledger_balances_and_resets() {
+        let info = ArenaInfo::default();
+        let l = AllocLayout::from_size_align(256, 8).unwrap();
+        let a = ArenaContext::allocate(&info, l);
+        let b = ArenaContext::allocate(&info, l);
+        assert_eq!(info.0.live_bytes(), 512);
+        // Live allocations block reset; capacity is retained.
+        assert!(!info.0.reset());
+        assert_eq!(info.0.capacity(), ARENA_CHUNK);
+        unsafe {
+            ArenaContext::deallocate(&info, a, l);
+            ArenaContext::deallocate(&info, b, l);
+        }
+        assert_eq!(info.0.live_bytes(), 0);
+        // Everything released: reset reclaims the chunks.
+        assert!(info.0.reset());
+        assert_eq!(info.0.capacity(), 0);
+        // The arena is usable again after a reset.
+        let c = ArenaContext::allocate(&info, l);
+        unsafe { ArenaContext::deallocate(&info, c, l) };
+        assert_eq!(info.0.live_bytes(), 0);
+    }
+
+    #[test]
+    fn counting_books_released_bytes() {
+        let info = CountingInfo::default();
+        let l = AllocLayout::from_size_align(100, 8).unwrap();
+        let p = CountingContext::allocate(&info, l);
+        assert_eq!(info.0.live_bytes(), 100);
+        unsafe { CountingContext::deallocate(&info, p, l) };
+        assert_eq!(info.0.live_bytes(), 0);
+        assert_eq!(info.0.bytes_deallocated.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_roundtrip_and_delegated_copies() {
+        let info = PoolInfo::<CountingContext>::default();
+        roundtrip::<PoolContext<CountingContext>>(&info);
+        // Copies/memsets were booked on the inner context.
+        let inner = info.0.inner().clone();
+        assert_eq!(inner.0.bytes_copied_in.load(Ordering::Relaxed), 256);
+        assert_eq!(inner.0.bytes_copied_out.load(Ordering::Relaxed), 1024);
+        assert_eq!(inner.0.memsets.load(Ordering::Relaxed), 1);
+        // The block was parked, not freed.
+        assert_eq!(info.0.outstanding(), 0);
+        assert_eq!(inner.0.live_allocs(), 1);
+        assert_eq!(info.0.held_bytes(), pool_class(1024));
+    }
+
+    #[test]
+    fn pool_recycles_by_size_class() {
+        let info = PoolInfo::<CountingContext>::default();
+        let inner = info.0.inner().clone();
+        let l = AllocLayout::from_size_align(100, 8).unwrap();
+        let p1 = PoolContext::<CountingContext>::allocate(&info, l);
+        unsafe { PoolContext::<CountingContext>::deallocate(&info, p1, l) };
+        // Any request in the same (class, align) recycles the block.
+        let l2 = AllocLayout::from_size_align(128, 8).unwrap();
+        let p2 = PoolContext::<CountingContext>::allocate(&info, l2);
+        assert_eq!(p1.as_ptr(), p2.as_ptr());
+        let s = info.0.stats();
+        assert_eq!((s.hits, s.misses, s.outstanding), (1, 1, 1));
+        // One inner allocation total, of the rounded class size.
+        assert_eq!(inner.0.allocs.load(Ordering::Relaxed), 1);
+        assert_eq!(inner.0.bytes_allocated.load(Ordering::Relaxed), 128);
+        unsafe { PoolContext::<CountingContext>::deallocate(&info, p2, l2) };
+        assert_eq!(info.0.outstanding(), 0);
+    }
+
+    #[test]
+    fn pool_high_water_trims_idle_blocks() {
+        let inner_info = CountingInfo::default();
+        // High water below two parked 1 KiB-class blocks.
+        let pool = Pool::<CountingContext>::with_config(inner_info.clone(), 1024);
+        let info = PoolInfo(pool);
+        let l = AllocLayout::from_size_align(1000, 8).unwrap();
+        let a = PoolContext::<CountingContext>::allocate(&info, l);
+        let b = PoolContext::<CountingContext>::allocate(&info, l);
+        unsafe {
+            PoolContext::<CountingContext>::deallocate(&info, a, l);
+            // First return parks 1024 held bytes (at the high water).
+            assert_eq!(info.0.held_bytes(), 1024);
+            // Second return exceeds it and trims back down.
+            PoolContext::<CountingContext>::deallocate(&info, b, l);
+        }
+        let s = info.0.stats();
+        assert!(s.trims >= 1, "expected a trim, got {s:?}");
+        assert!(info.0.held_bytes() <= 1024);
+        assert_eq!(inner_info.0.deallocs.load(Ordering::Relaxed), s.trims);
+        // Dropping the pool releases whatever is still parked.
+        drop(info);
+        assert_eq!(inner_info.0.live_allocs(), 0);
+        assert_eq!(inner_info.0.live_bytes(), 0);
+    }
+
+    #[test]
+    fn pool_distinguishes_alignment() {
+        let info = PoolInfo::<HostContext>::default();
+        let l8 = AllocLayout::from_size_align(64, 8).unwrap();
+        let l64 = AllocLayout::from_size_align(64, 64).unwrap();
+        let p = PoolContext::<HostContext>::allocate(&info, l8);
+        unsafe { PoolContext::<HostContext>::deallocate(&info, p, l8) };
+        // Same class, stricter alignment: must NOT recycle the 8-aligned
+        // block.
+        let q = PoolContext::<HostContext>::allocate(&info, l64);
+        assert_eq!(q.as_ptr() as usize % 64, 0);
+        assert_eq!(info.0.stats().hits, 0);
+        unsafe { PoolContext::<HostContext>::deallocate(&info, q, l64) };
+    }
+
+    #[test]
+    fn pool_zero_size_skips_the_pool() {
+        let info = PoolInfo::<CountingContext>::default();
+        let l = AllocLayout::from_size_align(0, 16).unwrap();
+        let p = PoolContext::<CountingContext>::allocate(&info, l);
+        assert_eq!(p.as_ptr() as usize, 16);
+        unsafe { PoolContext::<CountingContext>::deallocate(&info, p, l) };
+        let s = info.0.stats();
+        assert_eq!((s.hits, s.misses, s.returns, s.outstanding), (0, 0, 0, 0));
     }
 }

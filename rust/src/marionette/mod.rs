@@ -47,7 +47,7 @@ pub mod prelude {
     pub use super::layout::{AoS, AoSoA, Layout, PlaneShape, SoABlob, SoAVec};
     pub use super::memory::{
         AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, HostContext,
-        MemoryContext, StagingContext, StagingInfo,
+        MemoryContext, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext, StagingInfo,
     };
     pub use super::pod::{Dtype, Pod};
     pub use super::schema::{
@@ -55,8 +55,9 @@ pub mod prelude {
         JaggedProp, Schema, SchemaBuilder, TagId,
     };
     pub use super::transfer::{
-        copy_collection, copy_collection_stats, copy_collection_unplanned,
-        memcopy_with_context, plan_cache_stats, plan_for, register_specialized,
-        PlanCacheStats, PlanOp, TransferPlan, TransferPriority, TransferStats,
+        bounce_scratch_stats, copy_collection, copy_collection_stats,
+        copy_collection_unplanned, memcopy_with_context, plan_cache_stats, plan_for,
+        register_specialized, PlanCacheStats, PlanOp, TransferPlan, TransferPriority,
+        TransferStats,
     };
 }

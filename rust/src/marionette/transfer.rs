@@ -46,7 +46,7 @@
 
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::collection::RawCollection;
@@ -91,10 +91,75 @@ pub unsafe fn memcopy_with_context<Src: MemoryContext, Dst: MemoryContext>(
         Src::copy_out(src_info, src, dst, len);
         Dst::note_write(dst_info, len); // accounting only, no byte movement
     } else {
-        let mut bounce = vec![0u8; len];
-        Src::copy_out(src_info, src, bounce.as_mut_ptr(), len);
-        Dst::copy_in(dst_info, dst, bounce.as_ptr(), len);
+        // SAFETY: the scratch covers `len` bytes; src/dst validity is
+        // this function's own contract.
+        with_bounce_scratch(len, |bounce| unsafe {
+            Src::copy_out(src_info, src, bounce.as_mut_ptr(), len);
+            Dst::copy_in(dst_info, dst, bounce.as_ptr(), len);
+        });
     }
+}
+
+/// How many bounce scratch buffers may idle in the pool; chunked
+/// `execute_par` copies use at most one per worker at a time.
+const MAX_BOUNCE_SCRATCH: usize = 32;
+
+/// Cap on total bytes the idle bounce shelf may retain: scratch only
+/// ever grows, so without a byte bound one burst of large copies would
+/// park its high-water mark in a process-wide static forever.
+const MAX_BOUNCE_HELD_BYTES: usize = 64 << 20; // 64 MiB
+
+static BOUNCE_HITS: AtomicU64 = AtomicU64::new(0);
+static BOUNCE_MISSES: AtomicU64 = AtomicU64::new(0);
+static BOUNCE_HELD_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+fn bounce_pool() -> &'static Mutex<Vec<Vec<u8>>> {
+    static POOL: OnceLock<Mutex<Vec<Vec<u8>>>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Run `f` over a recycled host bounce buffer of at least `len` bytes.
+/// Plans whose copies must stage through the host (neither context is
+/// host-accessible) borrow scratch planes here instead of allocating
+/// one per copy — with `execute_par` chunking, that would otherwise be
+/// one fresh allocation per chunk per event. `RawBuf::rehome`'s bounce
+/// route borrows from the same shelf.
+pub(crate) fn with_bounce_scratch<R>(len: usize, f: impl FnOnce(&mut [u8]) -> R) -> R {
+    let recycled = {
+        let mut g = bounce_pool().lock().unwrap();
+        let b = g.pop();
+        if let Some(b) = &b {
+            BOUNCE_HELD_BYTES.fetch_sub(b.len(), Ordering::Relaxed);
+        }
+        b
+    };
+    let mut buf = match recycled {
+        Some(b) => {
+            BOUNCE_HITS.fetch_add(1, Ordering::Relaxed);
+            b
+        }
+        None => {
+            BOUNCE_MISSES.fetch_add(1, Ordering::Relaxed);
+            Vec::new()
+        }
+    };
+    if buf.len() < len {
+        buf.resize(len, 0);
+    }
+    let r = f(&mut buf[..len]);
+    let mut g = bounce_pool().lock().unwrap();
+    if g.len() < MAX_BOUNCE_SCRATCH
+        && BOUNCE_HELD_BYTES.load(Ordering::Relaxed) + buf.len() <= MAX_BOUNCE_HELD_BYTES
+    {
+        BOUNCE_HELD_BYTES.fetch_add(buf.len(), Ordering::Relaxed);
+        g.push(buf);
+    }
+    r
+}
+
+/// (hits, misses) of the bounce-scratch pool (process-wide, monotone).
+pub fn bounce_scratch_stats() -> (u64, u64) {
+    (BOUNCE_HITS.load(Ordering::Relaxed), BOUNCE_MISSES.load(Ordering::Relaxed))
 }
 
 /// Overlap-tolerant copy within one context: safe for a destination range
@@ -1191,6 +1256,35 @@ mod tests {
         assert_eq!(si.0.bytes_copied_in.load(Ordering::Relaxed), 0);
         assert_eq!(di.0.bytes_copied_in.load(Ordering::Relaxed), 64);
         assert_eq!(di.0.bytes_copied_out.load(Ordering::Relaxed), 0);
+        assert_eq!(dst_buf, src_buf);
+    }
+
+    /// The bounce route draws its host staging buffer from the scratch
+    /// pool: repeated opaque↔opaque copies recycle instead of allocating.
+    #[test]
+    fn bounce_route_recycles_scratch() {
+        let src_buf: Vec<u8> = (0..128).collect();
+        let mut dst_buf = vec![0u8; 128];
+        let (si, di) = (CountingInfo::default(), CountingInfo::default());
+        let one_copy = |dst: &mut [u8]| unsafe {
+            memcopy_with_context::<OpaqueContext, OpaqueContext>(
+                &si,
+                src_buf.as_ptr(),
+                &di,
+                dst.as_mut_ptr(),
+                128,
+            );
+        };
+        one_copy(&mut dst_buf);
+        let (hits0, _) = bounce_scratch_stats();
+        for _ in 0..4 {
+            one_copy(&mut dst_buf);
+        }
+        let (hits1, _) = bounce_scratch_stats();
+        // Lower bound of one: the shelf is process-global, so a
+        // concurrently-running bounce test may momentarily hold the
+        // parked buffer — but four sequential copies cannot all miss.
+        assert!(hits1 > hits0, "bounce scratch not recycled: {hits0} -> {hits1}");
         assert_eq!(dst_buf, src_buf);
     }
 

@@ -5,10 +5,19 @@
 //! launches only* — exactly the paper's point that a collection's
 //! `interface_properties` differ per execution context (§VII-B). Upload
 //! once, run both stages against the resident buffers, download results.
+//!
+//! [`DeviceEventPool`] bounds how many events may be device-resident at
+//! once (device memory is the scarce resource the paper's contexts
+//! manage) and recycles the host-side upload staging buffer — the i32
+//! conversion plane every upload marshals `noisy` through — across
+//! events, so steady-state uploads stop allocating on the host side
+//! (DESIGN.md §5).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::edm::generator::RawEvent;
 
@@ -33,10 +42,20 @@ pub struct DeviceEvent {
 impl DeviceEvent {
     /// Upload a raw event's planes to the device.
     pub fn upload(ev: &RawEvent) -> Result<DeviceEvent> {
+        let mut scratch = Vec::new();
+        Self::upload_with_scratch(ev, &mut scratch)
+    }
+
+    /// As [`Self::upload`], marshalling through a caller-provided
+    /// staging buffer (the `noisy` u8→i32 conversion plane). Reusing
+    /// `scratch` across events removes the per-upload host allocation;
+    /// [`DeviceEventPool`] owns a shelf of these.
+    pub fn upload_with_scratch(ev: &RawEvent, scratch: &mut Vec<i32>) -> Result<DeviceEvent> {
         let c = client();
         let dims = [ev.rows, ev.cols];
         let t = Instant::now();
-        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        scratch.clear();
+        scratch.extend(ev.noisy.iter().map(|&x| x as i32));
         let out = DeviceEvent {
             event_id: ev.event_id,
             rows: ev.rows,
@@ -46,7 +65,7 @@ impl DeviceEvent {
             b: c.buffer_from_host_buffer(&ev.b, &dims, None)?,
             na: c.buffer_from_host_buffer(&ev.na, &dims, None)?,
             nb: c.buffer_from_host_buffer(&ev.nb, &dims, None)?,
-            noisy: c.buffer_from_host_buffer(&noisy, &dims, None)?,
+            noisy: c.buffer_from_host_buffer(scratch.as_slice(), &dims, None)?,
             types: c.buffer_from_host_buffer(&ev.types, &dims, None)?,
             upload_time: Duration::ZERO,
         };
@@ -63,6 +82,131 @@ impl DeviceEvent {
     /// Input buffers of the fused `full_event` entry, in signature order.
     pub fn full_event_inputs(&self) -> [&xla::PjRtBuffer; 7] {
         [&self.counts, &self.a, &self.b, &self.na, &self.nb, &self.noisy, &self.types]
+    }
+}
+
+/// Counters of a [`DeviceEventPool`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeviceEventPoolStats {
+    /// Successful uploads through the pool.
+    pub uploads: usize,
+    /// Uploads whose staging scratch came off the shelf.
+    pub scratch_hits: usize,
+    /// Uploads that had to grow a fresh staging scratch.
+    pub scratch_misses: usize,
+    /// Uploads rejected because the residency bound was reached.
+    pub rejected: usize,
+}
+
+/// Bounded device-event residency pool.
+///
+/// Device memory is the scarce resource; the pool caps how many
+/// [`DeviceEvent`]s may be resident at once (each [`ResidentEvent`]
+/// releases its slot on drop, which also drops the PJRT buffers) and
+/// recycles the host-side upload staging scratch across events.
+pub struct DeviceEventPool {
+    max_resident: usize,
+    resident: Arc<AtomicUsize>,
+    scratch: Mutex<Vec<Vec<i32>>>,
+    uploads: AtomicUsize,
+    scratch_hits: AtomicUsize,
+    scratch_misses: AtomicUsize,
+    rejected: AtomicUsize,
+}
+
+impl DeviceEventPool {
+    /// Pool admitting at most `max_resident` simultaneous device events.
+    pub fn new(max_resident: usize) -> DeviceEventPool {
+        DeviceEventPool {
+            max_resident: max_resident.max(1),
+            resident: Arc::new(AtomicUsize::new(0)),
+            scratch: Mutex::new(Vec::new()),
+            uploads: AtomicUsize::new(0),
+            scratch_hits: AtomicUsize::new(0),
+            scratch_misses: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+        }
+    }
+
+    /// Events currently resident on the device through this pool.
+    pub fn resident(&self) -> usize {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// The residency bound.
+    pub fn capacity(&self) -> usize {
+        self.max_resident
+    }
+
+    /// Whether an upload would be admitted right now.
+    pub fn has_capacity(&self) -> bool {
+        self.resident() < self.max_resident
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> DeviceEventPoolStats {
+        DeviceEventPoolStats {
+            uploads: self.uploads.load(Ordering::Relaxed),
+            scratch_hits: self.scratch_hits.load(Ordering::Relaxed),
+            scratch_misses: self.scratch_misses.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Upload an event within the residency bound. Fails (without
+    /// touching the device) when the bound is reached — callers drop or
+    /// finish older [`ResidentEvent`]s first; the device worker is
+    /// single-threaded, so this surfaces as backpressure, not a race.
+    pub fn upload(&self, ev: &RawEvent) -> Result<ResidentEvent> {
+        // Single device thread: check-then-reserve does not race.
+        if !self.has_capacity() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "device-event pool at residency bound ({} events)",
+                self.max_resident
+            );
+        }
+        let mut scratch = match self.scratch.lock().unwrap().pop() {
+            Some(s) => {
+                self.scratch_hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.scratch_misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        let result = DeviceEvent::upload_with_scratch(ev, &mut scratch);
+        {
+            let mut shelf = self.scratch.lock().unwrap();
+            if shelf.len() < self.max_resident {
+                shelf.push(scratch);
+            }
+        }
+        let dev = result?;
+        self.resident.fetch_add(1, Ordering::Relaxed);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        Ok(ResidentEvent { dev, resident: self.resident.clone() })
+    }
+}
+
+/// A [`DeviceEvent`] occupying a [`DeviceEventPool`] residency slot;
+/// dropping it frees the slot (and the PJRT buffers with it).
+pub struct ResidentEvent {
+    dev: DeviceEvent,
+    resident: Arc<AtomicUsize>,
+}
+
+impl std::ops::Deref for ResidentEvent {
+    type Target = DeviceEvent;
+    fn deref(&self) -> &DeviceEvent {
+        &self.dev
+    }
+}
+
+impl Drop for ResidentEvent {
+    fn drop(&mut self) {
+        self.resident.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -83,5 +227,44 @@ mod tests {
         // Round-trip one plane to prove residency.
         let lit = dev.counts.to_literal_sync().unwrap();
         assert_eq!(lit.to_vec::<i32>().unwrap(), ev.counts);
+    }
+
+    #[test]
+    fn pool_accounting_without_device() {
+        // The bound and counters are pure host state; no PJRT needed.
+        let pool = DeviceEventPool::new(0); // clamps to 1
+        assert_eq!(pool.capacity(), 1);
+        assert_eq!(pool.resident(), 0);
+        assert!(pool.has_capacity());
+        assert_eq!(pool.stats(), DeviceEventPoolStats::default());
+    }
+
+    #[test]
+    fn pool_bounds_residency_and_recycles_scratch() {
+        let mut gen = EventGenerator::new(EventConfig::grid(16, 16, 1), 3);
+        let ev = gen.generate();
+        let pool = DeviceEventPool::new(2);
+        let Ok(first) = pool.upload(&ev) else {
+            eprintln!("skipping: no PJRT");
+            return;
+        };
+        assert_eq!(pool.resident(), 1);
+        assert_eq!(first.device_bytes(), 7 * 16 * 16 * 4);
+        let second = pool.upload(&gen.generate()).unwrap();
+        assert_eq!(pool.resident(), 2);
+        // Bound reached: the third upload is rejected without touching
+        // the device.
+        assert!(pool.upload(&gen.generate()).is_err());
+        assert_eq!(pool.stats().rejected, 1);
+        // Dropping a resident event frees its slot...
+        drop(first);
+        assert_eq!(pool.resident(), 1);
+        let third = pool.upload(&gen.generate()).unwrap();
+        // ...and later uploads reuse the parked staging scratch.
+        let s = pool.stats();
+        assert_eq!(s.uploads, 3);
+        assert!(s.scratch_hits >= 2, "scratch not recycled: {s:?}");
+        drop((second, third));
+        assert_eq!(pool.resident(), 0);
     }
 }

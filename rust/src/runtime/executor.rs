@@ -69,11 +69,19 @@ pub struct ParticleStageOut {
 pub struct Engine {
     manifest: Manifest,
     cache: RefCell<HashMap<(String, usize, usize), Rc<xla::PjRtLoadedExecutable>>>,
+    /// Reused upload staging buffer for the `noisy` u8→i32 conversion
+    /// plane: grown once to the event size, then recycled per call so
+    /// steady-state uploads allocate nothing host-side (DESIGN.md §5).
+    noisy_scratch: RefCell<Vec<i32>>,
 }
 
 impl Engine {
     pub fn new(manifest: Manifest) -> Engine {
-        Engine { manifest, cache: RefCell::new(HashMap::new()) }
+        Engine {
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            noisy_scratch: RefCell::new(Vec::new()),
+        }
     }
 
     /// Engine over the default artifacts directory.
@@ -179,15 +187,18 @@ impl Engine {
         let mut timing = ExecTiming::default();
 
         let t = Instant::now();
-        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let mut noisy = self.noisy_scratch.borrow_mut();
+        noisy.clear();
+        noisy.extend(ev.noisy.iter().map(|&x| x as i32));
         let inputs = vec![
             self.upload_i32(&ev.counts, rows, cols)?,
             self.upload_f32(&ev.a, rows, cols)?,
             self.upload_f32(&ev.b, rows, cols)?,
             self.upload_f32(&ev.na, rows, cols)?,
             self.upload_f32(&ev.nb, rows, cols)?,
-            self.upload_i32(&noisy, rows, cols)?,
+            self.upload_i32(noisy.as_slice(), rows, cols)?,
         ];
+        drop(noisy);
         timing.upload += t.elapsed();
 
         let parts = self.run(&exe, &inputs, &mut timing)?;
@@ -252,16 +263,19 @@ impl Engine {
         let mut timing = ExecTiming::default();
 
         let t = Instant::now();
-        let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();
+        let mut noisy = self.noisy_scratch.borrow_mut();
+        noisy.clear();
+        noisy.extend(ev.noisy.iter().map(|&x| x as i32));
         let inputs = vec![
             self.upload_i32(&ev.counts, rows, cols)?,
             self.upload_f32(&ev.a, rows, cols)?,
             self.upload_f32(&ev.b, rows, cols)?,
             self.upload_f32(&ev.na, rows, cols)?,
             self.upload_f32(&ev.nb, rows, cols)?,
-            self.upload_i32(&noisy, rows, cols)?,
+            self.upload_i32(noisy.as_slice(), rows, cols)?,
             self.upload_i32(&ev.types, rows, cols)?,
         ];
+        drop(noisy);
         timing.upload += t.elapsed();
 
         let parts = self.run(&exe, &inputs, &mut timing)?;

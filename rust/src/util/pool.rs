@@ -1,4 +1,5 @@
-//! A minimal fixed-size thread pool (in-tree substrate; DESIGN.md §3).
+//! Pools (in-tree substrate; DESIGN.md §3, §5): a minimal fixed-size
+//! thread pool plus a generic recycling object pool.
 //!
 //! The vendored dependency set has no rayon, so the small slice this
 //! project needs is implemented here: a process-wide pool of worker
@@ -10,10 +11,18 @@
 //! Scoped jobs must not themselves call [`ThreadPool::scoped`] on the
 //! same pool: with every worker parked inside the outer batch, the
 //! inner batch could never be picked up.
+//!
+//! [`ObjectPool`] / [`Recycler`] are the object-level recycling pair
+//! under the memory strategy in DESIGN.md §5: `checkout()` hands out a
+//! warm object (or makes a fresh one) behind an RAII [`Recycler`]
+//! handle that checks it back in on drop, capacity intact. The pipeline
+//! uses it for per-event staging collections; byte-level recycling is
+//! [`crate::marionette::memory::PoolContext`].
 
 use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -159,10 +168,146 @@ impl Latch {
     }
 }
 
+// ---------------------------------------------------------------------
+// Object recycling: ObjectPool + Recycler
+// ---------------------------------------------------------------------
+
+/// Counters of an [`ObjectPool`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObjectPoolStats {
+    /// Checkouts served from the idle shelf.
+    pub hits: usize,
+    /// Checkouts that constructed a fresh object.
+    pub misses: usize,
+    /// Objects checked back in.
+    pub returns: usize,
+    /// Returns rejected by the idle bound (object dropped instead).
+    pub dropped: usize,
+}
+
+/// A pool of reusable objects. [`ObjectPool::checkout`] pops an idle
+/// object (or builds one with the constructor) and wraps it in a
+/// [`Recycler`] that checks it back in on drop — so anything with
+/// amortised internal capacity (collections, buffers) keeps that
+/// capacity warm across uses instead of re-allocating per use.
+pub struct ObjectPool<T: Send> {
+    idle: Mutex<Vec<T>>,
+    make: Box<dyn Fn() -> T + Send + Sync>,
+    max_idle: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    returns: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+impl<T: Send> ObjectPool<T> {
+    /// Pool with a default idle bound of 64 objects.
+    pub fn new(make: impl Fn() -> T + Send + Sync + 'static) -> Arc<ObjectPool<T>> {
+        Self::with_max_idle(make, 64)
+    }
+
+    /// Pool keeping at most `max_idle` objects parked; returns beyond
+    /// the bound drop the object (its memory goes back to its context).
+    pub fn with_max_idle(
+        make: impl Fn() -> T + Send + Sync + 'static,
+        max_idle: usize,
+    ) -> Arc<ObjectPool<T>> {
+        Arc::new(ObjectPool {
+            idle: Mutex::new(Vec::new()),
+            make: Box::new(make),
+            max_idle,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            returns: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        })
+    }
+
+    /// Draw an object; it returns to the pool when the handle drops.
+    /// Takes the `Arc` handle by value — clone it to keep the pool:
+    /// `pool.clone().checkout()`.
+    pub fn checkout(self: Arc<Self>) -> Recycler<T> {
+        let recycled = self.idle.lock().unwrap().pop();
+        let item = match recycled {
+            Some(t) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                t
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                (self.make)()
+            }
+        };
+        Recycler { item: Some(item), pool: self }
+    }
+
+    /// Objects currently parked.
+    pub fn idle(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> ObjectPoolStats {
+        ObjectPoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl<T: Send> std::fmt::Debug for ObjectPool<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(f, "ObjectPool(idle={} {s:?})", self.idle())
+    }
+}
+
+/// RAII checkout handle: derefs to the pooled object and checks it back
+/// in on drop (unless [`Recycler::detach`]ed).
+pub struct Recycler<T: Send> {
+    item: Option<T>,
+    pool: Arc<ObjectPool<T>>,
+}
+
+impl<T: Send> Recycler<T> {
+    /// Take the object out for good; it will not return to the pool.
+    pub fn detach(mut self) -> T {
+        self.item.take().expect("recycler item present until drop")
+    }
+}
+
+impl<T: Send> Deref for Recycler<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("recycler item present until drop")
+    }
+}
+
+impl<T: Send> DerefMut for Recycler<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("recycler item present until drop")
+    }
+}
+
+impl<T: Send> Drop for Recycler<T> {
+    fn drop(&mut self) {
+        if let Some(t) = self.item.take() {
+            let mut g = self.pool.idle.lock().unwrap();
+            if g.len() < self.pool.max_idle {
+                self.pool.returns.fetch_add(1, Ordering::Relaxed);
+                g.push(t);
+            } else {
+                self.pool.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn runs_all_jobs() {
@@ -228,5 +373,98 @@ mod tests {
             }) as Box<dyn FnOnce() + Send + '_>]);
             assert_eq!(hit.load(Ordering::Relaxed), 1, "round {round}");
         }
+    }
+
+    #[test]
+    fn object_pool_recycles_and_bounds_idle() {
+        let made = Arc::new(AtomicUsize::new(0));
+        let m = made.clone();
+        let pool = ObjectPool::with_max_idle(
+            move || {
+                m.fetch_add(1, Ordering::Relaxed);
+                Vec::<u8>::with_capacity(1024)
+            },
+            1,
+        );
+        {
+            let mut a = pool.clone().checkout();
+            a.push(7);
+            let _b = pool.clone().checkout(); // second live object
+        } // both return; idle bound 1 keeps one, drops one
+        assert_eq!(made.load(Ordering::Relaxed), 2);
+        assert_eq!(pool.idle(), 1);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.returns, s.dropped), (0, 2, 1, 1));
+        // The survivor comes back warm (capacity intact, content stale —
+        // callers own the reset policy).
+        let c = pool.clone().checkout();
+        assert!(c.capacity() >= 1024);
+        assert_eq!(made.load(Ordering::Relaxed), 2);
+        assert_eq!(pool.stats().hits, 1);
+        let detached = c.detach();
+        drop(detached);
+        assert_eq!(pool.idle(), 0, "detached objects do not return");
+    }
+
+    /// Thread-pool + memory-pool contention stress: many scoped workers
+    /// hammering one byte pool (PoolContext) and one object pool at
+    /// once. Run via `ci.sh` with `MARIONETTE_STRESS=1` (or
+    /// `cargo test -- --ignored`).
+    #[test]
+    #[ignore = "stress target; run with --ignored (ci.sh MARIONETTE_STRESS=1)"]
+    fn thread_and_memory_pool_contention_stress() {
+        use crate::marionette::buffer::ContextAwareVec;
+        use crate::marionette::memory::{CountingInfo, Pool, PoolContext, PoolInfo};
+
+        type Ctx = PoolContext<crate::marionette::memory::CountingContext>;
+
+        let inner = CountingInfo::default();
+        let bytes = PoolInfo(Pool::<crate::marionette::memory::CountingContext>::with_config(
+            inner.clone(),
+            8 << 20, // tight high water: trimming under contention
+        ));
+        let objects = {
+            let info = bytes.clone();
+            ObjectPool::with_max_idle(move || ContextAwareVec::<u64, Ctx>::new_in(info.clone()), 16)
+        };
+
+        let tp = ThreadPool::new(8);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+            .map(|j| {
+                let objects = objects.clone();
+                let bytes = bytes.clone();
+                Box::new(move || {
+                    for round in 0..50 {
+                        // Object-pool churn: grow a recycled vec to a
+                        // job-dependent size, verify its tail.
+                        let n = 64 + 37 * ((j + round) % 17);
+                        let mut v = objects.clone().checkout();
+                        v.clear();
+                        for i in 0..n {
+                            v.push((j * 1_000_000 + i) as u64);
+                        }
+                        assert_eq!(v[n - 1], (j * 1_000_000 + n - 1) as u64);
+                        // Byte-pool churn: a short-lived buffer per round.
+                        let scratch = ContextAwareVec::<u64, Ctx>::with_capacity_in(
+                            n,
+                            bytes.clone(),
+                        );
+                        assert!(scratch.capacity() >= n);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        tp.scoped(jobs);
+
+        // Scratch buffers all returned; the only blocks still checked
+        // out are the ones held by idle pooled vecs (one buffer each).
+        assert_eq!(bytes.0.outstanding(), objects.idle());
+        // Release the object pool, then the byte pool: everything must
+        // flow back to the counting heap with nothing leaked.
+        drop(objects);
+        assert_eq!(bytes.0.outstanding(), 0);
+        drop(bytes);
+        assert_eq!(inner.0.live_allocs(), 0, "leaked inner allocations");
+        assert_eq!(inner.0.live_bytes(), 0, "leaked inner bytes");
     }
 }

@@ -1,0 +1,264 @@
+//! MemoryContext conformance harness.
+//!
+//! One generic checker, instantiated for every in-tree context (Host,
+//! Aligned, Counting, Arena, Staging, Pool): property-style programs of
+//! randomized allocate / fill / verify / free / grow / rehome steps are
+//! decoded from `u64` ops exactly like `prop_marionette.rs` decodes its
+//! collection programs (`util::prop::Cases::shrinkable`), and every
+//! context must uphold the same invariants:
+//!
+//! * **alignment** — `allocate` honours the requested alignment;
+//! * **isolation** — live allocations never overlap (each slot carries
+//!   a fill pattern that must survive until its free);
+//! * **grow** — `RawBuf::grow_exact` preserves the retained prefix,
+//!   shrink included;
+//! * **rehome** — moving a buffer onto other context info preserves
+//!   contents and books the release on the source;
+//! * **drop-balance** — after every allocation is released, the
+//!   context's observable ledgers are balanced (counting: live
+//!   allocs/bytes; arena: live bytes + resettable; pool: nothing
+//!   outstanding, checkouts all returned).
+
+use std::alloc::Layout as AllocLayout;
+use std::ptr::NonNull;
+
+use marionette::marionette::buffer::{ContextAwareVec, RawBuf};
+use marionette::marionette::memory::{
+    AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, HostContext,
+    MemoryContext, PoolContext, PoolInfo, StagingContext, StagingInfo,
+};
+use marionette::util::prop::Cases;
+
+/// The pooled instantiation checked by the harness: recycling over a
+/// counting heap, so drop-balance is observable end to end.
+type PoolCtx = PoolContext<CountingContext>;
+
+struct Slot {
+    ptr: NonNull<u8>,
+    layout: AllocLayout,
+    pattern: u8,
+}
+
+fn verify_slot<C: MemoryContext>(info: &C::Info, s: &Slot) -> Result<(), String> {
+    if s.layout.size() == 0 {
+        return Ok(());
+    }
+    let mut out = vec![0u8; s.layout.size()];
+    unsafe { C::copy_out(info, s.ptr.as_ptr(), out.as_mut_ptr(), out.len()) };
+    match out.iter().position(|&b| b != s.pattern) {
+        None => Ok(()),
+        Some(i) => Err(format!(
+            "slot pattern {:#04x} corrupted at byte {i} (size {}, align {}): {:#04x}",
+            s.pattern,
+            s.layout.size(),
+            s.layout.align(),
+            out[i]
+        )),
+    }
+}
+
+/// Run one decoded program against context `C`.
+fn run_program<C: MemoryContext>(
+    program: &[u64],
+    fresh: &impl Fn() -> C::Info,
+    after: &impl Fn(&C::Info) -> Result<(), String>,
+) -> Result<(), String> {
+    let info = fresh();
+    let mut slots: Vec<Slot> = Vec::new();
+    for (step, &op) in program.iter().enumerate() {
+        let size = ((op >> 2) % 2049) as usize; // 0..=2048
+        let align = 1usize << ((op >> 14) % 7); // 1..=64
+        let pattern = (op >> 24) as u8;
+        let pick = (op >> 32) as usize;
+        match op % 4 {
+            0 => {
+                // Allocate, fill with this slot's pattern.
+                let layout = AllocLayout::from_size_align(size, align)
+                    .map_err(|e| format!("step {step}: bad layout: {e}"))?;
+                let ptr = C::allocate(&info, layout);
+                if ptr.as_ptr() as usize % align != 0 {
+                    return Err(format!(
+                        "step {step}: allocation not {align}-aligned: {ptr:p}"
+                    ));
+                }
+                unsafe { C::memset(&info, ptr.as_ptr(), size, pattern) };
+                slots.push(Slot { ptr, layout, pattern });
+            }
+            1 if !slots.is_empty() => {
+                // Verify one live slot's pattern, then free it. The
+                // verify is what catches overlapping live allocations
+                // (a recycling bug would hand the same block out twice
+                // and the second fill would corrupt the first pattern).
+                let s = slots.swap_remove(pick % slots.len());
+                verify_slot::<C>(&info, &s).map_err(|e| format!("step {step}: {e}"))?;
+                unsafe { C::deallocate(&info, s.ptr, s.layout) };
+            }
+            2 => {
+                // Grow/shrink invariant: a context-allocated RawBuf
+                // keeps its retained prefix across capacity changes.
+                let first = (size + 1).min(512);
+                let mut buf = RawBuf::<C>::with_capacity(first, align, info.clone());
+                unsafe { C::memset(&info, buf.as_mut_ptr(), first, pattern) };
+                buf.grow_exact(first * 2 + 8);
+                let shrink = first / 2 + 1;
+                buf.grow_exact(shrink); // shrink keeps the prefix too
+                let mut out = vec![0u8; shrink];
+                unsafe { C::copy_out(&info, buf.as_ptr(), out.as_mut_ptr(), shrink) };
+                if out.iter().any(|&b| b != pattern) {
+                    return Err(format!("step {step}: grow/shrink lost the prefix"));
+                }
+            }
+            3 => {
+                // Rehome invariant: contents survive the move to new
+                // info, and the source books the release (checked by
+                // `after` once everything is freed).
+                let n = (size + 1).min(256);
+                let mut buf = RawBuf::<C>::with_capacity(n, align, info.clone());
+                unsafe { C::memset(&info, buf.as_mut_ptr(), n, pattern) };
+                let dst_info = fresh();
+                buf.rehome(dst_info.clone());
+                let mut out = vec![0u8; n];
+                unsafe { C::copy_out(&dst_info, buf.as_ptr(), out.as_mut_ptr(), n) };
+                if out.iter().any(|&b| b != pattern) {
+                    return Err(format!("step {step}: rehome lost contents"));
+                }
+                drop(buf);
+                after(&dst_info).map_err(|e| format!("step {step}: rehome dst: {e}"))?;
+            }
+            _ => {}
+        }
+    }
+    // Drain: every surviving slot must still hold its pattern.
+    for s in slots.drain(..) {
+        verify_slot::<C>(&info, &s).map_err(|e| format!("drain: {e}"))?;
+        unsafe { C::deallocate(&info, s.ptr, s.layout) };
+    }
+    after(&info).map_err(|e| format!("drop-balance: {e}"))
+}
+
+/// The generic harness entry: randomized programs over context `C`.
+fn check_context<C: MemoryContext>(
+    name: &str,
+    fresh: impl Fn() -> C::Info,
+    after: impl Fn(&C::Info) -> Result<(), String>,
+) {
+    Cases::new(24).shrinkable(name, 48, |program| run_program::<C>(program, &fresh, &after));
+    typed_vec_exercise::<C>(&fresh);
+}
+
+/// Deterministic typed-vector exercise: the container stack over `C`
+/// (push/pop, zero-fill resize, insert/erase shifts, shrink).
+fn typed_vec_exercise<C: MemoryContext>(fresh: &impl Fn() -> C::Info) {
+    let mut v = ContextAwareVec::<u32, C>::new_in(fresh());
+    for i in 0..500u32 {
+        v.push(i);
+    }
+    assert_eq!(v.len(), 500);
+    assert_eq!(v[499], 499);
+    v.resize_zeroed(600);
+    assert_eq!(v[550], 0);
+    v.insert_zeroed(10, 3);
+    assert_eq!(v[9], 9);
+    assert_eq!(v[10], 0);
+    assert_eq!(v[13], 10);
+    v.erase(10, 3);
+    assert_eq!(v[10], 10);
+    assert_eq!(v.pop(), Some(0));
+    v.shrink_to_fit();
+    assert_eq!(v.len(), 599);
+    assert_eq!(v[0], 0);
+    assert_eq!(v[42], 42);
+}
+
+fn ok<I>(_: &I) -> Result<(), String> {
+    Ok(())
+}
+
+#[test]
+fn host_conforms() {
+    check_context::<HostContext>("conformance-host", || (), ok);
+}
+
+#[test]
+fn aligned_conforms() {
+    check_context::<AlignedContext<64>>("conformance-aligned", || (), ok);
+}
+
+#[test]
+fn counting_conforms() {
+    check_context::<CountingContext>("conformance-counting", CountingInfo::default, |info| {
+        if info.0.live_allocs() != 0 {
+            return Err(format!("live allocs {} != 0", info.0.live_allocs()));
+        }
+        if info.0.live_bytes() != 0 {
+            return Err(format!("live bytes {} != 0", info.0.live_bytes()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_conforms() {
+    check_context::<ArenaContext>("conformance-arena", ArenaInfo::default, |info| {
+        if info.0.live_bytes() != 0 {
+            return Err(format!("arena live bytes {} != 0", info.0.live_bytes()));
+        }
+        if !info.0.reset() {
+            return Err("balanced arena refused to reset".into());
+        }
+        if info.0.capacity() != 0 {
+            return Err(format!("capacity {} after reset", info.0.capacity()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn staging_conforms() {
+    check_context::<StagingContext>("conformance-staging", StagingInfo::default, ok);
+}
+
+#[test]
+fn pool_conforms() {
+    check_context::<PoolCtx>("conformance-pool", PoolInfo::default, |info| {
+        let s = info.0.stats();
+        if s.outstanding != 0 {
+            return Err(format!("{} blocks still outstanding", s.outstanding));
+        }
+        if s.returns != s.hits + s.misses {
+            return Err(format!(
+                "checkout/return imbalance: {} + {} taken, {} returned",
+                s.hits, s.misses, s.returns
+            ));
+        }
+        // Parked blocks are the only live inner allocations: every
+        // distinct block came from one miss, minus what trimming freed.
+        let inner = info.0.inner();
+        let parked = s.misses - s.trims;
+        if inner.0.live_allocs() != parked as isize {
+            return Err(format!(
+                "inner live allocs {} != parked {parked}",
+                inner.0.live_allocs()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The pool must actually recycle under the harness workload: replaying
+/// one program against one shared pool twice serves the second pass
+/// largely from the free lists.
+#[test]
+fn pool_recycles_across_program_replays() {
+    let info = PoolInfo::<CountingContext>::default();
+    let program: Vec<u64> = (0..40u64)
+        .map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(11))
+        .collect();
+    let fresh = || info.clone();
+    run_program::<PoolCtx>(&program, &fresh, &ok).unwrap();
+    let warm = info.0.stats();
+    run_program::<PoolCtx>(&program, &fresh, &ok).unwrap();
+    let replay = info.0.stats();
+    assert_eq!(replay.misses, warm.misses, "identical replay must be all hits");
+    assert!(replay.hits > warm.hits);
+}

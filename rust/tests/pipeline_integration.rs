@@ -1,12 +1,72 @@
 //! Coordinator integration tests: mixed routing, backpressure, scale,
-//! and cross-path physics consistency.
+//! cross-path physics consistency, and the steady-state zero-alloc
+//! invariant of the pooled staging subsystem.
 
-use marionette::coordinator::{run_pipeline, PipelineConfig, Route, RoutePolicy};
+use marionette::coordinator::{run_pipeline, PipelineConfig, Route, RoutePolicy, StagePool};
 use marionette::edm::generator::EventConfig;
 use marionette::runtime::Engine;
 
 fn have_artifacts() -> bool {
     Engine::load_default().is_ok()
+}
+
+/// The PR's acceptance invariant: after a warmup batch, processing 100+
+/// further events draws every staging destination warm from the pool —
+/// zero pool misses at both levels and no net allocation growth on the
+/// pool's counting heap (`CountingStats::live_allocs`).
+#[test]
+fn steady_state_zero_alloc_after_warmup() {
+    // A private pool: isolated from every other test's pipeline runs.
+    let pool = StagePool::new();
+    let mk = |n: usize| {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 3), n);
+        cfg.device = false;
+        cfg.policy = RoutePolicy::HostOnly;
+        // One worker -> one pooled collection sees the whole stream, so
+        // warmup deterministically covers every capacity class the
+        // measured run needs.
+        cfg.host_workers = 1;
+        cfg.seed = 20260730;
+        cfg.stage_pool = Some(pool.clone());
+        cfg
+    };
+
+    // Warmup: same seed and config as the measured run, so capacities
+    // grow to exactly the workload's shape.
+    run_pipeline(&mk(120)).unwrap();
+    let warm_bytes = pool.byte_stats();
+    let warm_cols = pool.collection_stats();
+    let warm_live = pool.live_allocs();
+    assert!(warm_bytes.misses > 0, "warmup must populate the pool");
+
+    let rep = run_pipeline(&mk(120)).unwrap();
+    assert_eq!(rep.results.len(), 120);
+
+    let bytes = pool.byte_stats();
+    let cols = pool.collection_stats();
+    // Zero pool misses after warmup, at both levels...
+    assert_eq!(
+        cols.misses, warm_cols.misses,
+        "steady state built fresh staging collections"
+    );
+    assert_eq!(bytes.misses, warm_bytes.misses, "steady state missed the byte pool");
+    // ...every event was served by a warm checkout...
+    assert!(
+        cols.hits >= warm_cols.hits + 120,
+        "expected >= 120 warm checkouts, got {} -> {}",
+        warm_cols.hits,
+        cols.hits
+    );
+    // ...and the counting heap saw no net allocation growth.
+    assert_eq!(pool.live_allocs(), warm_live, "net allocations in steady state");
+    // Nothing is checked out after shutdown beyond what idle warm
+    // collections legitimately hold.
+    assert_eq!(bytes.outstanding, warm_bytes.outstanding);
+    // The report surfaces the same pool counters.
+    assert_eq!(rep.metrics.pool_misses, bytes.misses);
+    assert_eq!(rep.metrics.stage_misses, cols.misses);
+    assert_eq!(rep.metrics.pool_live_allocs, pool.live_allocs() as i64);
+    assert!(rep.report().contains("pool: stage"));
 }
 
 #[test]

@@ -19,14 +19,19 @@ use std::sync::Arc;
 use marionette::marionette::collection::RawCollection;
 use marionette::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
 use marionette::marionette::memory::{
-    AlignedContext, ArenaContext, CountingContext, HostContext, MemoryContext,
-    StagingContext,
+    AlignedContext, ArenaContext, CountingContext, HostContext, MemoryContext, PoolContext,
+    PoolInfo, StagingContext,
 };
 use marionette::marionette::schema::Schema;
-use marionette::marionette::transfer::{copy_collection, plan_for, TransferPriority};
+use marionette::marionette::transfer::{
+    copy_collection, copy_collection_stats, plan_for, TransferPriority,
+};
 
 /// The blocked layout with its context still open (macro-friendly).
 type AoSoA4<C> = AoSoA<4, C>;
+
+/// The pooled context rows are exercised under.
+type PoolHost = PoolContext<HostContext>;
 
 /// Field-lane count of the test schema: e + t + sig[2 lanes] +
 /// cells prefix + cells values + ev = 7.
@@ -176,6 +181,83 @@ fn matrix_from_aosoa() {
     // Same block size both sides: byte-identical blobs, one block copy
     // per tag.
     with_ctx_pairs!(&s, AoSoA4, AoSoA4, TransferPriority::Plane, TAGS);
+}
+
+/// Pool-backed rows: [`PoolHost`] as the source context across every
+/// destination context, and as the destination across every source
+/// context. Rung selection and coalesced-op counts are properties of
+/// the *layout* pair — pooling the context must not change them.
+macro_rules! pool_rows {
+    ($s:expr, $L1:ident, $L2:ident, $prio:expr, $ops:expr) => {
+        with_dst_ctx!($s, $L1, PoolHost, $L2, $prio, $ops);
+        combo!($s, $L1, HostContext, $L2, PoolHost, $prio, $ops);
+        combo!($s, $L1, AlignedContext<64>, $L2, PoolHost, $prio, $ops);
+        combo!($s, $L1, ArenaContext, $L2, PoolHost, $prio, $ops);
+        combo!($s, $L1, CountingContext, $L2, PoolHost, $prio, $ops);
+        combo!($s, $L1, StagingContext, $L2, PoolHost, $prio, $ops);
+        combo!($s, $L1, PoolHost, $L2, PoolHost, $prio, $ops);
+    };
+}
+
+#[test]
+fn matrix_pool_rows() {
+    let s = schema();
+    pool_rows!(&s, SoAVec, SoAVec, TransferPriority::Plane, FIELD_LANES);
+    pool_rows!(&s, SoAVec, AoS, TransferPriority::Strided, FIELD_LANES);
+    pool_rows!(&s, AoS, SoAVec, TransferPriority::Strided, FIELD_LANES);
+    pool_rows!(&s, AoS, AoS, TransferPriority::Plane, TAGS);
+    pool_rows!(&s, AoSoA4, AoSoA4, TransferPriority::Plane, TAGS);
+    pool_rows!(&s, SoAVec, AoSoA4, TransferPriority::Elementwise, FIELD_LANES);
+    pool_rows!(&s, SoABlob, SoABlob, TransferPriority::Plane, FIELD_LANES);
+}
+
+/// The stale-capacity reuse hazard in isolation: a destination built
+/// entirely from *recycled* blocks (same pool, second build replays the
+/// first build's growth ladder off the free lists) must still select
+/// the coalesced rung, issue the same op count, and round-trip — and a
+/// smaller re-execute into its now-oversized storage must not leak
+/// stale elements.
+#[test]
+fn recycled_destination_with_stale_capacity_roundtrips() {
+    let s = schema();
+    let info = PoolInfo::<HostContext>::default();
+    let src = build_src::<AoS<HostContext>>(&s);
+
+    // First build: populates the pool's size classes, then returns every
+    // block on drop.
+    {
+        let mut dst =
+            RawCollection::<AoS<PoolHost>>::new_in(s.clone(), info.clone());
+        copy_collection(&src, &mut dst);
+        check_equal(&src, &dst);
+    }
+    let warmed = info.0.stats();
+    assert!(warmed.misses > 0);
+    assert_eq!(warmed.outstanding, 0, "drop must check every block back in");
+
+    // Second build: identical growth ladder, now running on recycled
+    // blocks only — the coalesced plan and its op count are unchanged.
+    let mut dst = RawCollection::<AoS<PoolHost>>::new_in(s.clone(), info.clone());
+    let stats = copy_collection_stats(&src, &mut dst);
+    assert_eq!(stats.priority, TransferPriority::Plane);
+    assert_eq!(stats.ops, TAGS);
+    check_equal(&src, &dst);
+    let recycled = info.0.stats();
+    assert_eq!(recycled.misses, warmed.misses, "recycled build must not allocate");
+    assert!(recycled.hits > warmed.hits);
+
+    // Shrink the source and re-execute into the oversized recycled
+    // destination: lengths, prefix sums and values must all track the
+    // small source (stale-capacity bytes stay invisible).
+    let mut small = RawCollection::<AoS<HostContext>>::new(s.clone());
+    small.resize(2);
+    let m_e = s.meta(s.field_by_name("e").unwrap());
+    small.set::<f32>(m_e, 0, 41.5);
+    small.set::<f32>(m_e, 1, -7.25);
+    copy_collection(&small, &mut dst);
+    check_equal(&small, &dst);
+    assert_eq!(dst.len(), 2);
+    assert_eq!(dst.values_len(0), 0);
 }
 
 /// The coalescing claim in isolation: same-layout blob pairs use fewer
