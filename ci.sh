@@ -22,6 +22,13 @@ cargo test -q --test memory_conformance
 cargo test -q --test transfer_matrix
 cargo test -q --test pipeline_integration
 
+echo "== public-API smoke: quickstart example + doc tests =="
+# The redesigned interface surface (fluent builder, borrowed views,
+# conversion sugar) is exercised end-to-end by the quickstart example
+# and by the runnable doc examples on every run.
+cargo run --release --example quickstart
+cargo test -q --doc
+
 if [[ "${MARIONETTE_STRESS:-0}" == "1" ]]; then
     echo "== stress: thread-pool + memory-pool contention (--ignored) =="
     cargo test -q --release thread_and_memory_pool_contention_stress -- --ignored

@@ -9,6 +9,7 @@
 //!
 //!     cargo run --release --example atlas_pipeline -- [events] [grid]
 
+use marionette::coordinator::pipeline::{process_device, process_host};
 use marionette::coordinator::{run_pipeline, PipelineConfig, Route, RoutePolicy};
 use marionette::edm::generator::{EventConfig, EventGenerator};
 use marionette::runtime::{client, Engine};
@@ -69,8 +70,8 @@ fn main() -> anyhow::Result<()> {
         let mut checked = 0;
         for _ in 0..events.min(4) {
             let ev = gen.generate();
-            let (hn, he) = marionette::coordinator::pipeline::process_host(&ev);
-            let (dn, de, _) = marionette::coordinator::pipeline::process_device(&eng, &ev)?;
+            let (hn, he) = process_host(&ev);
+            let (dn, de, _) = process_device(&eng, &ev)?;
             assert_eq!(hn, dn, "particle count mismatch on event {}", ev.event_id);
             let rel = (he - de).abs() / he.abs().max(1.0);
             assert!(rel < 1e-3, "energy mismatch {rel} on event {}", ev.event_id);

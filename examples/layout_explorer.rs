@@ -13,7 +13,7 @@ use std::time::Duration;
 use marionette::bench_support::Harness;
 use marionette::edm::generator::{EventConfig, EventGenerator};
 use marionette::edm::{calib, reco};
-use marionette::marionette::layout::{AoS, AoSoA, SoABlob, SoAVec};
+use marionette::prelude::{AoS, AoSoA, SoABlob, SoAVec};
 
 fn main() -> anyhow::Result<()> {
     let grid: usize = std::env::args()

@@ -1,19 +1,23 @@
-//! Quickstart: declare a collection, use every property kind, switch
-//! layouts, transfer between memory contexts.
+//! Quickstart: declare a collection, build it fluently, use every
+//! property kind, switch layouts with the conversion sugar, and attach
+//! borrowed typed views to stores you don't own.
 //!
 //!     cargo run --release --example quickstart
 
-use marionette::marionette::layout::{AoS, AoSoA, SoAVec};
-use marionette::marionette::memory::{StagingContext, StagingInfo};
 use marionette::marionette_collection;
+use marionette::prelude::{
+    AoS, AoSoA, CountingContext, CountingInfo, SlicePlanes, SoAVec, StagingContext, StagingInfo,
+};
 
 // One declaration produces the typed collection, object proxies, owned
-// objects, sub-group views and the compile-time property metadata
-// (the analogue of the paper's MARIONETTE_DECLARE_* macros).
+// objects, sub-group views, the borrowed source-erased views and the
+// compile-time property metadata (the analogue of the paper's
+// MARIONETTE_DECLARE_* macros).
 marionette_collection! {
     /// A toy track collection demonstrating every property kind.
     pub collection Tracks, object Track, record TrackRecord,
         columns TrackColumns, refs TrackRef / TrackMut,
+        views TracksView / TracksViewMut,
         props TrackProps, schema "track" {
         per_item pt / set_pt / PT: f32;
         per_item charge / set_charge / CHARGE: i8;
@@ -28,8 +32,8 @@ marionette_collection! {
 }
 
 fn main() {
-    // --- build a collection in the default layout (SoA vectors) --------
-    let mut tracks = Tracks::<SoAVec>::new();
+    // --- fluent build: layout, context and capacity in one chain -------
+    let mut tracks = Tracks::build().capacity(8).finish(); // SoAVec<HostContext>
     tracks.set_run_number(42);
 
     for i in 0..5 {
@@ -65,22 +69,81 @@ fn main() {
     m.fit().set_chi2(0.5);
     assert_eq!(tracks.pt(0), 99.0);
 
-    // --- same interface, different layout: AoS records -----------------
-    let mut aos = Tracks::<AoS>::new();
-    aos.transfer_from(&tracks);
+    // --- borrowed typed views: the interface detached from ownership ---
+    // `view()` is the owned special case; `TracksView::attach` takes ANY
+    // schema-matching source (owned collection, pooled stage, slices).
+    let v = tracks.view();
+    let mean_pt: f32 = (0..v.len()).map(|i| v.pt(i)).sum::<f32>() / v.len() as f32;
+    println!("view over owned store: mean pt = {mean_pt:.1}");
+    assert_eq!(v.hits(4).to_vec(), vec![0, 1, 2, 3, 4]);
+
+    // A source the collection never owned: plain slices bound into a
+    // schema-shaped store (this is how downloaded device planes attach).
+    let pt = [1.0f32, 2.0];
+    let charge = [1i8, -1];
+    let chi2 = [0.1f32, 0.2];
+    let ndf = [3i32, 4];
+    let cov0 = [9.0f32, 9.0];
+    let cov1 = [8.0f32, 8.0];
+    let cov2 = [7.0f32, 7.0];
+    let prefix = [0u32, 2, 3];
+    let hit_vals = [10u32, 11, 12];
+    let planes = SlicePlanes::new(TrackProps::schema(), 2)
+        .bind("pt", &pt)
+        .unwrap()
+        .bind("charge", &charge)
+        .unwrap()
+        .bind("chi2", &chi2)
+        .unwrap()
+        .bind("ndf", &ndf)
+        .unwrap()
+        .bind_lane("cov_diag", 0, &cov0)
+        .unwrap()
+        .bind_lane("cov_diag", 1, &cov1)
+        .unwrap()
+        .bind_lane("cov_diag", 2, &cov2)
+        .unwrap()
+        .bind("hits__prefix", &prefix)
+        .unwrap()
+        .bind("hits", &hit_vals)
+        .unwrap()
+        .set_global("run_number", 7u64)
+        .unwrap();
+    let external = TracksView::attach(&planes).expect("schema-checked attach");
+    println!(
+        "view over borrowed slices: run {} track0 hits {:?}",
+        external.run_number(),
+        external.hits(0).to_vec(),
+    );
+    assert_eq!(external.hits(0).to_vec(), vec![10, 11]);
+
+    // --- conversion sugar: same interface, different layout ------------
+    let aos = tracks.convert_to::<AoS>();
     assert_eq!(aos.pt(0), 99.0);
     assert_eq!(aos.hits(4).to_vec(), vec![0, 1, 2, 3, 4]);
-    println!("AoS copy agrees; layout = {}", aos.layout_name());
+    println!("convert_to agrees; layout = {}", aos.layout_name());
 
-    // --- blocked AoSoA, then back -- transfers compose ------------------
-    let mut blocked = Tracks::<AoSoA<8>>::new();
-    let rung = blocked.transfer_from(&aos);
-    println!("AoS -> AoSoA used the {rung:?} transfer rung");
+    // Builder with an explicit layout + context, then staged refills
+    // through the cached transfer plan.
+    let counting = CountingInfo::default();
+    let mut blocked = Tracks::build()
+        .layout::<AoSoA<8, CountingContext>>()
+        .context(counting)
+        .capacity(tracks.len())
+        .finish();
+    let stats = aos.stage_into(&mut blocked);
+    println!(
+        "AoS -> AoSoA staged {} bytes in {} ops via the {:?} rung",
+        stats.bytes, stats.ops, stats.priority
+    );
 
     // --- a different *memory context*: staging (DMA-accounted) ----------
     let staging_info = StagingInfo::default();
-    let mut staged = Tracks::<SoAVec<StagingContext>>::new_in(staging_info.clone());
-    staged.transfer_from(&blocked);
+    let mut staged = Tracks::build()
+        .layout::<SoAVec<StagingContext>>()
+        .context(staging_info.clone())
+        .finish();
+    blocked.stage_into(&mut staged);
     println!(
         "upload to staging: {} H2D bytes in {} copies",
         staging_info

@@ -9,11 +9,10 @@ use std::sync::atomic::Ordering;
 use marionette::edm::generator::{EventConfig, EventGenerator};
 use marionette::edm::handwritten::HwSensorsAoS;
 use marionette::edm::SensorCollection;
-use marionette::marionette::layout::{AoS, SoAVec};
-use marionette::marionette::memory::{
-    ArenaInfo, CountingContext, CountingInfo, StagingContext, StagingInfo,
+use marionette::prelude::{
+    AoS, AoSoA, ArenaContext, ArenaInfo, CountingContext, CountingInfo, SoAVec, StagingContext,
+    StagingInfo, TransferPriority,
 };
-use marionette::marionette::transfer::TransferPriority;
 
 /// The paper's `TransferSpecification` extension point: a user-written
 /// fast path from a *pre-existing external type* (the handwritten AoS)
@@ -44,8 +43,10 @@ fn main() {
 
     // --- counting context: watch what a collection does ----------------
     let count_info = CountingInfo::default();
-    let mut counted =
-        SensorCollection::<SoAVec<CountingContext>>::new_in(count_info.clone());
+    let mut counted = SensorCollection::build()
+        .layout::<SoAVec<CountingContext>>()
+        .context(count_info.clone())
+        .finish();
     ev.fill_collection(&mut counted);
     println!(
         "counting ctx: {} allocations, {} bytes",
@@ -64,28 +65,33 @@ fn main() {
 
     // --- arena context: bump allocation for per-event collections ------
     let arena = ArenaInfo::default();
-    let mut scratch = SensorCollection::<AoS<
-        marionette::marionette::memory::ArenaContext,
-    >>::new_in(arena.clone());
+    let mut scratch = SensorCollection::build()
+        .layout::<AoS<ArenaContext>>()
+        .context(arena.clone())
+        .finish();
     ev.fill_collection(&mut scratch);
     println!("arena ctx: {} bytes parked after fill", arena.0.capacity());
 
     // --- staging context: the H2D boundary with DMA accounting ---------
     let staging = StagingInfo::default();
-    let mut staged = SensorCollection::<SoAVec<StagingContext>>::new_in(staging.clone());
-    let rung = staged.transfer_from(&counted);
+    let mut staged = SensorCollection::build()
+        .layout::<SoAVec<StagingContext>>()
+        .context(staging.clone())
+        .finish();
+    let up = counted.stage_into(&mut staged);
     println!(
-        "host->staging transfer used rung {rung:?}: {} H2D bytes, {} calls",
+        "host->staging transfer used rung {:?}: {} H2D bytes, {} calls",
+        up.priority,
         staging.counters.h2d_bytes.load(Ordering::Relaxed),
         staging.counters.h2d_calls.load(Ordering::Relaxed)
     );
 
     // --- layout ladder: dense, strided and element-wise rungs ----------
     let mut aos = SensorCollection::<AoS>::new();
-    let rung = aos.transfer_from(&counted);
+    let rung = counted.stage_into(&mut aos).priority;
     println!("soa-vec -> aos rung: {rung:?}");
-    let mut blocked = SensorCollection::<marionette::marionette::layout::AoSoA<8>>::new();
-    let rung = blocked.transfer_from(&aos);
+    let mut blocked = SensorCollection::<AoSoA<8>>::new();
+    let rung = aos.stage_into(&mut blocked).priority;
     println!("aos -> aosoa rung: {rung:?}");
 
     // --- specialized transfer from an external type ---------------------
@@ -97,11 +103,13 @@ fn main() {
     println!("handwritten-AoS -> marionette via {rung:?}");
     assert_eq!(from_hw.energy(100), hw.data[100].energy);
 
-    // Everything agrees at the end.
+    // Everything agrees at the end — checked through the one borrowed
+    // view interface rather than four accessor paths.
+    let (vc, va, vb, vs) = (counted.view(), aos.view(), blocked.view(), staged.view());
     for i in (0..ev.num_sensors()).step_by(997) {
-        assert_eq!(counted.counts(i), aos.counts(i));
-        assert_eq!(aos.counts(i), blocked.counts(i));
-        assert_eq!(staged.counts(i), blocked.counts(i));
+        assert_eq!(vc.counts(i), va.counts(i));
+        assert_eq!(va.counts(i), vb.counts(i));
+        assert_eq!(vs.counts(i), vb.counts(i));
     }
     println!("transfer_tour OK");
 }

@@ -3,11 +3,12 @@
 //! performance"; the PTX-identity claim, host edition).
 //!
 //! Compares per-element read and calibrate times between handwritten
-//! structures and Marionette collections for every layout, and asserts
-//! the matched pairs (hw-aos vs m-aos, hw-soa vs m-soavec) are within
-//! tolerance. The device-side twin of the claim is structural: both
-//! "handwritten" and "Marionette" device paths execute the *same* AOT
-//! artifact (identical HLO, identical SHA-256 in the manifest).
+//! structures and Marionette collections for every layout — including
+//! the borrowed typed views (`m-*-view` series), which must cost the
+//! same as the owned accessors — and asserts the matched pairs are
+//! within tolerance. The device-side twin of the claim is structural:
+//! both "handwritten" and "Marionette" device paths execute the *same*
+//! AOT artifact (identical HLO, identical SHA-256 in the manifest).
 
 use marionette::bench_support::figures::zero_cost;
 use marionette::bench_support::{rel_diff, Harness};
@@ -32,7 +33,14 @@ fn main() -> anyhow::Result<()> {
             .points
             .clone()
     };
-    for (hw, m) in [("hw-aos", "m-aos"), ("hw-soa", "m-soavec")] {
+    for (hw, m) in [
+        ("hw-aos", "m-aos"),
+        ("hw-soa", "m-soavec"),
+        // Borrowed views vs the owned accessor baselines (the
+        // attach-once, raw-offset-reads claim of the interface layer).
+        ("m-aos-accessor", "m-aos-view"),
+        ("m-soavec-accessor", "m-soavec-view"),
+    ] {
         let (hws, ms) = (find(hw), find(m));
         for ((_, a), (op, b)) in hws.iter().zip(ms.iter()) {
             let d = rel_diff(*a, *b);

@@ -317,6 +317,61 @@ pub fn zero_cost(grid: usize, harness: Harness) -> Result<Table> {
         }};
     }
 
+    // Per-element accessor series: the dense-view-free baseline that
+    // quantifies the abstraction penalty the record/column fast paths
+    // avoid (EXPERIMENTS.md §Perf-1) — and the apples-to-apples
+    // baseline the borrowed-view series are pinned against.
+    macro_rules! accessor_series {
+        ($label:expr, $layout:ty) => {{
+            let mut s = Series::new($label);
+            let mut col = ev.to_collection::<$layout>();
+            calib::calibrate_collection(&mut col);
+            s.push(
+                0.0,
+                harness.measure(|| {
+                    let mut acc = 0f32;
+                    for i in 0..col.len() {
+                        acc += col.energy(i);
+                    }
+                    std::hint::black_box(acc);
+                }),
+            );
+            s.push(
+                1.0,
+                harness.measure(|| calib::calibrate_collection_accessors(&mut col)),
+            );
+            s
+        }};
+    }
+
+    // Borrowed-view series: the same loops through the source-erased
+    // typed view (attach once per run — dense spans resolved there —
+    // then raw-offset reads/writes). The guard test pins these to
+    // owned-accessor cost.
+    macro_rules! view_series {
+        ($label:expr, $layout:ty) => {{
+            let mut s = Series::new($label);
+            let mut col = ev.to_collection::<$layout>();
+            calib::calibrate_collection(&mut col);
+            s.push(
+                0.0,
+                harness.measure(|| {
+                    let v = col.view();
+                    let mut acc = 0f32;
+                    for i in 0..v.len() {
+                        acc += v.energy(i);
+                    }
+                    std::hint::black_box(acc);
+                }),
+            );
+            s.push(
+                1.0,
+                harness.measure(|| calib::calibrate_view(&mut col.view_mut())),
+            );
+            s
+        }};
+    }
+
     // Handwritten AoS.
     let mut s = Series::new("hw-aos");
     let mut hw_aos = HwSensorsAoS::default();
@@ -336,6 +391,8 @@ pub fn zero_cost(grid: usize, harness: Harness) -> Result<Table> {
     table.push(s);
 
     table.push(marionette_series!("m-aos", AoS));
+    table.push(accessor_series!("m-aos-accessor", AoS));
+    table.push(view_series!("m-aos-view", AoS));
 
     // Handwritten SoA.
     let mut s = Series::new("hw-soa");
@@ -356,32 +413,10 @@ pub fn zero_cost(grid: usize, harness: Harness) -> Result<Table> {
     table.push(s);
 
     table.push(marionette_series!("m-soavec", SoAVec));
+    table.push(accessor_series!("m-soavec-accessor", SoAVec));
+    table.push(view_series!("m-soavec-view", SoAVec));
     table.push(marionette_series!("m-soablob", SoABlob));
     table.push(marionette_series!("m-aosoa8", AoSoA<8>));
-
-    // The per-element accessor fallback, benchmarked separately: this
-    // quantifies the abstraction penalty the column/record views avoid
-    // (EXPERIMENTS.md §Perf-1).
-    {
-        let mut s = Series::new("m-soavec-accessor");
-        let mut col = ev.to_collection::<SoAVec>();
-        calib::calibrate_collection(&mut col);
-        s.push(
-            0.0,
-            harness.measure(|| {
-                let mut acc = 0f32;
-                for i in 0..col.len() {
-                    acc += col.energy(i);
-                }
-                std::hint::black_box(acc);
-            }),
-        );
-        s.push(
-            1.0,
-            harness.measure(|| calib::calibrate_collection_accessors(&mut col)),
-        );
-        table.push(s);
-    }
 
     Ok(table)
 }
@@ -612,7 +647,10 @@ mod tests {
     fn quick_zero_cost_within_bounds() {
         let h = Harness { runs: 5, keep: 2, warmup: 1 };
         let t = zero_cost(64, h).unwrap();
-        assert_eq!(t.series.len(), 7);
+        assert_eq!(t.series.len(), 10);
+        assert!(t.series.iter().any(|s| s.label == "m-aos-view"));
+        assert!(t.series.iter().any(|s| s.label == "m-aos-accessor"));
+        assert!(t.series.iter().any(|s| s.label == "m-soavec-view"));
         // Each series has both ops measured.
         for s in &t.series {
             assert_eq!(s.points.len(), 2);

@@ -15,10 +15,15 @@
 //! * Collector: aggregates per-event results + metrics.
 //!
 //! Transfer strategy is **compiled once**: workers warm the staging
-//! plans at startup and every per-event copy is a plan-cache hit that
-//! executes into a reused destination collection (no re-derivation of
-//! the ladder, no reallocation in steady state). Plan-level byte
-//! counters feed [`metrics`](super::metrics).
+//! plans at startup and every per-event copy goes through the fluent
+//! `stage_into` sugar — a plan-cache hit that executes into a reused
+//! destination collection (no re-derivation of the ladder, no
+//! reallocation in steady state). Plan-level byte counters feed
+//! [`metrics`](super::metrics). The device path reads its downloaded
+//! planes through the borrowed typed `SensorView`
+//! (`runtime::devmem::downloaded_planes` + `particles_from_download`;
+//! DESIGN.md §6), the same interface description the host path's owned
+//! collections use.
 //!
 //! Staging memory is **pooled** (DESIGN.md §5): workers draw their
 //! per-event staging destination from a shared [`StagePool`] — an
@@ -43,7 +48,7 @@ use anyhow::{Context, Result};
 
 use crate::edm::generator::{EventGenerator, RawEvent};
 use crate::edm::particle::{ParticleCollection, ParticleProps};
-use crate::edm::sensor::{SensorCollection, SensorProps};
+use crate::edm::sensor::{SensorCollection, SensorProps, SensorView};
 use crate::edm::{calib, reco};
 use crate::marionette::layout::{AoS, Layout, SoAVec};
 use crate::marionette::memory::{
@@ -133,8 +138,14 @@ impl StagePool {
     pub fn new() -> Arc<StagePool> {
         let bytes = PoolInfo(Pool::<CountingContext>::with_inner(CountingInfo::default()));
         let info = bytes.clone();
-        let collections =
-            ObjectPool::new(move || ParticleCollection::<AoS<StageCtx>>::new_in(info.clone()));
+        // Fluent build of the pooled staging destinations: the AoS
+        // layout over the recycling byte-pool context.
+        let collections = ObjectPool::new(move || {
+            ParticleCollection::build()
+                .layout::<AoS<StageCtx>>()
+                .context(info.clone())
+                .finish()
+        });
         Arc::new(StagePool { bytes, collections })
     }
 
@@ -204,7 +215,7 @@ pub fn process_host_staged<L: Layout>(
     calib::calibrate_collection(&mut col);
     let particles = reco::reconstruct_collection(&col);
     let pc = reco::into_collection::<SoAVec>(ev.event_id, &particles);
-    let stats = staged.transfer_from_stats(&pc);
+    let stats = pc.stage_into(staged);
     let back = reco::fill_back_aos(staged);
     let energy = back.data.iter().map(|p| p.energy as f64).sum();
     (back.data.len(), energy, stats.bytes)
@@ -229,10 +240,14 @@ pub fn process_device_staged<L: Layout>(
     staged: &mut ParticleCollection<L>,
 ) -> Result<(usize, f64, crate::runtime::ExecTiming, usize)> {
     let (s, p, timing) = engine.run_full_event(ev)?;
-    let pc = reco::particles_from_planes::<SoAVec>(
-        ev.rows, ev.cols, ev.event_id, &p.seeds, &p.sums, &s.sig,
-    );
-    let stats = staged.transfer_from_stats(&pc);
+    // The downloaded planes attach the one generated sensor view; the
+    // gather reads grid geometry and significance through it — the same
+    // interface description that serves owned and pooled stores
+    // (DESIGN.md §6).
+    let planes = crate::runtime::downloaded_planes(ev, &s)?;
+    let view = SensorView::attach(&planes)?;
+    let pc = reco::particles_from_download::<SoAVec, _>(&view, &p.seeds, &p.sums);
+    let stats = pc.stage_into(staged);
     let back = reco::fill_back_aos(staged);
     let energy = back.data.iter().map(|p| p.energy as f64).sum();
     Ok((back.data.len(), energy, timing, stats.bytes))
@@ -394,7 +409,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                         // cached host→staging plan reuses the buffer and
                         // books the H2D traffic the upload represents.
                         task.ev.fill_collection(&mut sensors_host);
-                        let up = sensors_staged.transfer_from_stats(&sensors_host);
+                        let up = sensors_host.stage_into(&mut sensors_staged);
                         metrics.planned_transfers.fetch_add(1, Relaxed);
                         metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
                         let mut particles_staged = pool.checkout();

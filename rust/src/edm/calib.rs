@@ -6,11 +6,12 @@
 //! accessors) and over the two handwritten baselines. The zero-cost bench
 //! compares these; the figure benches use them as the CPU series.
 
+use crate::marionette::interface::PlaneSourceMut;
 use crate::marionette::layout::Layout;
 
 use super::constants::NOISE_FLOOR;
 use super::handwritten::{HwSensorsAoS, HwSensorsSoA};
-use super::sensor::SensorCollection;
+use super::sensor::{SensorCollection, SensorViewMut};
 
 #[inline(always)]
 fn kernel(
@@ -84,6 +85,27 @@ pub fn calibrate_collection_accessors<L: Layout>(s: &mut SensorCollection<L>) {
     }
 }
 
+/// Calibrate through a borrowed mutable view — the source-erased twin
+/// of [`calibrate_collection_accessors`]: the same per-element loop,
+/// but runnable against *any* schema-matching mutable store (owned,
+/// pooled, recycled). The zero-cost guard pins this path to
+/// owned-accessor speed (`tests/zero_cost_guard.rs`).
+pub fn calibrate_view<S: PlaneSourceMut>(v: &mut SensorViewMut<'_, S>) {
+    for i in 0..v.len() {
+        let (e, noise, sig) = kernel(
+            v.noisy(i),
+            v.counts(i),
+            v.param_a(i),
+            v.param_b(i),
+            v.noise_a(i),
+            v.noise_b(i),
+        );
+        v.set_energy(i, e);
+        v.set_noise(i, noise);
+        v.set_sig(i, sig);
+    }
+}
+
 /// Calibrate through the object-oriented no-property interface (paper:
 /// `sensor.calibrate_energy()` written against the class API).
 pub fn calibrate_collection_oo<L: Layout>(s: &mut SensorCollection<L>) {
@@ -151,12 +173,18 @@ mod tests {
         let mut col_oo = ev.to_collection::<AoS>();
         calibrate_collection_oo(&mut col_oo);
 
+        let mut col_view = ev.to_collection::<AoS>();
+        calibrate_view(&mut col_view.view_mut());
+
         for i in 0..ev.num_sensors() {
             assert_eq!(aos.data[i].energy, soa.energy[i]);
             assert_eq!(aos.data[i].energy, col.energy(i));
             assert_eq!(aos.data[i].energy, col_oo.energy(i));
+            assert_eq!(aos.data[i].energy, col_view.energy(i));
             assert_eq!(aos.data[i].noise, col.noise(i));
+            assert_eq!(aos.data[i].noise, col_view.noise(i));
             assert_eq!(aos.data[i].sig, col_oo.sig(i));
+            assert_eq!(aos.data[i].sig, col_view.sig(i));
         }
     }
 

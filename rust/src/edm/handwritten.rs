@@ -97,6 +97,66 @@ impl HwSensorsSoA {
     }
 }
 
+// The handwritten baselines implement the reconstruction grid-view
+// trait next to their structs (the Marionette side has exactly one
+// impl — the borrowed `SensorView` — in `reco`).
+
+impl super::reco::SensorGridView for HwSensorsAoS {
+    fn rows(&self) -> usize {
+        self.rows as usize
+    }
+    fn cols(&self) -> usize {
+        self.cols as usize
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.data[i].energy
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.data[i].sig
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.data[i].type_id
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.data[i].noisy != 0
+    }
+    fn event_id(&self) -> u64 {
+        self.event_id
+    }
+}
+
+impl super::reco::SensorGridView for HwSensorsSoA {
+    fn rows(&self) -> usize {
+        self.rows as usize
+    }
+    fn cols(&self) -> usize {
+        self.cols as usize
+    }
+    #[inline(always)]
+    fn energy_at(&self, i: usize) -> f32 {
+        self.energy[i]
+    }
+    #[inline(always)]
+    fn sig_at(&self, i: usize) -> f32 {
+        self.sig[i]
+    }
+    #[inline(always)]
+    fn type_at(&self, i: usize) -> i32 {
+        self.type_id[i]
+    }
+    #[inline(always)]
+    fn noisy_at(&self, i: usize) -> bool {
+        self.noisy[i] != 0
+    }
+    fn event_id(&self) -> u64 {
+        self.event_id
+    }
+}
+
 /// Handwritten particle record (paper listing 2).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct HwParticle {

@@ -36,5 +36,10 @@ pub mod sensor;
 
 pub use constants::*;
 pub use generator::{EventConfig, EventGenerator, RawEvent};
-pub use particle::{Particle, ParticleCollection, ParticleProps, ParticleRecord};
-pub use sensor::{Sensor, SensorCollection, SensorColumns, SensorProps, SensorRecord};
+pub use particle::{
+    Particle, ParticleCollection, ParticleProps, ParticleRecord, ParticleView, ParticleViewMut,
+};
+pub use sensor::{
+    Sensor, SensorCollection, SensorColumns, SensorProps, SensorRecord, SensorView,
+    SensorViewMut,
+};

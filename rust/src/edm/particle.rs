@@ -16,6 +16,7 @@ marionette_collection! {
     /// Reconstructed particles of one event.
     pub collection ParticleCollection, object Particle, record ParticleRecord,
         columns ParticleColumns, refs ParticleRef / ParticleMut,
+        views ParticleView / ParticleViewMut,
         props ParticleProps, schema "particle" {
         per_item energy / set_energy / ENERGY: f32;
         per_item x / set_x / X: f32;

@@ -8,21 +8,26 @@
 //! [`CONTRIB_SIGNIFICANCE`], collected row-major.
 //!
 //! The algorithm is written once over the [`SensorGridView`] trait and
-//! monomorphised for the Marionette collection and both handwritten
-//! baselines — the paper's setup, where the same algorithmic code runs
-//! against either data structure. [`particles_from_planes`] is the
-//! device-path twin: it gathers the same quantities from the AOT
-//! executable's seed mask + window-sum planes.
+//! monomorphised for every store — the paper's setup, where the same
+//! algorithmic code runs against either data structure. On the
+//! Marionette side there is exactly **one** impl: the borrowed
+//! [`SensorView`] over any [`PlaneSource`], which covers the owned
+//! collection of every layout, pool-recycled staging collections, and
+//! schema-shaped slice stores such as downloaded device planes
+//! ([`SlicePlanes`](crate::marionette::interface::SlicePlanes)). The
+//! handwritten baselines implement the trait next to their structs in
+//! [`handwritten`](super::handwritten). [`particles_from_download`] is
+//! the device-path twin: it gathers the same quantities from the AOT
+//! executable's seed mask + window-sum planes through a sensor view.
 
 use crate::marionette::collection::InfoOf;
+use crate::marionette::interface::PlaneSource;
 use crate::marionette::layout::Layout;
 
 use super::constants::*;
-use super::handwritten::{
-    HwParticle, HwParticlesAoS, HwParticlesSoA, HwSensorsAoS, HwSensorsSoA,
-};
+use super::handwritten::{HwParticle, HwParticlesAoS, HwParticlesSoA, HwSensorsSoA};
 use super::particle::{Particle, ParticleCollection};
-use super::sensor::SensorCollection;
+use super::sensor::{SensorCollection, SensorView};
 
 /// Read-only grid view: what reconstruction needs from a sensor store.
 pub trait SensorGridView {
@@ -35,87 +40,36 @@ pub trait SensorGridView {
     fn event_id(&self) -> u64;
 }
 
-impl<L: Layout> SensorGridView for SensorCollection<L> {
+/// The one Marionette-side impl: the borrowed typed view over **any**
+/// schema-matching source — owned collections of every layout, pooled
+/// staging collections, downloaded device planes. Accessors are
+/// raw-offset reads resolved at attach; monomorphisation keeps the
+/// stencil loop free of per-element dispatch.
+impl<S: PlaneSource> SensorGridView for SensorView<'_, S> {
     fn rows(&self) -> usize {
-        SensorCollection::rows(self) as usize
+        SensorView::rows(self) as usize
     }
     fn cols(&self) -> usize {
-        SensorCollection::cols(self) as usize
+        SensorView::cols(self) as usize
     }
     #[inline(always)]
     fn energy_at(&self, i: usize) -> f32 {
-        self.energy(i)
+        SensorView::energy(self, i)
     }
     #[inline(always)]
     fn sig_at(&self, i: usize) -> f32 {
-        self.sig(i)
+        SensorView::sig(self, i)
     }
     #[inline(always)]
     fn type_at(&self, i: usize) -> i32 {
-        self.type_id(i)
+        SensorView::type_id(self, i)
     }
     #[inline(always)]
     fn noisy_at(&self, i: usize) -> bool {
-        self.noisy(i) != 0
+        SensorView::noisy(self, i) != 0
     }
     fn event_id(&self) -> u64 {
-        SensorCollection::event_id(self)
-    }
-}
-
-impl SensorGridView for HwSensorsAoS {
-    fn rows(&self) -> usize {
-        self.rows as usize
-    }
-    fn cols(&self) -> usize {
-        self.cols as usize
-    }
-    #[inline(always)]
-    fn energy_at(&self, i: usize) -> f32 {
-        self.data[i].energy
-    }
-    #[inline(always)]
-    fn sig_at(&self, i: usize) -> f32 {
-        self.data[i].sig
-    }
-    #[inline(always)]
-    fn type_at(&self, i: usize) -> i32 {
-        self.data[i].type_id
-    }
-    #[inline(always)]
-    fn noisy_at(&self, i: usize) -> bool {
-        self.data[i].noisy != 0
-    }
-    fn event_id(&self) -> u64 {
-        self.event_id
-    }
-}
-
-impl SensorGridView for HwSensorsSoA {
-    fn rows(&self) -> usize {
-        self.rows as usize
-    }
-    fn cols(&self) -> usize {
-        self.cols as usize
-    }
-    #[inline(always)]
-    fn energy_at(&self, i: usize) -> f32 {
-        self.energy[i]
-    }
-    #[inline(always)]
-    fn sig_at(&self, i: usize) -> f32 {
-        self.sig[i]
-    }
-    #[inline(always)]
-    fn type_at(&self, i: usize) -> i32 {
-        self.type_id[i]
-    }
-    #[inline(always)]
-    fn noisy_at(&self, i: usize) -> bool {
-        self.noisy[i] != 0
-    }
-    fn event_id(&self) -> u64 {
-        self.event_id
+        SensorView::event_id(self)
     }
 }
 
@@ -195,10 +149,10 @@ fn build_particle<G: SensorGridView>(g: &G, r: usize, c: usize) -> HwParticle {
 
 /// Reconstruct all particles of a calibrated grid (row-major seed order).
 ///
-/// For Marionette collections prefer [`reconstruct_collection`], which
-/// routes the scan through the collection's dense record/column views
-/// (paper listing 3's collection-level accessors) instead of per-element
-/// accessors — same results, handwritten-equal speed (EXPERIMENTS §Perf).
+/// For Marionette collections use [`reconstruct_collection`] (or attach
+/// a [`SensorView`] yourself and pass it here): the view resolves dense
+/// per-item planes once at attach, so the scan runs at dense-slice
+/// speed on regular layouts and owned-accessor speed on irregular ones.
 pub fn reconstruct<G: SensorGridView>(g: &G) -> Vec<HwParticle> {
     let (rows, cols) = (g.rows(), g.cols());
     let mut out = Vec::new();
@@ -212,108 +166,11 @@ pub fn reconstruct<G: SensorGridView>(g: &G) -> Vec<HwParticle> {
     out
 }
 
-/// Dense-slice grid view (SoA layouts via plane slices).
-struct SliceGrid<'a> {
-    rows: usize,
-    cols: usize,
-    event_id: u64,
-    energy: &'a [f32],
-    sig: &'a [f32],
-    types: &'a [i32],
-    noisy: &'a [u8],
-}
-
-impl SensorGridView for SliceGrid<'_> {
-    fn rows(&self) -> usize {
-        self.rows
-    }
-    fn cols(&self) -> usize {
-        self.cols
-    }
-    #[inline(always)]
-    fn energy_at(&self, i: usize) -> f32 {
-        self.energy[i]
-    }
-    #[inline(always)]
-    fn sig_at(&self, i: usize) -> f32 {
-        self.sig[i]
-    }
-    #[inline(always)]
-    fn type_at(&self, i: usize) -> i32 {
-        self.types[i]
-    }
-    #[inline(always)]
-    fn noisy_at(&self, i: usize) -> bool {
-        self.noisy[i] != 0
-    }
-    fn event_id(&self) -> u64 {
-        self.event_id
-    }
-}
-
-/// Dense-record grid view (AoS layouts via the generated record slice).
-struct RecGrid<'a> {
-    rows: usize,
-    cols: usize,
-    event_id: u64,
-    recs: &'a [super::sensor::SensorRecord],
-}
-
-impl SensorGridView for RecGrid<'_> {
-    fn rows(&self) -> usize {
-        self.rows
-    }
-    fn cols(&self) -> usize {
-        self.cols
-    }
-    #[inline(always)]
-    fn energy_at(&self, i: usize) -> f32 {
-        self.recs[i].energy
-    }
-    #[inline(always)]
-    fn sig_at(&self, i: usize) -> f32 {
-        self.recs[i].sig
-    }
-    #[inline(always)]
-    fn type_at(&self, i: usize) -> i32 {
-        self.recs[i].type_id
-    }
-    #[inline(always)]
-    fn noisy_at(&self, i: usize) -> bool {
-        self.recs[i].noisy != 0
-    }
-    fn event_id(&self) -> u64 {
-        self.event_id
-    }
-}
-
-/// Reconstruct a Marionette sensor collection through its densest
-/// available view: records (AoS), plane slices (SoA family), or the
-/// per-element accessors (irregular layouts).
+/// Reconstruct a Marionette sensor collection through its borrowed
+/// typed view (the owned special case of the one view-generic
+/// [`SensorGridView`] impl).
 pub fn reconstruct_collection<L: Layout>(s: &SensorCollection<L>) -> Vec<HwParticle> {
-    use super::sensor::SensorProps as P;
-    let (rows, cols) = (SensorGridView::rows(s), SensorGridView::cols(s));
-    if let Some(recs) = s.records() {
-        return reconstruct(&RecGrid { rows, cols, event_id: s.event_id(), recs });
-    }
-    let raw = s.raw();
-    if let (Some(energy), Some(sig), Some(types), Some(noisy)) = (
-        raw.field_slice::<f32>(P::ENERGY),
-        raw.field_slice::<f32>(P::SIG),
-        raw.field_slice::<i32>(P::TYPE_ID),
-        raw.field_slice::<u8>(P::NOISY),
-    ) {
-        return reconstruct(&SliceGrid {
-            rows,
-            cols,
-            event_id: s.event_id(),
-            energy,
-            sig,
-            types,
-            noisy,
-        });
-    }
-    reconstruct(s)
+    reconstruct(&s.view())
 }
 
 /// Fill reconstruction output into a Marionette particle collection.
@@ -407,10 +264,10 @@ pub fn reconstruct_into_collection<L: Layout>(
 where
     InfoOf<L>: Default,
 {
-    // Reuse the view-selection of `reconstruct_collection`; pushes are
+    // Reuse the view-based scan of `reconstruct_collection`; pushes are
     // O(#particles), far off the critical path of the grid scan.
     let particles = reconstruct_collection(s);
-    into_collection(SensorGridView::event_id(s), &particles)
+    into_collection(s.event_id(), &particles)
 }
 
 /// Final step of Figure 2: fill the pre-existing handwritten AoS from a
@@ -500,17 +357,17 @@ pub fn reconstruct_to_hw_soa(g: &HwSensorsSoA) -> HwParticlesSoA {
     out
 }
 
-/// Device-path gather: build the particle collection from the AOT
-/// executable's outputs (`seeds` mask, `sums` = `[NUM_PLANES][rows*cols]`
-/// window-sum planes) plus the host-resident significance plane for the
-/// jagged contributor lists.
-pub fn particles_from_planes<L: Layout>(
+/// The shared device-path gather: build the particle collection from
+/// the AOT executable's outputs (`seeds` mask, `sums` =
+/// `[NUM_PLANES][rows*cols]` window-sum planes) plus a host-readable
+/// significance lookup for the jagged contributor lists.
+fn particles_from_planes_core<L: Layout>(
     rows: usize,
     cols: usize,
     event_id: u64,
     seeds: &[i32],
     sums: &[f32],
-    sig: &[f32],
+    sig_at: impl Fn(usize) -> f32,
 ) -> ParticleCollection<L>
 where
     InfoOf<L>: Default,
@@ -518,7 +375,6 @@ where
     let n = rows * cols;
     assert_eq!(seeds.len(), n, "seed mask size");
     assert_eq!(sums.len(), NUM_PLANES * n, "sums planes size");
-    assert_eq!(sig.len(), n, "sig plane size");
     let plane = |p: usize, i: usize| sums[p * n + i];
 
     let mut col = ParticleCollection::<L>::new();
@@ -540,7 +396,7 @@ where
             for rr in rlo..rhi {
                 for cc in clo..chi {
                     let j = rr * cols + cc;
-                    if sig[j] > CONTRIB_SIGNIFICANCE {
+                    if sig_at(j) > CONTRIB_SIGNIFICANCE {
                         sensors.push(j as u64);
                     }
                 }
@@ -574,12 +430,55 @@ where
     col
 }
 
+/// Device-path gather over a downloaded sensor **view** (the pipeline's
+/// route: `runtime::devmem::downloaded_planes` assembles the
+/// schema-shaped slice store, the attached [`SensorView`] serves the
+/// significance lookups and the grid geometry).
+pub fn particles_from_download<L: Layout, S: PlaneSource>(
+    g: &SensorView<'_, S>,
+    seeds: &[i32],
+    sums: &[f32],
+) -> ParticleCollection<L>
+where
+    InfoOf<L>: Default,
+{
+    particles_from_planes_core(
+        SensorGridView::rows(g),
+        SensorGridView::cols(g),
+        SensorView::event_id(g),
+        seeds,
+        sums,
+        |i| SensorView::sig(g, i),
+    )
+}
+
+/// Legacy slice-based spelling of the device-path gather. Deprecated:
+/// prefer [`particles_from_download`], which reads geometry and
+/// significance through the one sensor view; this shim remains for
+/// callers that only hold the raw planes.
+pub fn particles_from_planes<L: Layout>(
+    rows: usize,
+    cols: usize,
+    event_id: u64,
+    seeds: &[i32],
+    sums: &[f32],
+    sig: &[f32],
+) -> ParticleCollection<L>
+where
+    InfoOf<L>: Default,
+{
+    assert_eq!(sig.len(), rows * cols, "sig plane size");
+    particles_from_planes_core(rows, cols, event_id, seeds, sums, |i| sig[i])
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::calib;
     use super::super::generator::{EventConfig, EventGenerator};
+    use super::super::handwritten::{HwSensorsAoS, HwSensorsSoA};
     use super::*;
-    use crate::marionette::layout::{AoS, SoAVec};
+    use crate::marionette::interface::SlicePlanes;
+    use crate::marionette::layout::{AoS, AoSoA, SoAVec};
 
     fn calibrated_event(seed: u64) -> (SensorCollection<SoAVec>, HwSensorsAoS, HwSensorsSoA) {
         let ev = EventGenerator::new(EventConfig::grid(48, 48, 5), seed).generate();
@@ -597,7 +496,7 @@ mod tests {
     #[test]
     fn all_views_reconstruct_identically() {
         let (col, aos, soa) = calibrated_event(21);
-        let a = reconstruct(&col);
+        let a = reconstruct(&col.view());
         let b = reconstruct(&aos);
         let c = reconstruct(&soa);
         assert_eq!(a, b);
@@ -605,12 +504,69 @@ mod tests {
         assert!(!a.is_empty(), "expected particles from 5 deposits");
     }
 
+    /// The one view-generic impl serves every Marionette store: owned
+    /// collections of regular and irregular layouts, a pooled staging
+    /// copy, and a slice store standing in for downloaded device planes
+    /// — all reconstruct bit-identically.
+    #[test]
+    fn one_view_impl_covers_owned_pooled_and_download_sources() {
+        use crate::marionette::memory::{HostContext, PoolContext, PoolInfo};
+        let (col, _, soa) = calibrated_event(34);
+        let want = reconstruct_collection(&col);
+        assert!(!want.is_empty());
+
+        // Owned, irregular layout (no dense planes anywhere).
+        let blocked = col.convert_to::<AoSoA<8>>();
+        assert_eq!(reconstruct_collection(&blocked), want);
+
+        // Pool-recycled staging collection.
+        let info = PoolInfo::<HostContext>::default();
+        let mut pooled =
+            SensorCollection::<AoS<PoolContext<HostContext>>>::new_in(info);
+        col.stage_into(&mut pooled);
+        assert_eq!(reconstruct(&pooled.view()), want);
+
+        // Download-shaped source: schema-matching borrowed slices (the
+        // handwritten SoA's columns double as the downloaded planes).
+        let rows = soa.rows;
+        let cols = soa.cols;
+        let planes = SlicePlanes::new(super::super::sensor::SensorProps::schema(), soa.len())
+            .bind("type_id", &soa.type_id)
+            .unwrap()
+            .bind("counts", &soa.counts)
+            .unwrap()
+            .bind("energy", &soa.energy)
+            .unwrap()
+            .bind("noise", &soa.noise)
+            .unwrap()
+            .bind("sig", &soa.sig)
+            .unwrap()
+            .bind("noisy", &soa.noisy)
+            .unwrap()
+            .bind("param_a", &soa.param_a)
+            .unwrap()
+            .bind("param_b", &soa.param_b)
+            .unwrap()
+            .bind("noise_a", &soa.noise_a)
+            .unwrap()
+            .bind("noise_b", &soa.noise_b)
+            .unwrap()
+            .set_global("rows", rows)
+            .unwrap()
+            .set_global("cols", cols)
+            .unwrap()
+            .set_global("event_id", soa.event_id)
+            .unwrap();
+        let v = SensorView::attach(&planes).unwrap();
+        assert_eq!(reconstruct(&v), want);
+    }
+
     #[test]
     fn finds_injected_deposits() {
         let ev = EventGenerator::new(EventConfig::grid(64, 64, 4), 33).generate();
         let mut col = ev.to_collection::<SoAVec>();
         calib::calibrate_collection(&mut col);
-        let particles = reconstruct(&col);
+        let particles = reconstruct_collection(&col);
         // Every isolated truth deposit should have a particle within 2
         // cells (deposits can merge, so require >= half found).
         let mut found = 0;
@@ -631,7 +587,7 @@ mod tests {
     #[test]
     fn particle_physics_sane() {
         let (col, _, _) = calibrated_event(5);
-        for p in reconstruct(&col) {
+        for p in reconstruct_collection(&col) {
             assert!(p.energy > 0.0);
             assert!(p.x >= 0.0 && p.x < 48.0);
             assert!(p.y >= 0.0 && p.y < 48.0);
@@ -650,7 +606,7 @@ mod tests {
     #[test]
     fn collection_roundtrip_and_fill_back() {
         let (col, _, _) = calibrated_event(8);
-        let ps = reconstruct(&col);
+        let ps = reconstruct_collection(&col);
         let pc = into_collection::<AoS>(col.event_id(), &ps);
         assert_eq!(pc.len(), ps.len());
         let back = fill_back_aos(&pc);
@@ -664,7 +620,7 @@ mod tests {
         s.set_rows(8);
         s.set_cols(8);
         s.resize(64);
-        assert!(reconstruct(&s).is_empty());
+        assert!(reconstruct_collection(&s).is_empty());
     }
 
     #[test]
@@ -680,7 +636,7 @@ mod tests {
         }
         s.set_counts(0, 1000);
         calib::calibrate_collection(&mut s);
-        let ps = reconstruct(&s);
+        let ps = reconstruct_collection(&s);
         assert_eq!(ps.len(), 1);
         assert_eq!(ps[0].origin, 0);
         assert_eq!(ps[0].energy, 1000.0);

@@ -17,6 +17,7 @@ marionette_collection! {
     /// A 2D grid of sensors stored row-major (`i = r * cols + c`).
     pub collection SensorCollection, object Sensor, record SensorRecord,
         columns SensorColumns, refs SensorRef / SensorMut,
+        views SensorView / SensorViewMut,
         props SensorProps, schema "sensor" {
         per_item type_id / set_type_id / TYPE_ID: i32;
         per_item counts / set_counts / COUNTS: i32;
@@ -216,5 +217,109 @@ mod tests {
             assert_eq!(src.energy(i), dst.energy(i));
             assert_eq!(src.noisy(i), dst.noisy(i));
         }
+    }
+
+    /// One view description serves every Marionette-backed store: the
+    /// owned collection (any layout), a pool-recycled staging
+    /// collection, and the raw engine underneath — with identical reads.
+    #[test]
+    fn views_attach_to_owned_and_pooled_sources() {
+        use crate::marionette::memory::{PoolContext, PoolInfo};
+
+        fn check_view<S: crate::marionette::interface::PlaneSource>(
+            v: &SensorView<'_, S>,
+        ) {
+            assert_eq!(v.len(), 6);
+            assert_eq!(v.rows(), 2);
+            assert_eq!(v.event_id(), 99);
+            assert_eq!(v.counts(3), 400);
+            assert_eq!(v.noisy(4), 1);
+            assert_eq!(v.param_a(0), 0.5);
+        }
+
+        // Owned, across layouts (including the irregular AoSoA).
+        check_view(&build::<SoAVec>().view());
+        check_view(&build::<AoS>().view());
+        check_view(&build::<AoSoA<8>>().view());
+
+        // Pool-recycled staging collection: same view, same reads.
+        let info = PoolInfo::<crate::marionette::memory::HostContext>::default();
+        let owned = build::<SoAVec>();
+        let mut pooled = SensorCollection::<
+            AoS<PoolContext<crate::marionette::memory::HostContext>>,
+        >::new_in(info);
+        owned.stage_into(&mut pooled);
+        check_view(&pooled.view());
+        // Attach straight to the typed collection (it is a PlaneSource).
+        check_view(&SensorView::attach(&pooled).unwrap());
+        // And to the raw engine underneath.
+        check_view(&SensorView::attach(pooled.raw()).unwrap());
+    }
+
+    /// Mutable views rewrite elements in place through any source.
+    #[test]
+    fn view_mut_writes_land_in_the_collection() {
+        let mut s = build::<AoS>();
+        {
+            let mut v = s.view_mut();
+            v.set_energy(2, 123.5);
+            v.set_noisy(1, 1);
+            assert_eq!(v.energy(2), 123.5);
+        }
+        assert_eq!(s.energy(2), 123.5);
+        assert_eq!(s.noisy(1), 1);
+    }
+
+    /// Attach fails cleanly across schemas (the particle view cannot
+    /// attach to a sensor store).
+    #[test]
+    fn view_attach_schema_checked() {
+        use crate::marionette::interface::AttachError;
+        let s = build::<SoAVec>();
+        match super::super::particle::ParticleView::attach(s.raw()) {
+            Err(AttachError::SchemaMismatch { .. }) => {}
+            r => panic!("expected SchemaMismatch, got {:?}", r.err()),
+        }
+    }
+
+    /// The fluent builder + conversion sugar: build, convert, stage —
+    /// all routed through the cached transfer plans.
+    #[test]
+    fn fluent_build_convert_stage() {
+        use crate::marionette::memory::{CountingContext, CountingInfo};
+        use crate::marionette::transfer::TransferPriority;
+
+        let mut src = SensorCollection::build().capacity(8).finish();
+        assert!(src.capacity() >= 8);
+        src.set_rows(1);
+        src.set_cols(4);
+        src.resize(4);
+        for i in 0..4 {
+            src.set_counts(i, 10 * (i as i32 + 1));
+        }
+
+        // convert_to: same data, new layout.
+        let aos = src.convert_to::<AoS>();
+        assert_eq!(aos.counts(2), 30);
+        assert_eq!(aos.rows(), 1);
+
+        // Builder with explicit layout + context + pre-size.
+        let info = CountingInfo::default();
+        let mut counted = SensorCollection::build()
+            .layout::<AoS<CountingContext>>()
+            .context(info.clone())
+            .capacity(4)
+            .finish();
+        let stats = src.stage_into(&mut counted);
+        assert!(stats.bytes > 0);
+        assert_eq!(stats.priority, TransferPriority::Strided);
+        assert_eq!(counted.counts(3), 40);
+
+        // stage_into and the transfer_from shim book identical stats.
+        let mut shim = SensorCollection::<AoS<CountingContext>>::new_in(info);
+        let shim_stats = shim.transfer_from_stats(&src);
+        assert_eq!(stats.bytes, shim_stats.bytes);
+        assert_eq!(stats.ops, shim_stats.ops);
+        assert_eq!(stats.priority, shim_stats.priority);
     }
 }

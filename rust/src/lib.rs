@@ -39,3 +39,10 @@ pub mod runtime;
 pub mod util;
 
 pub use marionette::prelude;
+
+// Crate-root re-exports of the substrate types downstream code kept
+// deep-importing: the object-recycling pair from `util::pool` and the
+// pipeline's shared staging pool (API hygiene; examples and tests use
+// these paths instead of reaching into the module tree).
+pub use coordinator::StagePool;
+pub use util::pool::{ObjectPool, ObjectPoolStats, Recycler, ThreadPool};

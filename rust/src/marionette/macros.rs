@@ -9,7 +9,17 @@
 //!   offsets resolved by `const` evaluation — the zero-cost guarantee;
 //! * a **collection struct**, generic over [`Layout`], with the
 //!   `std::vector`-like interface, typed accessors/mutators per property,
-//!   jagged-vector views, global properties, and layout/context transfers;
+//!   jagged-vector views, global properties, and layout/context transfers —
+//!   plus the fluent entry points: `build()` (the
+//!   [`Build`](crate::marionette::interface::Build)er chain),
+//!   `convert_to::<L2>()` / `stage_into(&mut dst)` (conversion sugar over
+//!   the cached [`TransferPlan`]), and `view()` / `view_mut()`;
+//! * **borrowed typed views** (`View`/`ViewMut`), generic over any
+//!   schema-matching [`PlaneSource`] — the same accessor interface
+//!   *detached from ownership*, so one description serves the owned
+//!   collection, pooled staging collections, and schema-shaped slice
+//!   stores such as downloaded device planes (see
+//!   [`interface`](crate::marionette::interface));
 //! * an **owned object struct** (the paper's standalone `Object`) plus
 //!   **proxy types** (`Ref`/`Mut`, the paper's objects-in-collections) and
 //!   **sub-group views**;
@@ -28,6 +38,7 @@
 //!     /// docs…
 //!     pub collection Sensors, object Sensor, record SensorRec,
 //!         columns SensorCols, refs SensorRef/SensorMut,
+//!         views SensorsView/SensorsViewMut,
 //!         props SensorProps, schema "sensor" {
 //!         per_item energy / set_energy / ENERGY: f32;
 //!         group calibration / CalibView / CalibViewMut {
@@ -41,13 +52,18 @@
 //! ```
 //!
 //! Restrictions vs the paper (documented scope): groups hold per-item
-//! scalars only and do not nest; jagged properties have a single value
-//! field (the paper's `*_SIMPLE_*` form — multi-payload jagged vectors are
-//! available through the runtime [`SchemaBuilder`] API).
+//! scalars only and do not nest (group members surface as flat accessors
+//! on the views); jagged properties have a single value field (the
+//! paper's `*_SIMPLE_*` form — multi-payload jagged vectors are available
+//! through the runtime [`SchemaBuilder`] API); borrowed views read and
+//! rewrite elements in place but never change the collection's shape
+//! (structural mutation stays with the owner).
 //!
 //! [`FieldMeta`]: crate::marionette::schema::FieldMeta
 //! [`Layout`]: crate::marionette::layout::Layout
 //! [`SchemaBuilder`]: crate::marionette::schema::SchemaBuilder
+//! [`PlaneSource`]: crate::marionette::interface::PlaneSource
+//! [`TransferPlan`]: crate::marionette::transfer::TransferPlan
 
 /// Declare a typed Marionette collection. See the [module docs](self).
 #[macro_export]
@@ -56,12 +72,14 @@ macro_rules! marionette_collection {
         $(#[$docs:meta])*
         pub collection $Col:ident, object $Obj:ident, record $Rec:ident,
             columns $Cols:ident, refs $Ref:ident / $Mut:ident,
+            views $View:ident / $ViewMut:ident,
             props $Props:ident, schema $sname:literal {
             $($body:tt)*
         }
     ) => {
         $crate::marionette_collection!(@parse
             docs=[$(#[$docs])*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            v=$View, vm=$ViewMut,
             props=$Props, sname=$sname,
             pis=[], arrs=[], jags=[], globs=[], groups=[],
             rest=[$($body)*]
@@ -71,6 +89,7 @@ macro_rules! marionette_collection {
     // ---------------- parsing: munch one declaration at a time ----------
     (@parse
         docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        v=$View:ident, vm=$ViewMut:ident,
         props=$Props:ident, sname=$sname:literal,
         pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
         globs=[$($globs:tt)*], groups=[$($groups:tt)*],
@@ -78,6 +97,7 @@ macro_rules! marionette_collection {
     ) => {
         $crate::marionette_collection!(@parse
             docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            v=$View, vm=$ViewMut,
             props=$Props, sname=$sname,
             pis=[$($pis)* [$g $s $C ($ty)]], arrs=[$($arrs)*], jags=[$($jags)*],
             globs=[$($globs)*], groups=[$($groups)*],
@@ -86,6 +106,7 @@ macro_rules! marionette_collection {
     };
     (@parse
         docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        v=$View:ident, vm=$ViewMut:ident,
         props=$Props:ident, sname=$sname:literal,
         pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
         globs=[$($globs:tt)*], groups=[$($groups:tt)*],
@@ -95,6 +116,7 @@ macro_rules! marionette_collection {
     ) => {
         $crate::marionette_collection!(@parse
             docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            v=$View, vm=$ViewMut,
             props=$Props, sname=$sname,
             pis=[$($pis)* $([$ig $is $IC ($ity)])*], arrs=[$($arrs)*], jags=[$($jags)*],
             globs=[$($globs)*],
@@ -104,6 +126,7 @@ macro_rules! marionette_collection {
     };
     (@parse
         docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        v=$View:ident, vm=$ViewMut:ident,
         props=$Props:ident, sname=$sname:literal,
         pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
         globs=[$($globs:tt)*], groups=[$($groups:tt)*],
@@ -111,6 +134,7 @@ macro_rules! marionette_collection {
     ) => {
         $crate::marionette_collection!(@parse
             docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            v=$View, vm=$ViewMut,
             props=$Props, sname=$sname,
             pis=[$($pis)*], arrs=[$($arrs)* [$g $s $C ($ty) ($e)]], jags=[$($jags)*],
             globs=[$($globs)*], groups=[$($groups)*],
@@ -119,6 +143,7 @@ macro_rules! marionette_collection {
     };
     (@parse
         docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        v=$View:ident, vm=$ViewMut:ident,
         props=$Props:ident, sname=$sname:literal,
         pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
         globs=[$($globs:tt)*], groups=[$($groups:tt)*],
@@ -126,6 +151,7 @@ macro_rules! marionette_collection {
     ) => {
         $crate::marionette_collection!(@parse
             docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            v=$View, vm=$ViewMut,
             props=$Props, sname=$sname,
             pis=[$($pis)*], arrs=[$($arrs)*], jags=[$($jags)* [$g $s $C ($ty) ($pty)]],
             globs=[$($globs)*], groups=[$($groups)*],
@@ -134,6 +160,7 @@ macro_rules! marionette_collection {
     };
     (@parse
         docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        v=$View:ident, vm=$ViewMut:ident,
         props=$Props:ident, sname=$sname:literal,
         pis=[$($pis:tt)*], arrs=[$($arrs:tt)*], jags=[$($jags:tt)*],
         globs=[$($globs:tt)*], groups=[$($groups:tt)*],
@@ -141,6 +168,7 @@ macro_rules! marionette_collection {
     ) => {
         $crate::marionette_collection!(@parse
             docs=[$($docs)*], col=$Col, obj=$Obj, rec=$Rec, cols=$Cols, r=$Ref, m=$Mut,
+            v=$View, vm=$ViewMut,
             props=$Props, sname=$sname,
             pis=[$($pis)*], arrs=[$($arrs)*], jags=[$($jags)*],
             globs=[$($globs)* [$g $s $C ($ty)]], groups=[$($groups)*],
@@ -151,6 +179,7 @@ macro_rules! marionette_collection {
     // ---------------- emission ------------------------------------------
     (@parse
         docs=[$($docs:tt)*], col=$Col:ident, obj=$Obj:ident, rec=$Rec:ident, cols=$Cols:ident, r=$Ref:ident, m=$Mut:ident,
+        v=$View:ident, vm=$ViewMut:ident,
         props=$Props:ident, sname=$sname:literal,
         pis=[$([$pig:ident $pis_:ident $PIC:ident ($pity:ty)])*],
         arrs=[$([$ag:ident $as_:ident $AC:ident ($aty:ty) ($aext:expr)])*],
@@ -206,7 +235,10 @@ macro_rules! marionette_collection {
                 $crate::marionette::schema::meta_by_name(
                     &Self::METAS, Self::NAMES, stringify!($ag));)*
             $(pub const $JC: $crate::marionette::schema::JaggedProp =
-                $crate::marionette::schema::JaggedProp::from_meta(
+                $crate::marionette::schema::JaggedProp::from_metas(
+                    $crate::marionette::schema::meta_by_name(
+                        &Self::METAS, Self::NAMES,
+                        concat!(stringify!($jg), "__prefix")),
                     $crate::marionette::schema::meta_by_name(
                         &Self::METAS, Self::NAMES, stringify!($jg)));)*
             $(pub const $GC: $crate::marionette::schema::FieldMeta =
@@ -228,6 +260,23 @@ macro_rules! marionette_collection {
                     ::std::sync::Arc::new(b.build())
                 })
                 .clone()
+            }
+        }
+
+        /// The family hook behind the fluent builder: one declaration =
+        /// one family, materialisable under any layout.
+        impl $crate::marionette::interface::CollectionFamily for $Props {
+            type Typed<L: $crate::marionette::layout::Layout> = $Col<L>;
+
+            fn family_schema() -> ::std::sync::Arc<$crate::marionette::schema::Schema> {
+                $Props::schema()
+            }
+
+            fn from_raw<L: $crate::marionette::layout::Layout>(
+                raw: $crate::marionette::collection::RawCollection<L>,
+            ) -> $Col<L> {
+                debug_assert_eq!(&$Props::METAS[..], raw.schema().metas());
+                $Col { raw }
             }
         }
 
@@ -254,6 +303,23 @@ macro_rules! marionette_collection {
         {
             fn default() -> Self {
                 Self::new()
+            }
+        }
+
+        #[allow(dead_code)]
+        impl $Col {
+            /// Start a fluent build of this collection family, beginning
+            /// in the default layout (`SoAVec<HostContext>`):
+            ///
+            /// ```text
+            /// let col = Collection::build()
+            ///     .layout::<AoS<_>>()   // re-target layout + context
+            ///     .context(info)        // pin the context info
+            ///     .capacity(n)          // pre-reserve
+            ///     .finish();
+            /// ```
+            pub fn build() -> $crate::marionette::interface::Build<$Props> {
+                $crate::marionette::interface::Build::new()
             }
         }
 
@@ -318,10 +384,74 @@ macro_rules! marionette_collection {
                 self.raw.update_memory_context_info(info)
             }
 
+            // ---- typed views (borrowed, source-erased) --------------
+
+            /// Borrowed typed view over this collection's own storage
+            /// (the owned special case of attaching to any
+            /// [`PlaneSource`](crate::marionette::interface::PlaneSource)).
+            ///
+            /// # Panics
+            /// If the collection's memory context is not host-readable.
+            pub fn view(
+                &self,
+            ) -> $View<'_, $crate::marionette::collection::RawCollection<L>> {
+                $View::attach(&self.raw)
+                    .expect("owned collection always schema-matches its own view")
+            }
+
+            /// Mutable borrowed view; see [`Self::view`].
+            pub fn view_mut(
+                &mut self,
+            ) -> $ViewMut<'_, $crate::marionette::collection::RawCollection<L>> {
+                $ViewMut::attach(&mut self.raw)
+                    .expect("owned collection always schema-matches its own view")
+            }
+
+            // ---- conversions (fluent, plan-cache routed) ------------
+
+            /// Materialise this collection under layout `L2` (default
+            /// context info) through the cached
+            /// [`TransferPlan`](crate::marionette::transfer::TransferPlan).
+            pub fn convert_to<L2: $crate::marionette::layout::Layout>(&self) -> $Col<L2> {
+                self.convert_to_in(Default::default())
+            }
+
+            /// As [`Self::convert_to`], with explicit context info.
+            pub fn convert_to_in<L2: $crate::marionette::layout::Layout>(
+                &self,
+                info: $crate::marionette::collection::InfoOf<L2>,
+            ) -> $Col<L2> {
+                let mut dst = $Col::<L2>::new_in(info);
+                let plan =
+                    $crate::marionette::transfer::plan_for::<L, L2>(self.raw.schema());
+                plan.execute(&self.raw, &mut dst.raw);
+                dst
+            }
+
+            /// Stage this collection into a reusable destination through
+            /// the cached plan, returning full execution stats. The
+            /// fluent spelling of [`Self::transfer_from`] (from the
+            /// source's point of view); both route through the same
+            /// cached plan and book identical stats.
+            pub fn stage_into<L2: $crate::marionette::layout::Layout>(
+                &self,
+                dst: &mut $Col<L2>,
+            ) -> $crate::marionette::transfer::TransferStats {
+                let plan =
+                    $crate::marionette::transfer::plan_for::<L, L2>(self.raw.schema());
+                plan.execute(&self.raw, &mut dst.raw)
+            }
+
             /// Copy from a collection of any other layout/context
             /// through the cached [`TransferPlan`]: the ladder is
             /// resolved once per (schema, layouts, contexts) tuple and
             /// reused by every later copy.
+            ///
+            /// Deprecated spelling: prefer the fluent
+            /// [`Self::stage_into`] / [`Self::convert_to`] on the
+            /// source; this shim remains for compatibility and routes
+            /// through the identical cached plan (route-equivalence is
+            /// pinned by `transfer.rs` unit tests).
             ///
             /// [`TransferPlan`]: crate::marionette::transfer::TransferPlan
             pub fn transfer_from<L2: $crate::marionette::layout::Layout>(
@@ -332,14 +462,13 @@ macro_rules! marionette_collection {
             }
 
             /// As [`Self::transfer_from`], returning full execution
-            /// stats (bytes moved, copy ops issued, rung).
+            /// stats (bytes moved, copy ops issued, rung). Deprecated
+            /// spelling of `src.stage_into(self)`.
             pub fn transfer_from_stats<L2: $crate::marionette::layout::Layout>(
                 &mut self,
                 src: &$Col<L2>,
             ) -> $crate::marionette::transfer::TransferStats {
-                let plan =
-                    $crate::marionette::transfer::plan_for::<L2, L>(src.raw.schema());
-                plan.execute(&src.raw, &mut self.raw)
+                src.stage_into(self)
             }
 
             /// The cached transfer plan used when copying *from* a
@@ -473,6 +602,329 @@ macro_rules! marionette_collection {
             pub fn iter(&self) -> impl Iterator<Item = $Ref<'_, L>> {
                 (0..self.len()).map(move |i| $Ref { col: self, i })
             }
+        }
+
+        /// The typed collection is itself a
+        /// [`PlaneSource`](crate::marionette::interface::PlaneSource):
+        /// views attach to it directly, pooled or not.
+        impl<L: $crate::marionette::layout::Layout>
+            $crate::marionette::interface::PlaneSource for $Col<L>
+        {
+            fn schema(&self) -> &::std::sync::Arc<$crate::marionette::schema::Schema> {
+                self.raw.schema()
+            }
+
+            fn tag_len(&self, tag: $crate::marionette::schema::TagId) -> usize {
+                $crate::marionette::interface::PlaneSource::tag_len(&self.raw, tag)
+            }
+
+            fn host_readable(&self) -> bool {
+                $crate::marionette::interface::PlaneSource::host_readable(&self.raw)
+            }
+
+            fn source_name(&self) -> &'static str {
+                $crate::marionette::interface::PlaneSource::source_name(&self.raw)
+            }
+
+            #[inline(always)]
+            unsafe fn elem_ptr(
+                &self,
+                meta: $crate::marionette::schema::FieldMeta,
+                i: usize,
+                k: usize,
+            ) -> *const u8 {
+                $crate::marionette::interface::PlaneSource::elem_ptr(&self.raw, meta, i, k)
+            }
+
+            fn plane(
+                &self,
+                meta: $crate::marionette::schema::FieldMeta,
+                k: usize,
+            ) -> Option<$crate::marionette::holder::PlaneView> {
+                $crate::marionette::interface::PlaneSource::plane(&self.raw, meta, k)
+            }
+        }
+
+        impl<L: $crate::marionette::layout::Layout>
+            $crate::marionette::interface::PlaneSourceMut for $Col<L>
+        {
+            #[inline(always)]
+            unsafe fn elem_ptr_mut(
+                &mut self,
+                meta: $crate::marionette::schema::FieldMeta,
+                i: usize,
+                k: usize,
+            ) -> *mut u8 {
+                $crate::marionette::interface::PlaneSourceMut::elem_ptr_mut(
+                    &mut self.raw, meta, i, k,
+                )
+            }
+        }
+
+        /// Borrowed typed view over **any** schema-matching
+        /// [`PlaneSource`](crate::marionette::interface::PlaneSource):
+        /// the collection's accessor interface detached from ownership.
+        /// Attach once (schema-checked; dense per-item planes are
+        /// resolved to cached spans), then every accessor is a
+        /// raw-offset read — zero per-element dispatch, at
+        /// dense-slice speed on regular layouts and owned-accessor
+        /// speed on irregular ones.
+        pub struct $View<'a, S: $crate::marionette::interface::PlaneSource> {
+            src: &'a S,
+            len: usize,
+            $($pig: Option<$crate::marionette::interface::PlaneSpan>,)*
+        }
+
+        #[allow(dead_code)]
+        impl<'a, S: $crate::marionette::interface::PlaneSource> $View<'a, S> {
+            /// Attach to a schema-matching source. Fails cleanly on
+            /// structural or dtype mismatch, unbound fields, or
+            /// non-host-readable storage.
+            pub fn attach(
+                src: &'a S,
+            ) -> Result<Self, $crate::marionette::interface::AttachError> {
+                $crate::marionette::interface::check_attach(src, &$Props::schema())?;
+                let len = $crate::marionette::interface::PlaneSource::tag_len(
+                    src,
+                    $crate::marionette::schema::TagId::ITEMS,
+                );
+                debug_assert_eq!(
+                    $crate::marionette::interface::PlaneSource::tag_len(
+                        src,
+                        $crate::marionette::schema::TagId::ITEMS_PLUS_ONE,
+                    ),
+                    len + 1,
+                    "source's prefix tag disagrees with its item count",
+                );
+                Ok($View {
+                    src,
+                    len,
+                    $($pig: $crate::marionette::interface::resolve_span(
+                        src,
+                        $Props::$PIC,
+                        0,
+                    ),)*
+                })
+            }
+
+            #[inline(always)]
+            pub fn len(&self) -> usize { self.len }
+            pub fn is_empty(&self) -> bool { self.len == 0 }
+
+            /// The attached source.
+            pub fn source(&self) -> &'a S { self.src }
+
+            // ---- per-item scalar reads ------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $pig(&self, i: usize) -> $pity {
+                    assert!(i < self.len, "view index out of bounds");
+                    // SAFETY: attach checked the schema and i is
+                    // bounded; a cached span is the dense plane of this
+                    // field on this same source (base stays valid for
+                    // the view's borrow, offsets stay aligned because
+                    // plane strides are multiples of the field align).
+                    unsafe {
+                        match self.$pig {
+                            Some(p) => *(p.base.add(i * p.stride) as *const $pity),
+                            None => $crate::marionette::interface::read::<$pity, S>(
+                                self.src, $Props::$PIC, i, 0,
+                            ),
+                        }
+                    }
+                }
+            )*
+
+            // ---- array reads ----------------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $ag(&self, i: usize, k: usize) -> $aty {
+                    assert!(i < self.len, "view index out of bounds");
+                    assert!(k < ($aext as usize), "view lane out of extent");
+                    // SAFETY: attach checked the schema; i, k bounded.
+                    unsafe {
+                        $crate::marionette::interface::read::<$aty, S>(
+                            self.src, $Props::$AC, i, k,
+                        )
+                    }
+                }
+            )*
+
+            // ---- jagged reads ---------------------------------------
+
+            $(
+                /// Values of this item's jagged vector, read through the
+                /// source.
+                #[inline]
+                pub fn $jg(
+                    &self,
+                    i: usize,
+                ) -> $crate::marionette::interface::SourceJagged<'a, $jty, S> {
+                    assert!(i < self.len, "view index out of bounds");
+                    // SAFETY: attach pinned the prefix tag at len + 1,
+                    // so i and i + 1 are valid prefix indices.
+                    let lo = unsafe {
+                        $crate::marionette::interface::read::<$jpty, S>(
+                            self.src, $Props::$JC.prefix, i, 0,
+                        )
+                    } as usize;
+                    let hi = unsafe {
+                        $crate::marionette::interface::read::<$jpty, S>(
+                            self.src, $Props::$JC.prefix, i + 1, 0,
+                        )
+                    } as usize;
+                    $crate::marionette::interface::SourceJagged::new(
+                        self.src, $Props::$JC.values, lo..hi,
+                    )
+                }
+            )*
+
+            // ---- global reads ---------------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $gg(&self) -> $gty {
+                    // SAFETY: the Global tag always holds one record.
+                    unsafe {
+                        $crate::marionette::interface::read::<$gty, S>(
+                            self.src, $Props::$GC, 0, 0,
+                        )
+                    }
+                }
+            )*
+        }
+
+        /// Mutable borrowed typed view over any schema-matching
+        /// [`PlaneSourceMut`](crate::marionette::interface::PlaneSourceMut).
+        /// Rewrites elements in place; structural mutation (resize,
+        /// jagged growth) stays with the owner.
+        pub struct $ViewMut<'a, S: $crate::marionette::interface::PlaneSourceMut> {
+            src: &'a mut S,
+            len: usize,
+        }
+
+        #[allow(dead_code)]
+        impl<'a, S: $crate::marionette::interface::PlaneSourceMut> $ViewMut<'a, S> {
+            /// Attach mutably; see the immutable view's `attach`.
+            pub fn attach(
+                src: &'a mut S,
+            ) -> Result<Self, $crate::marionette::interface::AttachError> {
+                $crate::marionette::interface::check_attach(&*src, &$Props::schema())?;
+                let len = $crate::marionette::interface::PlaneSource::tag_len(
+                    &*src,
+                    $crate::marionette::schema::TagId::ITEMS,
+                );
+                Ok($ViewMut { src, len })
+            }
+
+            #[inline(always)]
+            pub fn len(&self) -> usize { self.len }
+            pub fn is_empty(&self) -> bool { self.len == 0 }
+
+            // ---- per-item scalars -----------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $pig(&self, i: usize) -> $pity {
+                    assert!(i < self.len, "view index out of bounds");
+                    // SAFETY: attach checked the schema; i is bounded.
+                    unsafe {
+                        $crate::marionette::interface::read::<$pity, S>(
+                            &*self.src, $Props::$PIC, i, 0,
+                        )
+                    }
+                }
+                #[inline(always)]
+                pub fn $pis_(&mut self, i: usize, v: $pity) {
+                    assert!(i < self.len, "view index out of bounds");
+                    // SAFETY: as the getter, through the mutable source.
+                    unsafe {
+                        $crate::marionette::interface::write::<$pity, S>(
+                            self.src, $Props::$PIC, i, 0, v,
+                        )
+                    }
+                }
+            )*
+
+            // ---- arrays ---------------------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $ag(&self, i: usize, k: usize) -> $aty {
+                    assert!(i < self.len, "view index out of bounds");
+                    assert!(k < ($aext as usize), "view lane out of extent");
+                    // SAFETY: attach checked the schema; i, k bounded.
+                    unsafe {
+                        $crate::marionette::interface::read::<$aty, S>(
+                            &*self.src, $Props::$AC, i, k,
+                        )
+                    }
+                }
+                #[inline(always)]
+                pub fn $as_(&mut self, i: usize, k: usize, v: $aty) {
+                    assert!(i < self.len, "view index out of bounds");
+                    assert!(k < ($aext as usize), "view lane out of extent");
+                    // SAFETY: as the getter, through the mutable source.
+                    unsafe {
+                        $crate::marionette::interface::write::<$aty, S>(
+                            self.src, $Props::$AC, i, k, v,
+                        )
+                    }
+                }
+            )*
+
+            // ---- jagged reads (in-place value rewrites only) --------
+
+            $(
+                /// Values of this item's jagged vector (read-only; the
+                /// vector's *shape* belongs to the owner).
+                #[inline]
+                pub fn $jg(
+                    &self,
+                    i: usize,
+                ) -> $crate::marionette::interface::SourceJagged<'_, $jty, S> {
+                    assert!(i < self.len, "view index out of bounds");
+                    // SAFETY: prefix tag holds len + 1 entries.
+                    let lo = unsafe {
+                        $crate::marionette::interface::read::<$jpty, S>(
+                            &*self.src, $Props::$JC.prefix, i, 0,
+                        )
+                    } as usize;
+                    let hi = unsafe {
+                        $crate::marionette::interface::read::<$jpty, S>(
+                            &*self.src, $Props::$JC.prefix, i + 1, 0,
+                        )
+                    } as usize;
+                    $crate::marionette::interface::SourceJagged::new(
+                        &*self.src, $Props::$JC.values, lo..hi,
+                    )
+                }
+            )*
+
+            // ---- globals --------------------------------------------
+
+            $(
+                #[inline(always)]
+                pub fn $gg(&self) -> $gty {
+                    // SAFETY: the Global tag always holds one record.
+                    unsafe {
+                        $crate::marionette::interface::read::<$gty, S>(
+                            &*self.src, $Props::$GC, 0, 0,
+                        )
+                    }
+                }
+                #[inline(always)]
+                pub fn $gs_(&mut self, v: $gty) {
+                    // SAFETY: as the getter, through the mutable source.
+                    unsafe {
+                        $crate::marionette::interface::write::<$gty, S>(
+                            self.src, $Props::$GC, 0, 0, v,
+                        )
+                    }
+                }
+            )*
         }
 
         /// The AoS record of the `Items` tag: byte-identical to what the

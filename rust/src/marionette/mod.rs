@@ -17,12 +17,20 @@
 //!   contexts through a priority ladder that falls back from single-memcpy
 //!   fast paths to element-wise copies (the paper's
 //!   `TransferSpecification` / `TransferPriority`);
+//! * the **interface layer** ([`interface`]) decouples the typed interface
+//!   from the backing store: borrowed views attach to any schema-matching
+//!   [`interface::PlaneSource`] (owned collections, pooled staging
+//!   collections, downloaded device planes via
+//!   [`interface::SlicePlanes`]), and the fluent [`interface::Build`]er
+//!   plus the generated `convert_to` / `stage_into` sugar are the
+//!   streamlined entry points of §VI (DESIGN.md §6);
 //! * the [`crate::marionette_collection!`] macro generates a typed,
 //!   object-oriented interface (collection accessors, object proxies,
-//!   owned objects, sub-group views) over any layout — the analogue of the
-//!   paper's `MARIONETTE_DECLARE_*` macros — with all offsets computed at
-//!   compile time so the generated code matches handwritten structures
-//!   (paper §VIII; validated in `benches/zero_cost.rs`).
+//!   owned objects, sub-group views, borrowed source-erased views) over
+//!   any layout — the analogue of the paper's `MARIONETTE_DECLARE_*`
+//!   macros — with all offsets computed at compile time so the generated
+//!   code matches handwritten structures (paper §VIII; validated in
+//!   `benches/zero_cost.rs`).
 //!
 //! Everything is resolved statically: no virtual dispatch on the element
 //! access paths, no allocation beyond the underlying storage.
@@ -31,6 +39,7 @@ pub mod blob;
 pub mod buffer;
 pub mod collection;
 pub mod holder;
+pub mod interface;
 pub mod layout;
 pub mod macros;
 pub mod memory;
@@ -44,6 +53,10 @@ pub mod prelude {
     pub use super::blob::{AoSScheme, AoSoAScheme, BlobLayoutKind, SoABlobScheme};
     pub use super::collection::{JaggedView, RawCollection};
     pub use super::holder::LayoutHolder;
+    pub use super::interface::{
+        check_attach, AttachError, Build, CollectionFamily, PlaneSource, PlaneSourceMut,
+        SlicePlanes, SourceJagged,
+    };
     pub use super::layout::{AoS, AoSoA, Layout, PlaneShape, SoABlob, SoAVec};
     pub use super::memory::{
         AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, HostContext,

@@ -266,17 +266,21 @@ pub const fn meta_by_name(metas: &[FieldMeta], names: &[&str], name: &str) -> Fi
     panic!("marionette: no field with the requested name");
 }
 
-/// Handle to a jagged property: its values-field meta plus the jagged
-/// index (recovered from the values tag).
+/// Handle to a jagged property: its prefix-sum and values field metas
+/// plus the jagged index (recovered from the values tag). Carrying the
+/// prefix meta lets borrowed views resolve an item's value range with
+/// two raw reads and no schema lookup (see
+/// [`interface`](super::interface)).
 #[derive(Clone, Copy, Debug)]
 pub struct JaggedProp {
     pub values: FieldMeta,
+    pub prefix: FieldMeta,
     pub j: u32,
 }
 
 impl JaggedProp {
-    pub const fn from_meta(values: FieldMeta) -> JaggedProp {
-        JaggedProp { values, j: values.tag - 3 }
+    pub const fn from_metas(prefix: FieldMeta, values: FieldMeta) -> JaggedProp {
+        JaggedProp { values, prefix, j: values.tag - 3 }
     }
 }
 

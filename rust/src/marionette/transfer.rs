@@ -33,8 +33,14 @@
 //! 3. `Strided` — regular strides on both sides: strided copy loop.
 //! 4. `Elementwise` — fully general fallback via `elem_ptr`.
 //!
-//! [`copy_collection`] keeps the original one-call API on top of the
-//! cache; [`copy_collection_unplanned`] preserves the historical
+//! The *preferred* call forms live on the generated typed collections:
+//! `src.convert_to::<L2>()` / `src.stage_into(&mut dst)` (DESIGN.md
+//! §6). [`copy_collection`] keeps the original one-call API on top of
+//! the cache as a compatibility shim — deprecated in docs, kept green —
+//! and is route-equivalent to the fluent path (identical plan object,
+//! identical [`TransferStats`]; pinned by the
+//! `shims_route_through_identical_plans` unit test).
+//! [`copy_collection_unplanned`] preserves the historical
 //! walk-the-ladder-every-call implementation as the benchmark baseline
 //! (`benches/transfers.rs` measures the amortisation win).
 //!
@@ -1160,6 +1166,47 @@ mod tests {
         agree!(AoS, SoABlob);
         agree!(SoABlob, AoSoA<4>);
         agree!(AoSoA<8>, AoSoA<8>);
+    }
+
+    /// Route equivalence of the compatibility shims (API-redesign
+    /// contract): the one-call [`copy_collection`] /
+    /// [`copy_collection_stats`] wrappers — and therefore the generated
+    /// `transfer_from` shims built on them — resolve to the *identical*
+    /// cached plan as the fluent direct-execute path, book
+    /// byte-for-byte identical [`TransferStats`], and register as plan
+    /// cache hits (never a recompilation).
+    #[test]
+    fn shims_route_through_identical_plans() {
+        let src = build_src::<SoAVec>();
+        let s = src.schema().clone();
+
+        // Fluent path: resolve the plan once, execute directly.
+        let plan = plan_for::<SoAVec, AoS>(&s);
+        let mut direct = RawCollection::<AoS>::new(s.clone());
+        let direct_stats = plan.execute(&src, &mut direct);
+
+        // Shim path: the one-call wrapper on a fresh destination.
+        let before = plan_cache_stats();
+        let mut shim = RawCollection::<AoS>::new(s.clone());
+        let shim_stats = copy_collection_stats(&src, &mut shim);
+        let after = plan_cache_stats();
+
+        check_equal(&direct, &shim);
+        assert_eq!(direct_stats.bytes, shim_stats.bytes, "shim booked different bytes");
+        assert_eq!(direct_stats.ops, shim_stats.ops, "shim issued different op count");
+        assert_eq!(direct_stats.priority, shim_stats.priority, "shim used different rung");
+        // The shim's lookup is a cache hit on the very same plan object.
+        assert!(after.hits > before.hits, "shim missed the plan cache");
+        assert!(
+            Arc::ptr_eq(&plan, &plan_for::<SoAVec, AoS>(&s)),
+            "shim and fluent path must share one compiled plan"
+        );
+
+        // Re-running the shim into the already-sized destination stays
+        // stats-identical (steady-state staging contract).
+        let again = copy_collection_stats(&src, &mut shim);
+        assert_eq!(again.bytes, shim_stats.bytes);
+        assert_eq!(again.ops, shim_stats.ops);
     }
 
     // -- accounting contract -------------------------------------------

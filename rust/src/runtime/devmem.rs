@@ -12,6 +12,13 @@
 //! conversion plane every upload marshals `noisy` through — across
 //! events, so steady-state uploads stop allocating on the host side
 //! (DESIGN.md §5).
+//!
+//! [`downloaded_planes`] is the D2H counterpart for the typed interface
+//! layer: it assembles the planes an executed event leaves on the host
+//! (the raw upload planes plus the downloaded calibration outputs) into
+//! a schema-shaped [`SlicePlanes`] store, so the generated
+//! `SensorView` attaches to a device *download* exactly as it attaches
+//! to an owned collection (DESIGN.md §6).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -20,8 +27,11 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::edm::generator::RawEvent;
+use crate::edm::sensor::SensorProps;
+use crate::marionette::interface::{AttachError, SlicePlanes};
 
 use super::client::client;
+use super::executor::SensorStageOut;
 
 /// Raw sensor planes resident on the PJRT device.
 pub struct DeviceEvent {
@@ -83,6 +93,44 @@ impl DeviceEvent {
     pub fn full_event_inputs(&self) -> [&xla::PjRtBuffer; 7] {
         [&self.counts, &self.a, &self.b, &self.na, &self.nb, &self.noisy, &self.types]
     }
+}
+
+/// Assemble the host-side planes of an executed device event — the raw
+/// upload planes still held by `ev` plus the calibration outputs
+/// downloaded in `out` — into a schema-shaped [`SlicePlanes`] store
+/// matching the sensor collection's property list.
+///
+/// Attach the generated `SensorView` to the result and the downloaded
+/// event reads exactly like an owned collection:
+///
+/// ```text
+/// let (out, _timing) = engine.run_sensor_stage(&ev)?;
+/// let planes = downloaded_planes(&ev, &out)?;
+/// let view = SensorView::attach(&planes)?;   // one impl serves all
+/// let particles = reco::reconstruct(&view);
+/// ```
+///
+/// Every bind is dtype- and length-checked against the schema; the
+/// result is fully bound, so the subsequent attach cannot fail on a
+/// missing field.
+pub fn downloaded_planes<'a>(
+    ev: &'a RawEvent,
+    out: &'a SensorStageOut,
+) -> Result<SlicePlanes<'a>, AttachError> {
+    SlicePlanes::new(SensorProps::schema(), ev.num_sensors())
+        .bind("type_id", &ev.types)?
+        .bind("counts", &ev.counts)?
+        .bind("energy", &out.energy)?
+        .bind("noise", &out.noise)?
+        .bind("sig", &out.sig)?
+        .bind("noisy", &ev.noisy)?
+        .bind("param_a", &ev.a)?
+        .bind("param_b", &ev.b)?
+        .bind("noise_a", &ev.na)?
+        .bind("noise_b", &ev.nb)?
+        .set_global("rows", ev.rows as u32)?
+        .set_global("cols", ev.cols as u32)?
+        .set_global("event_id", ev.event_id)
 }
 
 /// Counters of a [`DeviceEventPool`].
@@ -227,6 +275,38 @@ mod tests {
         // Round-trip one plane to prove residency.
         let lit = dev.counts.to_literal_sync().unwrap();
         assert_eq!(lit.to_vec::<i32>().unwrap(), ev.counts);
+    }
+
+    /// The D2H interface bridge is pure host state: a downloaded event
+    /// attaches the one generated sensor view and reads (and
+    /// reconstructs) exactly like the owned collection. No PJRT needed
+    /// — the host calibration stands in for the device download.
+    #[test]
+    fn downloaded_planes_attach_and_read() {
+        use crate::edm::sensor::SensorView;
+        use crate::edm::{calib, reco};
+        use crate::marionette::layout::SoAVec;
+
+        let ev = EventGenerator::new(EventConfig::grid(24, 24, 2), 9).generate();
+        let mut col = ev.to_collection::<SoAVec>();
+        calib::calibrate_collection(&mut col);
+        let out = SensorStageOut {
+            energy: (0..col.len()).map(|i| col.energy(i)).collect(),
+            noise: (0..col.len()).map(|i| col.noise(i)).collect(),
+            sig: (0..col.len()).map(|i| col.sig(i)).collect(),
+        };
+        let planes = downloaded_planes(&ev, &out).unwrap();
+        let v = SensorView::attach(&planes).unwrap();
+        assert_eq!(v.rows(), 24);
+        assert_eq!(v.cols(), 24);
+        assert_eq!(v.event_id(), ev.event_id);
+        for i in (0..col.len()).step_by(37) {
+            assert_eq!(v.energy(i), col.energy(i));
+            assert_eq!(v.sig(i), col.sig(i));
+            assert_eq!(v.counts(i), ev.counts[i]);
+            assert_eq!(v.noisy(i), ev.noisy[i]);
+        }
+        assert_eq!(reco::reconstruct(&v), reco::reconstruct_collection(&col));
     }
 
     #[test]

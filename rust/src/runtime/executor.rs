@@ -319,16 +319,24 @@ mod tests {
         let (dev, timing) = eng.run_sensor_stage(&ev).unwrap();
         assert!(timing.total() > Duration::ZERO);
 
+        // The downloaded planes read through the same typed view as any
+        // other sensor store (devmem::downloaded_planes, DESIGN.md §6).
+        let planes = super::super::devmem::downloaded_planes(&ev, &dev).unwrap();
+        let view = crate::edm::sensor::SensorView::attach(&planes).unwrap();
+        assert_eq!(view.len(), ev.num_sensors());
+        assert_eq!(view.event_id(), ev.event_id);
+
         let mut host = ev.to_collection::<SoAVec>();
         calib::calibrate_collection(&mut host);
         for i in 0..ev.num_sensors() {
             assert!(
-                (dev.energy[i] - host.energy(i)).abs() <= 1e-3 * host.energy(i).abs().max(1.0),
+                (view.energy(i) - host.energy(i)).abs()
+                    <= 1e-3 * host.energy(i).abs().max(1.0),
                 "energy[{i}]: dev={} host={}",
-                dev.energy[i],
+                view.energy(i),
                 host.energy(i)
             );
-            assert!((dev.sig[i] - host.sig(i)).abs() <= 1e-3 * host.sig(i).abs().max(1.0));
+            assert!((view.sig(i) - host.sig(i)).abs() <= 1e-3 * host.sig(i).abs().max(1.0));
         }
     }
 
@@ -338,7 +346,7 @@ mod tests {
         let ev = EventGenerator::new(EventConfig::grid(64, 64, 4), 7).generate();
         let mut host = ev.to_collection::<SoAVec>();
         calib::calibrate_collection(&mut host);
-        let host_particles = reco::reconstruct(&host);
+        let host_particles = reco::reconstruct_collection(&host);
 
         let (s, _) = eng.run_sensor_stage(&ev).unwrap();
         let noisy: Vec<i32> = ev.noisy.iter().map(|&x| x as i32).collect();

@@ -17,4 +17,5 @@ pub mod devmem;
 pub mod executor;
 
 pub use artifact::{ArtifactRecord, Manifest, TensorSpec};
+pub use devmem::{downloaded_planes, DeviceEvent, DeviceEventPool, ResidentEvent};
 pub use executor::{Engine, ExecTiming, ParticleStageOut, SensorStageOut};

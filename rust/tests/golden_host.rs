@@ -57,7 +57,7 @@ fn seeds_match_python_reference() {
     let Some((ev, g)) = golden_event() else { return };
     let mut col = ev.to_collection::<AoS>();
     calib::calibrate_collection(&mut col);
-    let particles = reco::reconstruct(&col);
+    let particles = reco::reconstruct_collection(&col);
     let seeds = g.tensor("seeds").as_i32();
     let want: Vec<usize> = seeds
         .iter()
@@ -74,7 +74,7 @@ fn window_sums_match_python_reference() {
     let Some((ev, g)) = golden_event() else { return };
     let mut col = ev.to_collection::<SoAVec>();
     calib::calibrate_collection(&mut col);
-    let particles = reco::reconstruct(&col);
+    let particles = reco::reconstruct_collection(&col);
     let sums = g.tensor("sums").as_f32();
     let n = ev.num_sensors();
     let plane = |p: usize, i: usize| sums[p * n + i];
@@ -113,7 +113,7 @@ fn device_gather_equals_host_reco_on_golden() {
     let Some((ev, g)) = golden_event() else { return };
     let mut col = ev.to_collection::<SoAVec>();
     calib::calibrate_collection(&mut col);
-    let host = reco::reconstruct(&col);
+    let host = reco::reconstruct_collection(&col);
 
     let sig: Vec<f32> = g.tensor("sig").as_f32();
     let dev = reco::particles_from_planes::<SoAVec>(

@@ -6,12 +6,33 @@
 //! monotone. This is the deep-coverage test for the holder machinery
 //! (resize/insert/erase interactions with planes, blobs, and size tags).
 
+#![allow(dead_code)] // the generated typed twin exposes more than the tests touch
+
 use std::sync::Arc;
 
-use marionette::marionette::collection::RawCollection;
+use marionette::marionette::collection::{InfoOf, RawCollection};
+use marionette::marionette::interface::AttachError;
 use marionette::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
 use marionette::marionette::schema::{FieldMeta, Schema};
+use marionette::marionette_collection;
 use marionette::util::prop::Cases;
+
+marionette_collection! {
+    /// Typed twin of the property-test schema: its generated view
+    /// attaches to the runtime-built `RawCollection`s below (structural
+    /// schema equality), so view reads can be checked against the
+    /// owned accessors over randomized programs.
+    pub collection PropCollection, object PropObj, record PropRecord,
+        columns PropColumns, refs PropRefP / PropMutP,
+        views PropView / PropViewMut,
+        props PropProps, schema "prop" {
+        per_item e / set_e / E: f32;
+        per_item flag / set_flag / FLAG: u8;
+        array arr / set_arr / ARR: [i32; 3];
+        jagged cells / set_cells / CELLS: u64, prefix u32;
+        global g / set_g / G: u64;
+    }
+}
 
 /// Vec-based model of the schema used below.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -242,6 +263,85 @@ fn transfer_after_program_roundtrips() {
         marionette::marionette::transfer::copy_collection(&blocked, &mut back);
         check(&m, &back, &metas).map_err(|e| format!("soablob: {e}"))
     });
+}
+
+/// Satellite invariant of the interface layer: after an arbitrary
+/// operation program, the borrowed typed view's reads equal the owned
+/// accessors' reads on every field kind — on all four layouts.
+fn check_view_equals_owned<L: Layout>(program: &[u64]) -> Result<(), String>
+where
+    InfoOf<L>: Default,
+{
+    let (s, metas) = schema();
+    let mut m = Model::default();
+    let mut c = RawCollection::<L>::new(s);
+    for &op in program {
+        apply(op, &mut m, &mut c, &metas);
+    }
+    let v = PropView::attach(&c).map_err(|e| format!("attach failed: {e}"))?;
+    if v.len() != c.len() {
+        return Err(format!("view len {} != owned len {}", v.len(), c.len()));
+    }
+    if v.g() != c.get_global::<u64>(metas.global) {
+        return Err("view global mismatch".into());
+    }
+    for i in 0..c.len() {
+        if v.e(i) != c.get::<f32>(metas.e, i) {
+            return Err(format!("view e[{i}] mismatch"));
+        }
+        if v.flag(i) != c.get::<u8>(metas.flag, i) {
+            return Err(format!("view flag[{i}] mismatch"));
+        }
+        for k in 0..3 {
+            if v.arr(i, k) != c.get_k::<i32>(metas.arr, i, k) {
+                return Err(format!("view arr[{i}][{k}] mismatch"));
+            }
+        }
+        let vj = v.cells(i).to_vec();
+        let oj = c.jagged_view::<u64>(metas.cells, 0, i).to_vec();
+        if vj != oj {
+            return Err(format!("view cells[{i}]: {vj:?} != {oj:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn view_reads_equal_owned_reads_all_layouts() {
+    Cases::new(32).shrinkable("view-owned-equal", 40, |program| {
+        check_view_equals_owned::<SoAVec>(program)?;
+        check_view_equals_owned::<AoS>(program)?;
+        check_view_equals_owned::<SoABlob>(program)?;
+        check_view_equals_owned::<AoSoA<4>>(program)
+    });
+}
+
+/// Attach failure modes are typed errors, never later panics: a
+/// structurally different schema and a dtype-flipped near-miss both
+/// fail cleanly.
+#[test]
+fn view_attach_mismatches_fail_cleanly() {
+    let other = Arc::new(Schema::builder("x").per_item::<f32>("y").build());
+    let c = RawCollection::<SoAVec>::new(other);
+    match PropView::attach(&c) {
+        Err(AttachError::SchemaMismatch { .. }) => {}
+        r => panic!("expected SchemaMismatch, got {:?}", r.err()),
+    }
+
+    let near = Arc::new(
+        Schema::builder("prop")
+            .per_item::<f64>("e") // flipped dtype, otherwise identical
+            .per_item::<u8>("flag")
+            .array::<i32>("arr", 3)
+            .jagged::<u64, u32>("cells")
+            .global::<u64>("g")
+            .build(),
+    );
+    let c = RawCollection::<SoAVec>::new(near);
+    match PropView::attach(&c) {
+        Err(AttachError::DtypeMismatch { field, .. }) => assert_eq!(field, "e"),
+        r => panic!("expected DtypeMismatch, got {:?}", r.err()),
+    }
 }
 
 /// Reusing a dirty destination must fully overwrite previous content.

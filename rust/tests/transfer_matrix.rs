@@ -14,6 +14,8 @@
 //! The schema exercises every field kind: per-item scalars, a
 //! fixed-extent array, a jagged vector (prefix + values), and a global.
 
+#![allow(dead_code)] // the generated typed twin exposes more than the tests touch
+
 use std::sync::Arc;
 
 use marionette::marionette::collection::RawCollection;
@@ -26,6 +28,23 @@ use marionette::marionette::schema::Schema;
 use marionette::marionette::transfer::{
     copy_collection, copy_collection_stats, plan_for, TransferPriority,
 };
+use marionette::marionette_collection;
+
+marionette_collection! {
+    /// Typed twin of the matrix schema: its generated view attaches to
+    /// the runtime-built collections below, so pool-recycled rows can
+    /// be read through the borrowed typed interface.
+    pub collection MatrixCollection, object MatrixObj, record MatrixRecord,
+        columns MatrixColumns, refs MatrixRef / MatrixMut,
+        views MatrixView / MatrixViewMut,
+        props MatrixProps, schema "matrix" {
+        per_item e / set_e / E: f32;
+        per_item t / set_t / T: i32;
+        array sig / set_sig / SIG: [f32; 2];
+        jagged cells / set_cells / CELLS: u64, prefix u32;
+        global ev / set_ev / EV: u64;
+    }
+}
 
 /// The blocked layout with its context still open (macro-friendly).
 type AoSoA4<C> = AoSoA<4, C>;
@@ -258,6 +277,18 @@ fn recycled_destination_with_stale_capacity_roundtrips() {
     check_equal(&small, &dst);
     assert_eq!(dst.len(), 2);
     assert_eq!(dst.values_len(0), 0);
+
+    // The same stale-capacity row read *through the borrowed typed
+    // view*: the view's attach-time length tracks the shrunken item
+    // count, its reads match the owned accessors, and the recycled
+    // block's stale tail never leaks into a jagged range.
+    let v = MatrixView::attach(&dst).expect("view attaches to the pooled store");
+    assert_eq!(v.len(), 2);
+    assert_eq!(v.e(0), 41.5);
+    assert_eq!(v.e(1), -7.25);
+    assert_eq!(v.cells(0).len(), 0);
+    assert_eq!(v.cells(1).len(), 0);
+    assert_eq!(v.ev(), 0);
 }
 
 /// The coalescing claim in isolation: same-layout blob pairs use fewer

@@ -3,7 +3,9 @@
 //! Hard assertions with a generous threshold (machines under test load
 //! are noisy; the tight comparison lives in `benches/zero_cost.rs` and
 //! EXPERIMENTS.md §ZC): Marionette accessors must stay within 1.6x of
-//! the handwritten equivalent on the matched layouts.
+//! the handwritten equivalent on the matched layouts, and the borrowed
+//! typed views must stay within the same bound of the owned accessors
+//! (the interface layer's attach-once, raw-offset-reads claim).
 
 use marionette::bench_support::figures::zero_cost;
 use marionette::bench_support::{rel_diff, Harness};
@@ -19,7 +21,14 @@ fn marionette_is_zero_cost_within_noise() {
             .find(|s| s.label == label)
             .unwrap_or_else(|| panic!("missing series {label}"))
     };
-    for (hw, m) in [("hw-aos", "m-aos"), ("hw-soa", "m-soavec")] {
+    for (hw, m) in [
+        ("hw-aos", "m-aos"),
+        ("hw-soa", "m-soavec"),
+        // Views vs owned accessors: the accessor series are the apples-
+        // to-apples baselines (same per-element loop, owned storage).
+        ("m-aos-accessor", "m-aos-view"),
+        ("m-soavec-accessor", "m-soavec-view"),
+    ] {
         let hws = series(hw);
         let ms = series(m);
         for ((op, a), (_, b)) in hws.points.iter().zip(&ms.points) {
