@@ -7,6 +7,7 @@
 //! text tables + CSV for plotting.
 
 pub mod figures;
+pub mod report;
 
 use std::time::{Duration, Instant};
 

@@ -7,10 +7,13 @@
 //!   zero-cost             the zero-cost-abstraction table
 //!   transfers             the transfer matrix (§VII)
 //!   ablation              layout / fusion / routing ablations
+//!   bench-report [...]    emit machine-readable BENCH_run.json, gate
+//!                         against a committed baseline (DESIGN.md §7)
 //!   doctor                environment + artifact checks
 //!
 //! Shared flags: --quick (small grids, short harness), --grid N,
 //! --events N, --particles a,b,c, --no-device, --csv NAME.
+//! bench-report flags: --out PATH, --gate BASELINE, --write-baseline.
 //!
 //! Argument parsing is hand-rolled (clap is not in the vendored set).
 
@@ -36,6 +39,9 @@ struct Args {
     csv: Option<String>,
     policy: Option<String>,
     workers: Option<usize>,
+    out: Option<String>,
+    gate: Option<String>,
+    write_baseline: bool,
 }
 
 fn parse_args() -> Result<Args> {
@@ -54,6 +60,9 @@ fn parse_args() -> Result<Args> {
             "--workers" => args.workers = Some(val("--workers")?.parse()?),
             "--csv" => args.csv = Some(val("--csv")?),
             "--policy" => args.policy = Some(val("--policy")?),
+            "--out" => args.out = Some(val("--out")?),
+            "--gate" => args.gate = Some(val("--gate")?),
+            "--write-baseline" => args.write_baseline = true,
             "--particles" => {
                 args.particles = Some(
                     val("--particles")?
@@ -146,6 +155,58 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    use marionette::bench_support::report::{self, BenchReport, ReportOpts};
+
+    let mut opts = if args.quick { ReportOpts::quick() } else { ReportOpts::full() };
+    if let Some(g) = args.grid {
+        opts.grid = g;
+    }
+    if let Some(e) = args.events {
+        opts.events = e;
+    }
+    if let Some(w) = args.workers {
+        opts.workers = vec![w];
+    }
+
+    println!(
+        "collecting BENCH report ({} profile, grid {}x{}) ...",
+        if opts.quick { "quick" } else { "full" },
+        opts.grid,
+        opts.grid
+    );
+    let run = report::collect(&opts)?;
+    println!("{}", run.render());
+
+    let out = std::path::PathBuf::from(args.out.as_deref().unwrap_or("BENCH_run.json"));
+    run.save(&out)?;
+    println!("wrote {}", out.display());
+
+    if args.write_baseline {
+        let base_path = std::path::PathBuf::from("BENCH_baseline.json");
+        run.save(&base_path)?;
+        println!("baseline updated -> {} (commit it)", base_path.display());
+    }
+
+    if let Some(gate) = &args.gate {
+        let baseline = BenchReport::load(std::path::Path::new(gate))?;
+        let failures = report::compare(&run, &baseline);
+        if failures.is_empty() {
+            println!(
+                "gate vs {gate}: OK ({} series, baseline provenance {})",
+                baseline.series.len(),
+                baseline.provenance
+            );
+        } else {
+            for f in &failures {
+                eprintln!("GATE FAIL: {f}");
+            }
+            bail!("{} BENCH regression(s) vs {gate}", failures.len());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_doctor() -> Result<()> {
     println!("PJRT: {}", client::device_description());
     match Engine::load_default() {
@@ -198,15 +259,17 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
+        "bench-report" => cmd_bench_report(&args),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!(
                 "repro <command> [flags]\n\
                  commands: demo | run-pipeline | fig1 | fig2 | zero-cost | \
-                 transfers | ablation | doctor\n\
+                 transfers | ablation | bench-report | doctor\n\
                  flags: --quick --grid N --grids a,b,c --events N \
                  --particles a,b,c --workers N --policy host|device|auto \
-                 --no-device --csv NAME"
+                 --no-device --csv NAME\n\
+                 bench-report: --out PATH --gate BASELINE --write-baseline"
             );
             Ok(())
         }

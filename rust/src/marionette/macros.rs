@@ -190,9 +190,8 @@ macro_rules! marionette_collection {
         rest=[]
     ) => {
         /// Property descriptions of the collection: compile-time
-        /// [`FieldMeta`](crate::marionette::schema::FieldMeta) constants
-        /// (all offsets const-folded) plus the runtime
-        /// [`Schema`](crate::marionette::schema::Schema).
+        /// `FieldMeta` constants (all offsets const-folded) plus the
+        /// runtime `Schema`.
         pub struct $Props;
 
         #[allow(dead_code)]
@@ -388,7 +387,7 @@ macro_rules! marionette_collection {
 
             /// Borrowed typed view over this collection's own storage
             /// (the owned special case of attaching to any
-            /// [`PlaneSource`](crate::marionette::interface::PlaneSource)).
+            /// `PlaneSource`).
             ///
             /// # Panics
             /// If the collection's memory context is not host-readable.
@@ -443,7 +442,7 @@ macro_rules! marionette_collection {
             }
 
             /// Copy from a collection of any other layout/context
-            /// through the cached [`TransferPlan`]: the ladder is
+            /// through the cached `TransferPlan`: the ladder is
             /// resolved once per (schema, layouts, contexts) tuple and
             /// reused by every later copy.
             ///
@@ -452,8 +451,6 @@ macro_rules! marionette_collection {
             /// source; this shim remains for compatibility and routes
             /// through the identical cached plan (route-equivalence is
             /// pinned by `transfer.rs` unit tests).
-            ///
-            /// [`TransferPlan`]: crate::marionette::transfer::TransferPlan
             pub fn transfer_from<L2: $crate::marionette::layout::Layout>(
                 &mut self,
                 src: &$Col<L2>,

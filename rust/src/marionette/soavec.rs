@@ -176,7 +176,7 @@ impl<C: MemoryContext> LayoutHolder for SoAVecHolder<C> {
         for m in metas {
             let esz = m.size as usize;
             let buf = &mut self.bufs[m.index as usize];
-            for k in 0..m.extent as usize 	{
+            for k in 0..m.extent as usize {
                 let plane = k * cap;
                 unsafe {
                     let base = buf.as_mut_ptr();

@@ -1,0 +1,107 @@
+//! Tier-1 guard for the BENCH trajectory: the reporter's JSON schema
+//! round-trips through the in-tree parser, a fresh quick run stays
+//! within tolerance of the committed `BENCH_baseline.json`, and the
+//! gate demonstrably fails when a series degrades beyond tolerance.
+
+use std::path::PathBuf;
+
+use marionette::bench_support::report::{
+    self, BenchReport, ReportOpts, REQUIRED_SERIES, SERIES_PIPELINE, SERIES_PLAN_CACHE,
+    SERIES_TRANSFER, SERIES_VIEW_RATIO,
+};
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json")
+}
+
+/// Emit a `BENCH_*.json`, re-parse it, and assert the required series,
+/// keys and units are present with finite values.
+#[test]
+fn bench_json_schema_round_trips() {
+    let run = report::collect(&ReportOpts::quick()).unwrap();
+    let path = std::env::temp_dir().join("BENCH_roundtrip_test.json");
+    run.save(&path).unwrap();
+    let parsed = BenchReport::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    parsed.validate().unwrap();
+    assert!(parsed.quick);
+    assert_eq!(parsed.provenance, "measured");
+    for name in REQUIRED_SERIES {
+        let s = parsed.series(name).unwrap_or_else(|| panic!("missing series {name}"));
+        assert!(!s.points.is_empty(), "series {name} has no points");
+        for p in &s.points {
+            assert!(p.value.is_finite(), "{name}/{}: {}", p.label, p.value);
+            assert!(p.value >= 0.0, "{name}/{}: negative", p.label);
+        }
+    }
+    assert_eq!(parsed.series(SERIES_PLAN_CACHE).unwrap().unit, "ratio");
+    assert_eq!(parsed.series(SERIES_TRANSFER).unwrap().unit, "bytes_per_sec");
+    assert_eq!(parsed.series(SERIES_PIPELINE).unwrap().unit, "events_per_sec");
+    assert_eq!(parsed.series(SERIES_VIEW_RATIO).unwrap().unit, "ratio");
+
+    // The trajectory's headline points are all present.
+    let pipeline = parsed.series(SERIES_PIPELINE).unwrap();
+    assert!(pipeline.points.iter().any(|p| p.label == "workers=1"));
+    let transfer = parsed.series(SERIES_TRANSFER).unwrap();
+    for route in ["soavec->aos", "host->staging", "planned-exec", "raw-memcpy"] {
+        assert!(
+            transfer.points.iter().any(|p| p.label == route),
+            "transfer series missing route {route}"
+        );
+    }
+}
+
+/// A fresh quick run must stay within the committed baseline's
+/// per-series tolerances — this is the tier-1 regression gate.
+#[test]
+fn quick_run_within_committed_baseline() {
+    let baseline = BenchReport::load(&baseline_path()).unwrap();
+    let run = report::collect(&ReportOpts::quick()).unwrap();
+    let failures = report::compare(&run, &baseline);
+    assert!(failures.is_empty(), "BENCH regressions vs baseline:\n{}", failures.join("\n"));
+}
+
+/// The gate has teeth: degrade each gated series beyond its tolerance
+/// and the comparison must report a regression.
+#[test]
+fn gate_fails_on_degraded_series() {
+    let baseline = BenchReport::load(&baseline_path()).unwrap();
+
+    // Higher-is-better series collapses.
+    let mut bad = baseline.clone();
+    let s = bad
+        .series
+        .iter_mut()
+        .find(|s| s.name == SERIES_PLAN_CACHE)
+        .expect("baseline has plan-cache series");
+    for p in &mut s.points {
+        p.value *= 0.1;
+    }
+    let failures = report::compare(&bad, &baseline);
+    assert!(
+        failures.iter().any(|f| f.contains(SERIES_PLAN_CACHE)),
+        "degraded hit rate not flagged: {failures:?}"
+    );
+
+    // Lower-is-better series balloons.
+    let mut slow = baseline.clone();
+    let s = slow
+        .series
+        .iter_mut()
+        .find(|s| s.name == SERIES_VIEW_RATIO)
+        .expect("baseline has view-ratio series");
+    for p in &mut s.points {
+        p.value *= 10.0;
+    }
+    let failures = report::compare(&slow, &baseline);
+    assert!(
+        failures.iter().any(|f| f.contains(SERIES_VIEW_RATIO)),
+        "degraded view ratio not flagged: {failures:?}"
+    );
+
+    // A vanished series is a regression too.
+    let mut missing = baseline.clone();
+    missing.series.retain(|s| s.name != SERIES_PIPELINE);
+    assert!(!report::compare(&missing, &baseline).is_empty());
+}
