@@ -35,6 +35,14 @@ cargo test -q --test memory_conformance
 cargo test -q --test transfer_matrix
 cargo test -q --test pipeline_integration
 cargo test -q --test bench_report_guard
+cargo test -q --test coordinator_scale
+
+echo "== saturate-smoke: worker scaling + tail latency =="
+# Drives the sharded coordinator at 1/2/4 host workers; the command
+# itself fails if events/s at the highest worker count drops below
+# 0.8x the single-worker rate (catastrophic scaling loss).
+cargo run --release -- saturate --events 20000 --workers 1,2,4 --quick \
+    --out BENCH_saturate.json
 
 echo "== bench-smoke: reporter --quick, gated vs BENCH_baseline.json =="
 # Emits BENCH_run.json (machine-readable trajectory, DESIGN.md §7) and

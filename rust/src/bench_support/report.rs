@@ -1,9 +1,10 @@
 //! Machine-readable BENCH reporting and regression gating.
 //!
 //! Turns the paper-figure benches into a committed performance
-//! trajectory: [`collect`] measures the four series ROADMAP calls for
+//! trajectory: [`collect`] measures the six series ROADMAP calls for
 //! (plan-cache hit rate, bytes/s per transfer route, events/s per
-//! worker count, view-vs-owned accessor ratios), [`BenchReport::to_json`]
+//! worker count, view-vs-owned accessor ratios, and the saturation
+//! events/s + p99 tail-latency sweep), [`BenchReport::to_json`]
 //! emits them as `BENCH_run.json`, and [`compare`] gates a fresh run
 //! against a committed `BENCH_baseline.json` within per-series
 //! tolerances. The JSON format and the baseline-update policy are
@@ -33,10 +34,24 @@ pub const SERIES_TRANSFER: &str = "transfer_bytes_per_sec";
 pub const SERIES_PIPELINE: &str = "pipeline_events_per_sec";
 /// Borrowed-view time over owned-accessor time (unit `ratio`, lower better).
 pub const SERIES_VIEW_RATIO: &str = "view_accessor_ratio";
+/// Small-event host-path saturation throughput per worker count (unit
+/// `events_per_sec`): many tiny events stress the scheduler and queues
+/// rather than per-event compute (the `repro saturate` sweep).
+pub const SERIES_SATURATION: &str = "saturation_events_per_sec";
+/// p99 end-to-end latency of the saturation sweep per worker count
+/// (unit `microseconds`, lower better; informational — machine noise
+/// makes tail latency a poor hard gate).
+pub const SERIES_SATURATION_P99: &str = "saturation_p99_latency_us";
 
-/// Every report must carry all four series to pass [`BenchReport::validate`].
-pub const REQUIRED_SERIES: [&str; 4] =
-    [SERIES_PLAN_CACHE, SERIES_TRANSFER, SERIES_PIPELINE, SERIES_VIEW_RATIO];
+/// Every report must carry all six series to pass [`BenchReport::validate`].
+pub const REQUIRED_SERIES: [&str; 6] = [
+    SERIES_PLAN_CACHE,
+    SERIES_TRANSFER,
+    SERIES_PIPELINE,
+    SERIES_VIEW_RATIO,
+    SERIES_SATURATION,
+    SERIES_SATURATION_P99,
+];
 
 /// Which direction is an improvement for a series.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -315,16 +330,19 @@ impl ReportOpts {
     }
 }
 
-// Default gate tolerances (DESIGN.md §7). The two machine-independent
-// series gate tightly; the two absolute-throughput series start with a
-// catastrophic-only floor (5% of baseline) until a measured baseline
-// from the CI machine class replaces the seed estimate.
+// Default gate tolerances (DESIGN.md §7) stamped into emitted runs —
+// i.e. the contract the *next* committed baseline will enforce. The
+// machine-independent series gate tightly; throughput series carry the
+// §7 target tolerance of 0.3. (Gating reads the committed baseline's
+// tolerances, so the still-estimated seed baseline keeps its looser
+// catastrophic-only floor until a measured one replaces it.)
 const TOL_HIT_RATE: f64 = 0.10;
 const TOL_VIEW_RATIO: f64 = 0.60; // matches the 1.6x zero-cost guard bound
-const TOL_THROUGHPUT: f64 = 0.95;
+const TOL_THROUGHPUT: f64 = 0.30;
 
-/// Measure all four required series and return a validated report.
+/// Measure all six required series and return a validated report.
 pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
+    let (sat_tp, sat_p99) = saturation_series(opts)?;
     let report = BenchReport {
         quick: opts.quick,
         provenance: "measured".to_string(),
@@ -333,6 +351,8 @@ pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
             transfer_series(opts)?,
             pipeline_series(opts)?,
             view_ratio_series(opts)?,
+            sat_tp,
+            sat_p99,
         ],
     };
     report.validate()?;
@@ -424,6 +444,56 @@ fn pipeline_series(opts: &ReportOpts) -> Result<BenchSeries> {
         tolerance: TOL_THROUGHPUT,
         points,
     })
+}
+
+/// The saturation sweep: many *small* (32×32) host-only events per
+/// worker count, so scheduler dispatch, gate backpressure, and plan/
+/// stage-pool lookups dominate per-event compute. Returns the
+/// (events/s, p99 latency µs) series pair — the `repro saturate`
+/// command runs the same sweep standalone at larger event counts.
+pub fn saturation_series(opts: &ReportOpts) -> Result<(BenchSeries, BenchSeries)> {
+    let events = if opts.quick { 300 } else { 2000 };
+    let mut tp = Vec::new();
+    let mut p99 = Vec::new();
+    for &w in &opts.workers {
+        let rep = run_saturation(32, events, w)?;
+        tp.push(BenchPoint { label: format!("workers={w}"), value: rep.events_per_sec() });
+        p99.push(BenchPoint {
+            label: format!("workers={w}"),
+            value: rep.metrics.e2e_p99.as_micros() as f64,
+        });
+    }
+    Ok((
+        BenchSeries {
+            name: SERIES_SATURATION.to_string(),
+            unit: "events_per_sec".to_string(),
+            better: Better::Higher,
+            tolerance: TOL_THROUGHPUT,
+            points: tp,
+        },
+        BenchSeries {
+            name: SERIES_SATURATION_P99.to_string(),
+            unit: "microseconds".to_string(),
+            better: Better::Lower,
+            tolerance: 0.0, // informational: tail latency is machine noise
+            points: p99,
+        },
+    ))
+}
+
+/// One host-only saturation run (shared by [`saturation_series`] and
+/// `repro saturate`).
+pub fn run_saturation(
+    grid: usize,
+    events: usize,
+    workers: usize,
+) -> Result<crate::coordinator::PipelineReport> {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(grid, grid, 4), events);
+    cfg.device = false;
+    cfg.policy = RoutePolicy::HostOnly;
+    cfg.host_workers = workers;
+    cfg.seed = 20260808;
+    run_pipeline(&cfg)
 }
 
 /// Borrowed-view cost over owned-accessor cost per layout, from the

@@ -44,6 +44,10 @@ pub struct PipelineConfig {
     pub host_workers: usize,
     /// Enable the device worker.
     pub device: bool,
+    /// Device worker count. Each worker owns its own `runtime::Engine`
+    /// (the engine is `!Send`), event pool, and warmed plans; the
+    /// router spills on the *aggregate* queue depth across workers.
+    pub device_workers: usize,
     /// Routing policy.
     pub policy: RoutePolicy,
     /// Bounded queue depth between stages (backpressure).
@@ -72,6 +76,7 @@ impl PipelineConfig {
                 .map(|n| (n.get() / 2).max(1))
                 .unwrap_or(2),
             device: true,
+            device_workers: 1,
             policy: RoutePolicy::default(),
             queue_depth: 128,
             max_batch: 16,

@@ -99,6 +99,11 @@ pub struct PipelineMetrics {
     /// Net inner allocations of the stage pool's counting heap: flat in
     /// steady state (the zero-alloc-per-event invariant).
     pub pool_live_allocs: AtomicI64,
+    /// Work-stealing scheduler counters of the per-run host pool
+    /// (stored once at end of run from `ThreadPool::stats`).
+    pub sched_injected: AtomicUsize,
+    pub sched_local_pushes: AtomicUsize,
+    pub sched_steals: AtomicUsize,
     pub host_latency: LatencyHisto,
     pub device_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
@@ -118,6 +123,13 @@ impl PipelineMetrics {
         self.pool_held_bytes.store(b.held_bytes, Ordering::Relaxed);
         self.pool_outstanding.store(b.outstanding, Ordering::Relaxed);
         self.pool_live_allocs.store(pool.live_allocs() as i64, Ordering::Relaxed);
+    }
+
+    /// Record the host pool's scheduler counters (end of run).
+    pub fn set_sched_counters(&self, s: &crate::util::pool::ThreadPoolStats) {
+        self.sched_injected.store(s.injected, Ordering::Relaxed);
+        self.sched_local_pushes.store(s.local_pushes, Ordering::Relaxed);
+        self.sched_steals.store(s.steals, Ordering::Relaxed);
     }
 }
 
@@ -153,7 +165,17 @@ pub struct MetricsSnapshot {
     pub host_mean: Duration,
     pub device_mean: Duration,
     pub e2e_mean: Duration,
+    pub e2e_p50: Duration,
+    pub e2e_p95: Duration,
     pub e2e_p99: Duration,
+    /// Scheduler counters of the host worker pool (zero on the shared
+    /// global pool path or when no host work ran).
+    pub sched_injected: usize,
+    pub sched_local_pushes: usize,
+    pub sched_steals: usize,
+    /// Per-shard plan-cache counters at snapshot time (process-wide).
+    pub plan_cache_shards: [crate::marionette::transfer::PlanCacheShardStats;
+        crate::marionette::transfer::PLAN_CACHE_SHARDS],
 }
 
 impl PipelineMetrics {
@@ -189,7 +211,13 @@ impl PipelineMetrics {
             host_mean: self.host_latency.mean(),
             device_mean: self.device_latency.mean(),
             e2e_mean: self.e2e_latency.mean(),
+            e2e_p50: self.e2e_latency.quantile(0.50),
+            e2e_p95: self.e2e_latency.quantile(0.95),
             e2e_p99: self.e2e_latency.quantile(0.99),
+            sched_injected: self.sched_injected.load(Ordering::Relaxed),
+            sched_local_pushes: self.sched_local_pushes.load(Ordering::Relaxed),
+            sched_steals: self.sched_steals.load(Ordering::Relaxed),
+            plan_cache_shards: crate::marionette::transfer::plan_cache_shard_stats(),
         }
     }
 }
@@ -204,7 +232,9 @@ impl MetricsSnapshot {
              pool: stage hits={} misses={} | bytes hits={} misses={} trims={} \
              held={} outstanding={} live-allocs={}\n\
              device: batches={} upload={:?} execute={:?} download={:?}\n\
-             latency: host-mean={:?} device-mean={:?} e2e-mean={:?} e2e-p99={:?}",
+             latency: host-mean={:?} device-mean={:?} e2e-mean={:?} \
+             e2e-p50={:?} e2e-p95={:?} e2e-p99={:?}\n\
+             sched: injected={} local={} steals={} | cache-shards hot={}/{}",
             self.events_in,
             self.events_host,
             self.events_device,
@@ -229,7 +259,14 @@ impl MetricsSnapshot {
             self.host_mean,
             self.device_mean,
             self.e2e_mean,
+            self.e2e_p50,
+            self.e2e_p95,
             self.e2e_p99,
+            self.sched_injected,
+            self.sched_local_pushes,
+            self.sched_steals,
+            self.plan_cache_shards.iter().filter(|s| s.hits + s.misses > 0).count(),
+            self.plan_cache_shards.len(),
         )
     }
 }

@@ -2,16 +2,20 @@
 //!
 //! * Source: synthetic event stream (`edm::generator`), routed as it is
 //!   produced.
-//! * Host workers: the CPU path — fill a Marionette SoA collection,
-//!   calibrate, reconstruct, stage the particle collection into the
-//!   handwritten-AoS output form through a cached [`TransferPlan`], fill
-//!   back (exactly the Figure 1+2 CPU pipeline).
-//! * Device worker: one dedicated thread owning a `runtime::Engine`
-//!   (PJRT handles are single-threaded); drains its bounded queue
-//!   through the bucket [`Batcher`], stages each event through its
-//!   pinned staging buffer (DMA-accounted, DESIGN.md §2), runs the fused
-//!   `full_event` executable, gathers particles from the returned
-//!   planes, fills back.
+//! * Host workers: the CPU path — one spawned task per event on a
+//!   per-run work-stealing [`ThreadPool`] (no shared receiver mutex; an
+//!   in-flight gate provides the `queue_depth` backpressure) — fill a
+//!   Marionette SoA collection, calibrate, reconstruct, stage the
+//!   particle collection into the handwritten-AoS output form through a
+//!   cached [`TransferPlan`], fill back (exactly the Figure 1+2 CPU
+//!   pipeline).
+//! * Device workers: `PipelineConfig::device_workers` dedicated
+//!   threads, each owning its own `runtime::Engine` (PJRT handles are
+//!   single-threaded), bounded queue, bucket [`Batcher`], and pinned
+//!   staging buffer (DMA-accounted, DESIGN.md §2); each stages its
+//!   events, runs the fused `full_event` executable, gathers particles
+//!   from the returned planes, fills back. The router spills on the
+//!   aggregate queue depth across workers.
 //! * Collector: aggregates per-event results + metrics.
 //!
 //! Transfer strategy is **compiled once**: workers warm the staging
@@ -41,7 +45,7 @@
 //! [`PoolContext`]: crate::marionette::memory::PoolContext
 
 use std::sync::mpsc::{channel, sync_channel};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -57,7 +61,7 @@ use crate::marionette::memory::{
 };
 use crate::marionette::transfer;
 use crate::runtime::Engine;
-use crate::util::pool::{ObjectPool, ObjectPoolStats, Recycler};
+use crate::util::pool::{ObjectPool, ObjectPoolStats, Recycler, ThreadPool};
 
 use super::batcher::Batcher;
 use super::config::PipelineConfig;
@@ -123,19 +127,14 @@ pub type StageCtx = PoolContext<CountingContext>;
 /// The pooled per-event staging destination workers draw and return.
 pub type StagedParticles = ParticleCollection<AoS<StageCtx>>;
 
-/// Shared pool of per-event staging destinations: an object pool of
-/// warm [`StagedParticles`] collections whose storage comes from one
-/// recycling byte pool. Checkouts return on drop (capacity intact), so
-/// after warmup neither level touches the heap again.
-pub struct StagePool {
+/// One shard of the stage pool: its own byte pool + collection pool.
+struct StageShard {
     bytes: PoolInfo<CountingContext>,
     collections: Arc<ObjectPool<StagedParticles>>,
 }
 
-impl StagePool {
-    /// A fresh, private pool (tests; production runs share
-    /// [`StagePool::shared`] so warmup amortises across runs).
-    pub fn new() -> Arc<StagePool> {
+impl StageShard {
+    fn new() -> StageShard {
         let bytes = PoolInfo(Pool::<CountingContext>::with_inner(CountingInfo::default()));
         let info = bytes.clone();
         // Fluent build of the pooled staging destinations: the AoS
@@ -146,39 +145,106 @@ impl StagePool {
                 .context(info.clone())
                 .finish()
         });
-        Arc::new(StagePool { bytes, collections })
+        StageShard { bytes, collections }
+    }
+}
+
+/// Shared pool of per-event staging destinations: sharded object pools
+/// of warm [`StagedParticles`] collections, each shard over its own
+/// recycling byte pool. Threads hash onto a shard (DESIGN.md §8), so
+/// concurrent workers never contend on one checkout mutex; checkouts
+/// return on drop (capacity intact), so after warmup neither level
+/// touches the heap again. Stats aggregate across shards.
+pub struct StagePool {
+    shards: Vec<StageShard>,
+}
+
+impl StagePool {
+    /// A fresh, private single-shard pool (tests want deterministic
+    /// per-thread steady state; production runs share
+    /// [`StagePool::shared`] so warmup amortises across runs).
+    pub fn new() -> Arc<StagePool> {
+        StagePool::with_shards(1)
+    }
+
+    /// A pool with `n` shards (one per expected concurrent worker).
+    pub fn with_shards(n: usize) -> Arc<StagePool> {
+        Arc::new(StagePool { shards: (0..n.max(1)).map(|_| StageShard::new()).collect() })
     }
 
     /// The process-wide stage pool (the default when
-    /// `PipelineConfig::stage_pool` is `None`).
+    /// `PipelineConfig::stage_pool` is `None`): one shard per expected
+    /// concurrent worker, capped at 8.
     pub fn shared() -> Arc<StagePool> {
         static POOL: OnceLock<Arc<StagePool>> = OnceLock::new();
-        POOL.get_or_init(StagePool::new).clone()
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+            StagePool::with_shards(n.min(8))
+        })
+        .clone()
     }
 
-    /// Draw a staging collection; it checks back in on drop.
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// This thread's shard (stable per thread: hashed thread id).
+    fn shard(&self) -> &StageShard {
+        if self.shards.len() == 1 {
+            return &self.shards[0];
+        }
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Draw a staging collection from this thread's shard; it checks
+    /// back in on drop.
     pub fn checkout(&self) -> Recycler<StagedParticles> {
-        self.collections.clone().checkout()
+        self.shard().collections.clone().checkout()
     }
 
-    /// Byte-pool counters (hits/misses/trims/held/outstanding).
+    /// Byte-pool counters (hits/misses/trims/held/outstanding), summed
+    /// over the shards.
     pub fn byte_stats(&self) -> PoolSnapshot {
-        self.bytes.0.stats()
+        let mut s = PoolSnapshot::default();
+        for sh in &self.shards {
+            let b = sh.bytes.0.stats();
+            s.hits += b.hits;
+            s.misses += b.misses;
+            s.returns += b.returns;
+            s.trims += b.trims;
+            s.outstanding += b.outstanding;
+            s.held_bytes += b.held_bytes;
+        }
+        s
     }
 
-    /// Collection-pool counters (checkout hits/misses/returns).
+    /// Collection-pool counters (checkout hits/misses/returns), summed
+    /// over the shards.
     pub fn collection_stats(&self) -> ObjectPoolStats {
-        self.collections.stats()
+        let mut s = ObjectPoolStats::default();
+        for sh in &self.shards {
+            let c = sh.collections.stats();
+            s.hits += c.hits;
+            s.misses += c.misses;
+            s.returns += c.returns;
+            s.dropped += c.dropped;
+        }
+        s
     }
 
-    /// Net allocations of the inner counting heap: flat in steady state.
+    /// Net allocations of the inner counting heaps: flat in steady state.
     pub fn live_allocs(&self) -> isize {
-        self.bytes.0.inner().0.live_allocs()
+        self.shards.iter().map(|sh| sh.bytes.0.inner().0.live_allocs()).sum()
     }
 
-    /// The byte-pool context info (for building extra pooled storage).
+    /// This thread's shard's byte-pool context info (for building extra
+    /// pooled storage).
     pub fn byte_info(&self) -> &PoolInfo<CountingContext> {
-        &self.bytes
+        &self.shard().bytes
     }
 }
 
@@ -253,6 +319,192 @@ pub fn process_device_staged<L: Layout>(
     Ok((back.data.len(), energy, timing, stats.bytes))
 }
 
+/// Bounded-in-flight gate for the host path: the source acquires one
+/// permit per dispatched task, the task's RAII permit releases on
+/// completion (a panicking task cannot leak its permit). This replaces
+/// the old bounded host channel's backpressure now that host tasks go
+/// straight to the work-stealing pool.
+struct Gate {
+    state: Mutex<usize>,
+    cv: Condvar,
+    limit: usize,
+}
+
+impl Gate {
+    fn new(limit: usize) -> Arc<Gate> {
+        Arc::new(Gate { state: Mutex::new(0), cv: Condvar::new(), limit: limit.max(1) })
+    }
+
+    fn acquire(self: &Arc<Gate>) -> GatePermit {
+        let mut g = self.state.lock().unwrap();
+        while *g >= self.limit {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g += 1;
+        GatePermit(self.clone())
+    }
+}
+
+struct GatePermit(Arc<Gate>);
+
+impl Drop for GatePermit {
+    fn drop(&mut self) {
+        let mut g = self.0.state.lock().unwrap();
+        *g -= 1;
+        drop(g);
+        self.0.cv.notify_one();
+    }
+}
+
+/// Body of one device worker thread: owns its own `Engine` (PJRT
+/// handles are single-threaded), event staging state, and `Batcher`;
+/// drains its own bounded queue. On engine-load failure it degrades to
+/// a host-path drain (the router already committed events here); on a
+/// per-event device error it falls back to the host path for that
+/// event.
+#[allow(clippy::too_many_arguments)]
+fn device_worker_loop(
+    dev_rx: std::sync::mpsc::Receiver<Task>,
+    tx: std::sync::mpsc::Sender<EventResult>,
+    metrics: Arc<PipelineMetrics>,
+    gauge: QueueGauge,
+    max_batch: usize,
+    warm_buckets: Vec<usize>,
+    pool: Arc<StagePool>,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let engine = match Engine::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("device worker disabled: {e:#}");
+            // Drain and bounce everything to nowhere: the router
+            // already sent events here, so process on host path.
+            while let Ok(task) = dev_rx.recv() {
+                gauge.dec();
+                let mut staged = pool.checkout();
+                let (n, energy, bytes) = process_host_staged(&task.ev, &mut *staged);
+                let latency = task.enqueued.elapsed();
+                metrics.events_host.fetch_add(1, Relaxed);
+                metrics.particles_out.fetch_add(n, Relaxed);
+                metrics.planned_transfers.fetch_add(1, Relaxed);
+                metrics.planned_bytes.fetch_add(bytes, Relaxed);
+                metrics.e2e_latency.record(latency);
+                let _ = tx.send(EventResult {
+                    event_id: task.ev.event_id,
+                    route: Route::Host,
+                    n_particles: n,
+                    total_energy: energy,
+                    latency,
+                });
+            }
+            return;
+        }
+    };
+    // Pre-compile expected buckets so the first event does not pay XLA
+    // compilation (EXPERIMENTS.md §Perf-4).
+    for b in warm_buckets {
+        if let Err(e) = engine.warm("full_event", b, b) {
+            eprintln!("device warmup for {b}x{b} skipped: {e:#}");
+        }
+    }
+    // Staging state built once at worker startup and reused per event:
+    // the host-side sensor collection and the pinned staging buffer its
+    // planned copy lands in (the DMA-accounted upload analogue,
+    // DESIGN.md §2). The particle output staging is drawn from the
+    // stage pool per event.
+    let staging_info = StagingInfo::default();
+    let mut sensors_host = SensorCollection::<SoAVec>::new();
+    let mut sensors_staged =
+        SensorCollection::<SoAVec<StagingContext>>::new_in(staging_info.clone());
+    let mut warmed_bucket = None;
+    let mut batcher: Batcher<Task> = Batcher::new(max_batch);
+    loop {
+        // Block for one task, then opportunistically drain more.
+        match dev_rx.recv() {
+            Ok(t) => {
+                batcher.push(t.ev.rows, t);
+                while let Ok(t) = dev_rx.try_recv() {
+                    batcher.push(t.ev.rows, t);
+                }
+            }
+            Err(_) if batcher.is_empty() => break,
+            Err(_) => {}
+        }
+        while !batcher.is_empty() {
+            // Peek the upcoming bucket and pre-compile its executable
+            // off the per-event path (warm_buckets may not have covered
+            // it).
+            if let Some(b) = batcher.next_bucket() {
+                if warmed_bucket != Some(b) {
+                    let _ = engine.warm("full_event", b, b);
+                    warmed_bucket = Some(b);
+                }
+            }
+            let batch = batcher.drain_batch();
+            metrics.device_batches.fetch_add(1, Relaxed);
+            for (_, task) in batch {
+                gauge.dec();
+                // Stage the event through the pinned buffer: the cached
+                // host→staging plan reuses the buffer and books the H2D
+                // traffic the upload represents.
+                task.ev.fill_collection(&mut sensors_host);
+                let up = sensors_host.stage_into(&mut sensors_staged);
+                metrics.planned_transfers.fetch_add(1, Relaxed);
+                metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
+                let mut particles_staged = pool.checkout();
+                match process_device_staged(&engine, &task.ev, &mut *particles_staged) {
+                    Ok((n, energy, timing, bytes)) => {
+                        let latency = task.enqueued.elapsed();
+                        metrics.events_device.fetch_add(1, Relaxed);
+                        metrics.particles_out.fetch_add(n, Relaxed);
+                        metrics.planned_transfers.fetch_add(1, Relaxed);
+                        metrics.planned_bytes.fetch_add(bytes, Relaxed);
+                        metrics
+                            .device_upload_us
+                            .fetch_add(timing.upload.as_micros() as u64, Relaxed);
+                        metrics
+                            .device_execute_us
+                            .fetch_add(timing.execute.as_micros() as u64, Relaxed);
+                        metrics
+                            .device_download_us
+                            .fetch_add(timing.download.as_micros() as u64, Relaxed);
+                        metrics.device_latency.record(latency);
+                        metrics.e2e_latency.record(latency);
+                        let _ = tx.send(EventResult {
+                            event_id: task.ev.event_id,
+                            route: Route::Device,
+                            n_particles: n,
+                            total_energy: energy,
+                            latency,
+                        });
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "device failed on event {}: {e:#}; host fallback",
+                            task.ev.event_id
+                        );
+                        let (n, energy, bytes) =
+                            process_host_staged(&task.ev, &mut *particles_staged);
+                        let latency = task.enqueued.elapsed();
+                        metrics.events_host.fetch_add(1, Relaxed);
+                        metrics.particles_out.fetch_add(n, Relaxed);
+                        metrics.planned_transfers.fetch_add(1, Relaxed);
+                        metrics.planned_bytes.fetch_add(bytes, Relaxed);
+                        metrics.e2e_latency.record(latency);
+                        let _ = tx.send(EventResult {
+                            event_id: task.ev.event_id,
+                            route: Route::Host,
+                            n_particles: n,
+                            total_energy: energy,
+                            latency,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Run the full pipeline to completion.
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     // Compile-once setup: register the EDM's specialized rungs and warm
@@ -274,203 +526,44 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     let gauge = QueueGauge::default();
     let router = Router::new(cfg.policy, cfg.device, gauge.clone());
 
-    let (host_tx, host_rx) = sync_channel::<Task>(cfg.queue_depth);
-    let (dev_tx, dev_rx) = sync_channel::<Task>(cfg.queue_depth);
     // Results are unbounded: the collector (this thread) only starts
     // draining after the source loop finishes, so a bounded results
     // channel would deadlock under tight input backpressure.
     let (res_tx, res_rx) = channel::<EventResult>();
-    let host_rx = Arc::new(Mutex::new(host_rx));
 
     let start = Instant::now();
-    let mut workers = Vec::new();
 
-    // Host worker pool.
-    for _ in 0..cfg.host_workers.max(1) {
-        let rx = host_rx.clone();
-        let tx = res_tx.clone();
-        let metrics = metrics.clone();
-        let pool = stage_pool.clone();
-        workers.push(std::thread::spawn(move || {
-            loop {
-                let task = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok(task) = task else { break };
-                // Draw the staging destination from the pool: after
-                // warmup this is a warm collection whose capacity
-                // already fits the workload — the cached plan executes
-                // into it with zero allocations.
-                let mut staged = pool.checkout();
-                let (n, energy, bytes) = process_host_staged(&task.ev, &mut *staged);
-                let latency = task.enqueued.elapsed();
-                use std::sync::atomic::Ordering::Relaxed;
-                metrics.events_host.fetch_add(1, Relaxed);
-                metrics.particles_out.fetch_add(n, Relaxed);
-                metrics.planned_transfers.fetch_add(1, Relaxed);
-                metrics.planned_bytes.fetch_add(bytes, Relaxed);
-                metrics.host_latency.record(latency);
-                metrics.e2e_latency.record(latency);
-                let _ = tx.send(EventResult {
-                    event_id: task.ev.event_id,
-                    route: Route::Host,
-                    n_particles: n,
-                    total_energy: energy,
-                    latency,
-                });
-            }
-        }));
-    }
+    // Host path: a per-run work-stealing pool. Each routed event is one
+    // spawned task (stealable by any idle worker — no shared receiver
+    // mutex); the gate bounds in-flight tasks to `queue_depth`, which is
+    // the backpressure the old bounded host channel provided.
+    let host_pool = ThreadPool::new(cfg.host_workers.max(1));
+    let host_gate = Gate::new(cfg.queue_depth);
 
-    // Device worker: owns the engine, drains through the batcher.
+    // Device path: N worker threads, each owning its own engine and
+    // bounded queue (the engine's PJRT handles are single-threaded).
+    // The router spills on the *aggregate* gauge across workers.
+    let mut dev_txs = Vec::new();
+    let mut dev_threads = Vec::new();
     if cfg.device {
-        let tx = res_tx.clone();
-        let metrics = metrics.clone();
-        let gauge = gauge.clone();
-        let max_batch = cfg.max_batch;
-        let warm_buckets = cfg.warm_buckets.clone();
-        let pool = stage_pool.clone();
-        workers.push(std::thread::spawn(move || {
-            use std::sync::atomic::Ordering::Relaxed;
-            let engine = match Engine::load_default() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("device worker disabled: {e:#}");
-                    // Drain and bounce everything to nowhere: the router
-                    // already sent events here, so process on host path.
-                    while let Ok(task) = dev_rx.recv() {
-                        gauge.dec();
-                        let mut staged = pool.checkout();
-                        let (n, energy, bytes) =
-                            process_host_staged(&task.ev, &mut *staged);
-                        let latency = task.enqueued.elapsed();
-                        metrics.events_host.fetch_add(1, Relaxed);
-                        metrics.particles_out.fetch_add(n, Relaxed);
-                        metrics.planned_transfers.fetch_add(1, Relaxed);
-                        metrics.planned_bytes.fetch_add(bytes, Relaxed);
-                        metrics.e2e_latency.record(latency);
-                        let _ = tx.send(EventResult {
-                            event_id: task.ev.event_id,
-                            route: Route::Host,
-                            n_particles: n,
-                            total_energy: energy,
-                            latency,
-                        });
-                    }
-                    return;
-                }
-            };
-            // Pre-compile expected buckets so the first event does not
-            // pay XLA compilation (EXPERIMENTS.md §Perf-4).
-            for b in warm_buckets {
-                if let Err(e) = engine.warm("full_event", b, b) {
-                    eprintln!("device warmup for {b}x{b} skipped: {e:#}");
-                }
-            }
-            // Staging state built once at worker startup and reused per
-            // event: the host-side sensor collection and the pinned
-            // staging buffer its planned copy lands in (the
-            // DMA-accounted upload analogue, DESIGN.md §2). The particle
-            // output staging is drawn from the stage pool per event.
-            let staging_info = StagingInfo::default();
-            let mut sensors_host = SensorCollection::<SoAVec>::new();
-            let mut sensors_staged =
-                SensorCollection::<SoAVec<StagingContext>>::new_in(staging_info.clone());
-            let mut warmed_bucket = None;
-            let mut batcher: Batcher<Task> = Batcher::new(max_batch);
-            loop {
-                // Block for one task, then opportunistically drain more.
-                match dev_rx.recv() {
-                    Ok(t) => {
-                        batcher.push(t.ev.rows, t);
-                        while let Ok(t) = dev_rx.try_recv() {
-                            batcher.push(t.ev.rows, t);
-                        }
-                    }
-                    Err(_) if batcher.is_empty() => break,
-                    Err(_) => {}
-                }
-                while !batcher.is_empty() {
-                    // Peek the upcoming bucket and pre-compile its
-                    // executable off the per-event path (warm_buckets
-                    // may not have covered it).
-                    if let Some(b) = batcher.next_bucket() {
-                        if warmed_bucket != Some(b) {
-                            let _ = engine.warm("full_event", b, b);
-                            warmed_bucket = Some(b);
-                        }
-                    }
-                    let batch = batcher.drain_batch();
-                    metrics.device_batches.fetch_add(1, Relaxed);
-                    for (_, task) in batch {
-                        gauge.dec();
-                        // Stage the event through the pinned buffer: the
-                        // cached host→staging plan reuses the buffer and
-                        // books the H2D traffic the upload represents.
-                        task.ev.fill_collection(&mut sensors_host);
-                        let up = sensors_host.stage_into(&mut sensors_staged);
-                        metrics.planned_transfers.fetch_add(1, Relaxed);
-                        metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
-                        let mut particles_staged = pool.checkout();
-                        match process_device_staged(&engine, &task.ev, &mut *particles_staged)
-                        {
-                            Ok((n, energy, timing, bytes)) => {
-                                let latency = task.enqueued.elapsed();
-                                metrics.events_device.fetch_add(1, Relaxed);
-                                metrics.particles_out.fetch_add(n, Relaxed);
-                                metrics.planned_transfers.fetch_add(1, Relaxed);
-                                metrics.planned_bytes.fetch_add(bytes, Relaxed);
-                                metrics
-                                    .device_upload_us
-                                    .fetch_add(timing.upload.as_micros() as u64, Relaxed);
-                                metrics
-                                    .device_execute_us
-                                    .fetch_add(timing.execute.as_micros() as u64, Relaxed);
-                                metrics
-                                    .device_download_us
-                                    .fetch_add(timing.download.as_micros() as u64, Relaxed);
-                                metrics.device_latency.record(latency);
-                                metrics.e2e_latency.record(latency);
-                                let _ = tx.send(EventResult {
-                                    event_id: task.ev.event_id,
-                                    route: Route::Device,
-                                    n_particles: n,
-                                    total_energy: energy,
-                                    latency,
-                                });
-                            }
-                            Err(e) => {
-                                eprintln!(
-                                    "device failed on event {}: {e:#}; host fallback",
-                                    task.ev.event_id
-                                );
-                                let (n, energy, bytes) =
-                                    process_host_staged(&task.ev, &mut *particles_staged);
-                                let latency = task.enqueued.elapsed();
-                                metrics.events_host.fetch_add(1, Relaxed);
-                                metrics.particles_out.fetch_add(n, Relaxed);
-                                metrics.planned_transfers.fetch_add(1, Relaxed);
-                                metrics.planned_bytes.fetch_add(bytes, Relaxed);
-                                metrics.e2e_latency.record(latency);
-                                let _ = tx.send(EventResult {
-                                    event_id: task.ev.event_id,
-                                    route: Route::Host,
-                                    n_particles: n,
-                                    total_energy: energy,
-                                    latency,
-                                });
-                            }
-                        }
-                    }
-                }
-            }
-        }));
+        for _ in 0..cfg.device_workers.max(1) {
+            let (dev_tx, dev_rx) = sync_channel::<Task>(cfg.queue_depth);
+            let tx = res_tx.clone();
+            let metrics = metrics.clone();
+            let gauge = gauge.clone();
+            let max_batch = cfg.max_batch;
+            let warm_buckets = cfg.warm_buckets.clone();
+            let pool = stage_pool.clone();
+            dev_txs.push(dev_tx);
+            dev_threads.push(std::thread::spawn(move || {
+                device_worker_loop(dev_rx, tx, metrics, gauge, max_batch, warm_buckets, pool);
+            }));
+        }
     }
-    drop(res_tx);
 
     // Source + router (this thread).
     let mut gen = EventGenerator::new(cfg.event.clone(), cfg.seed);
+    let mut next_dev = 0usize;
     for _ in 0..cfg.n_events {
         let ev = gen.generate();
         metrics.events_in.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -480,25 +573,59 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         }
         let task = Task { ev, enqueued: Instant::now() };
         match d.route {
-            Route::Host => host_tx.send(task).context("host queue closed")?,
+            Route::Host => {
+                let permit = host_gate.acquire();
+                let tx = res_tx.clone();
+                let metrics = metrics.clone();
+                let pool = stage_pool.clone();
+                host_pool.spawn(move || {
+                    let _permit = permit;
+                    // Draw the staging destination from this thread's
+                    // pool shard: after warmup this is a warm collection
+                    // whose capacity already fits the workload — the
+                    // cached plan (a lock-free per-thread handle hit)
+                    // executes into it with zero allocations.
+                    let mut staged = pool.checkout();
+                    let (n, energy, bytes) = process_host_staged(&task.ev, &mut *staged);
+                    let latency = task.enqueued.elapsed();
+                    use std::sync::atomic::Ordering::Relaxed;
+                    metrics.events_host.fetch_add(1, Relaxed);
+                    metrics.particles_out.fetch_add(n, Relaxed);
+                    metrics.planned_transfers.fetch_add(1, Relaxed);
+                    metrics.planned_bytes.fetch_add(bytes, Relaxed);
+                    metrics.host_latency.record(latency);
+                    metrics.e2e_latency.record(latency);
+                    let _ = tx.send(EventResult {
+                        event_id: task.ev.event_id,
+                        route: Route::Host,
+                        n_particles: n,
+                        total_energy: energy,
+                        latency,
+                    });
+                });
+            }
             Route::Device => {
                 gauge.inc();
-                dev_tx.send(task).context("device queue closed")?;
+                let w = next_dev % dev_txs.len();
+                next_dev += 1;
+                dev_txs[w].send(task).context("device queue closed")?;
             }
         }
     }
-    drop(host_tx);
-    drop(dev_tx);
+    drop(res_tx);
+    drop(dev_txs);
 
-    // Collector.
+    // Collector: terminates once every host task and device worker has
+    // dropped its result sender.
     let mut results: Vec<EventResult> = res_rx.iter().collect();
-    for w in workers {
-        w.join().expect("worker panicked");
+    for w in dev_threads {
+        w.join().expect("device worker panicked");
     }
     results.sort_by_key(|r| r.event_id);
     let wall = start.elapsed();
 
     metrics.set_pool_counters(&stage_pool);
+    metrics.set_sched_counters(&host_pool.stats());
     Ok(PipelineReport { wall, results, metrics: metrics.snapshot() })
 }
 

@@ -23,8 +23,11 @@ impl QueueGauge {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Saturating decrement: a stray extra `dec` (e.g. a worker draining
+    /// an event the router never gauged) must not wrap the depth to
+    /// `usize::MAX` and permanently spill all traffic.
     pub fn dec(&self) {
-        self.0.fetch_sub(1, Ordering::Relaxed);
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
     }
 
     pub fn depth(&self) -> usize {
@@ -108,6 +111,27 @@ mod tests {
         assert_eq!(d.route, Route::Host);
         assert!(d.spilled);
         r.gauge().dec();
+        let d = r.decide(512, 512);
+        assert_eq!(d.route, Route::Device);
+        assert!(!d.spilled);
+    }
+
+    /// Regression: `dec` on an empty gauge used to wrap to
+    /// `usize::MAX`, making every later `Auto` decision a spill.
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        let g = QueueGauge::default();
+        g.dec();
+        assert_eq!(g.depth(), 0);
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.depth(), 0);
+        let r = Router::new(
+            RoutePolicy::Auto { min_device_cells: 0, max_device_queue: 2 },
+            true,
+            g,
+        );
         let d = r.decide(512, 512);
         assert_eq!(d.route, Route::Device);
         assert!(!d.spilled);

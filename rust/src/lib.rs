@@ -45,4 +45,4 @@ pub use marionette::prelude;
 // pipeline's shared staging pool (API hygiene; examples and tests use
 // these paths instead of reaching into the module tree).
 pub use coordinator::StagePool;
-pub use util::pool::{ObjectPool, ObjectPoolStats, Recycler, ThreadPool};
+pub use util::pool::{ObjectPool, ObjectPoolStats, Recycler, ThreadPool, ThreadPoolStats};

@@ -9,6 +9,8 @@
 //!   ablation              layout / fusion / routing ablations
 //!   bench-report [...]    emit machine-readable BENCH_run.json, gate
 //!                         against a committed baseline (DESIGN.md §7)
+//!   saturate [...]        host-path saturation sweep over worker
+//!                         counts: events/s + p50/p95/p99 tail latency
 //!   doctor                environment + artifact checks
 //!
 //! Shared flags: --quick (small grids, short harness), --grid N,
@@ -38,7 +40,8 @@ struct Args {
     no_device: bool,
     csv: Option<String>,
     policy: Option<String>,
-    workers: Option<usize>,
+    workers: Option<Vec<usize>>,
+    dev_workers: Option<usize>,
     out: Option<String>,
     gate: Option<String>,
     write_baseline: bool,
@@ -57,7 +60,15 @@ fn parse_args() -> Result<Args> {
             "--no-device" => args.no_device = true,
             "--grid" => args.grid = Some(val("--grid")?.parse()?),
             "--events" => args.events = Some(val("--events")?.parse()?),
-            "--workers" => args.workers = Some(val("--workers")?.parse()?),
+            "--workers" => {
+                args.workers = Some(
+                    val("--workers")?
+                        .split(',')
+                        .map(|s| s.trim().parse())
+                        .collect::<Result<_, _>>()?,
+                )
+            }
+            "--dev-workers" => args.dev_workers = Some(val("--dev-workers")?.parse()?),
             "--csv" => args.csv = Some(val("--csv")?),
             "--policy" => args.policy = Some(val("--policy")?),
             "--out" => args.out = Some(val("--out")?),
@@ -141,8 +152,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         events,
     );
     cfg.device = !args.no_device;
-    if let Some(w) = args.workers {
-        cfg.host_workers = w;
+    if let Some(w) = args.workers.as_ref().and_then(|w| w.first()) {
+        cfg.host_workers = *w;
+    }
+    if let Some(d) = args.dev_workers {
+        cfg.device_workers = d.max(1);
     }
     cfg.policy = match args.policy.as_deref() {
         Some("host") => RoutePolicy::HostOnly,
@@ -165,8 +179,8 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     if let Some(e) = args.events {
         opts.events = e;
     }
-    if let Some(w) = args.workers {
-        opts.workers = vec![w];
+    if let Some(w) = &args.workers {
+        opts.workers = w.clone();
     }
 
     println!(
@@ -202,6 +216,90 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
                 eprintln!("GATE FAIL: {f}");
             }
             bail!("{} BENCH regression(s) vs {gate}", failures.len());
+        }
+    }
+    Ok(())
+}
+
+/// Saturation sweep: many small host-only events per worker count;
+/// reports events/s + tail latency per count, bails on catastrophic
+/// scaling loss (< 0.8x from 1 worker to the max), and writes the
+/// saturation series as a BENCH report.
+fn cmd_saturate(args: &Args) -> Result<()> {
+    use marionette::bench_support::report::{
+        run_saturation, BenchPoint, BenchReport, BenchSeries, Better, SERIES_SATURATION,
+        SERIES_SATURATION_P99,
+    };
+
+    let grid = args.grid.unwrap_or(if args.quick { 32 } else { 64 });
+    let events = args.events.unwrap_or(if args.quick { 4_000 } else { 20_000 });
+    let workers = args.workers.clone().unwrap_or_else(|| vec![1, 2, 4]);
+    if workers.is_empty() || workers.contains(&0) {
+        bail!("--workers needs a comma list of counts >= 1");
+    }
+
+    println!("== saturation sweep: {events} events of {grid}x{grid}, workers {workers:?} ==");
+    let mut tp = Vec::new();
+    let mut p99 = Vec::new();
+    let mut evs_per_sec = Vec::new();
+    for &w in &workers {
+        let rep = run_saturation(grid, events, w)?;
+        let evs = rep.events_per_sec();
+        let m = &rep.metrics;
+        println!(
+            "workers={w}: {evs:.1} ev/s | latency p50={:?} p95={:?} p99={:?} \
+             | sched injected={} local={} steals={}",
+            m.e2e_p50, m.e2e_p95, m.e2e_p99, m.sched_injected, m.sched_local_pushes,
+            m.sched_steals,
+        );
+        tp.push(BenchPoint { label: format!("workers={w}"), value: evs });
+        p99.push(BenchPoint {
+            label: format!("workers={w}"),
+            value: m.e2e_p99.as_micros() as f64,
+        });
+        evs_per_sec.push(evs);
+    }
+
+    let report = BenchReport {
+        quick: args.quick,
+        provenance: "measured".to_string(),
+        series: vec![
+            BenchSeries {
+                name: SERIES_SATURATION.to_string(),
+                unit: "events_per_sec".to_string(),
+                better: Better::Higher,
+                tolerance: 0.3,
+                points: tp,
+            },
+            BenchSeries {
+                name: SERIES_SATURATION_P99.to_string(),
+                unit: "microseconds".to_string(),
+                better: Better::Lower,
+                tolerance: 0.0,
+                points: p99,
+            },
+        ],
+    };
+    let out = std::path::PathBuf::from(args.out.as_deref().unwrap_or("BENCH_run.json"));
+    report.save(&out)?;
+    println!("wrote {}", out.display());
+
+    if evs_per_sec.len() > 1 {
+        let (first, last) = (evs_per_sec[0], *evs_per_sec.last().unwrap());
+        let ratio = last / first.max(1e-9);
+        println!(
+            "scaling: {:.1} -> {:.1} ev/s ({ratio:.2}x from {} -> {} workers)",
+            first,
+            last,
+            workers[0],
+            workers.last().unwrap()
+        );
+        if ratio < 0.8 {
+            bail!(
+                "catastrophic scaling loss: {ratio:.2}x from {} to {} workers (floor 0.8x)",
+                workers[0],
+                workers.last().unwrap()
+            );
         }
     }
     Ok(())
@@ -260,16 +358,19 @@ fn run() -> Result<()> {
             Ok(())
         }
         "bench-report" => cmd_bench_report(&args),
+        "saturate" => cmd_saturate(&args),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!(
                 "repro <command> [flags]\n\
                  commands: demo | run-pipeline | fig1 | fig2 | zero-cost | \
-                 transfers | ablation | bench-report | doctor\n\
+                 transfers | ablation | bench-report | saturate | doctor\n\
                  flags: --quick --grid N --grids a,b,c --events N \
-                 --particles a,b,c --workers N --policy host|device|auto \
-                 --no-device --csv NAME\n\
-                 bench-report: --out PATH --gate BASELINE --write-baseline"
+                 --particles a,b,c --workers a,b,c --dev-workers N \
+                 --policy host|device|auto --no-device --csv NAME\n\
+                 bench-report: --out PATH --gate BASELINE --write-baseline\n\
+                 saturate: --events N --workers a,b,c --out PATH (events/s + \
+                 p50/p95/p99 tail-latency sweep over host worker counts)"
             );
             Ok(())
         }

@@ -69,8 +69,10 @@ pub mod prelude {
     };
     pub use super::transfer::{
         bounce_scratch_stats, copy_collection, copy_collection_stats,
-        copy_collection_unplanned, memcopy_with_context, plan_cache_stats, plan_for,
-        register_specialized, PlanCacheStats, PlanOp, TransferPlan, TransferPriority,
-        TransferStats,
+        copy_collection_unplanned, local_plan_handle_stats, memcopy_with_context,
+        plan_cache_generation, plan_cache_shard_stats, plan_cache_stats, plan_for,
+        register_specialized, BounceScratchStats, PlanCacheShardStats, PlanCacheStats,
+        PlanHandle, PlanHandleStats, PlanOp, TransferPlan, TransferPriority, TransferStats,
+        PLAN_CACHE_SHARDS,
     };
 }

@@ -106,22 +106,45 @@ pub unsafe fn memcopy_with_context<Src: MemoryContext, Dst: MemoryContext>(
     }
 }
 
-/// How many bounce scratch buffers may idle in the pool; chunked
-/// `execute_par` copies use at most one per worker at a time.
-const MAX_BOUNCE_SCRATCH: usize = 32;
+/// Bounce scratch shards: threads hash onto a shard, so concurrent
+/// device workers never contend on one shelf mutex (DESIGN.md §8).
+const BOUNCE_SHARDS: usize = 8;
 
-/// Cap on total bytes the idle bounce shelf may retain: scratch only
-/// ever grows, so without a byte bound one burst of large copies would
-/// park its high-water mark in a process-wide static forever.
-const MAX_BOUNCE_HELD_BYTES: usize = 64 << 20; // 64 MiB
+/// How many bounce scratch buffers may idle **per shard**; chunked
+/// `execute_par` copies use at most one per worker at a time.
+const BOUNCE_SHARD_MAX_IDLE: usize = 4;
+
+/// High-water cap on idle bytes **per shard** (mirroring the byte
+/// pool's `PoolContext` trimming): scratch only ever grows, so without
+/// a byte bound one burst of large copies would park its high-water
+/// mark in a process-wide static forever. Returns that push a shard
+/// over the cap trim the largest parked buffers back under it.
+const BOUNCE_SHARD_HELD_HIGH_WATER: usize = 8 << 20; // 8 MiB x 8 shards
 
 static BOUNCE_HITS: AtomicU64 = AtomicU64::new(0);
 static BOUNCE_MISSES: AtomicU64 = AtomicU64::new(0);
+static BOUNCE_TRIMS: AtomicU64 = AtomicU64::new(0);
 static BOUNCE_HELD_BYTES: AtomicUsize = AtomicUsize::new(0);
 
-fn bounce_pool() -> &'static Mutex<Vec<Vec<u8>>> {
-    static POOL: OnceLock<Mutex<Vec<Vec<u8>>>> = OnceLock::new();
-    POOL.get_or_init(|| Mutex::new(Vec::new()))
+#[derive(Default)]
+struct BounceShelf {
+    bufs: Vec<Vec<u8>>,
+    held: usize,
+}
+
+fn bounce_pool() -> &'static [Mutex<BounceShelf>; BOUNCE_SHARDS] {
+    static POOL: OnceLock<[Mutex<BounceShelf>; BOUNCE_SHARDS]> = OnceLock::new();
+    POOL.get_or_init(|| std::array::from_fn(|_| Mutex::new(BounceShelf::default())))
+}
+
+/// This thread's bounce shard: assigned round-robin at first use, so a
+/// worker keeps hitting the same (usually uncontended) shelf.
+fn bounce_shard() -> &'static Mutex<BounceShelf> {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed) % BOUNCE_SHARDS;
+    }
+    &bounce_pool()[SHARD.with(|s| *s)]
 }
 
 /// Run `f` over a recycled host bounce buffer of at least `len` bytes.
@@ -131,10 +154,12 @@ fn bounce_pool() -> &'static Mutex<Vec<Vec<u8>>> {
 /// one fresh allocation per chunk per event. `RawBuf::rehome`'s bounce
 /// route borrows from the same shelf.
 pub(crate) fn with_bounce_scratch<R>(len: usize, f: impl FnOnce(&mut [u8]) -> R) -> R {
+    let shard = bounce_shard();
     let recycled = {
-        let mut g = bounce_pool().lock().unwrap();
-        let b = g.pop();
+        let mut g = shard.lock().unwrap();
+        let b = g.bufs.pop();
         if let Some(b) = &b {
+            g.held -= b.len();
             BOUNCE_HELD_BYTES.fetch_sub(b.len(), Ordering::Relaxed);
         }
         b
@@ -153,19 +178,51 @@ pub(crate) fn with_bounce_scratch<R>(len: usize, f: impl FnOnce(&mut [u8]) -> R)
         buf.resize(len, 0);
     }
     let r = f(&mut buf[..len]);
-    let mut g = bounce_pool().lock().unwrap();
-    if g.len() < MAX_BOUNCE_SCRATCH
-        && BOUNCE_HELD_BYTES.load(Ordering::Relaxed) + buf.len() <= MAX_BOUNCE_HELD_BYTES
-    {
-        BOUNCE_HELD_BYTES.fetch_add(buf.len(), Ordering::Relaxed);
-        g.push(buf);
+    let mut g = shard.lock().unwrap();
+    g.held += buf.len();
+    BOUNCE_HELD_BYTES.fetch_add(buf.len(), Ordering::Relaxed);
+    g.bufs.push(buf);
+    // High-water trim: drop the largest parked buffers until the shard
+    // is back under both its byte and count bounds.
+    while g.held > BOUNCE_SHARD_HELD_HIGH_WATER || g.bufs.len() > BOUNCE_SHARD_MAX_IDLE {
+        let fattest = g
+            .bufs
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, b)| b.len())
+            .map(|(i, _)| i)
+            .expect("non-empty shelf while over bounds");
+        let dropped = g.bufs.swap_remove(fattest);
+        g.held -= dropped.len();
+        BOUNCE_HELD_BYTES.fetch_sub(dropped.len(), Ordering::Relaxed);
+        BOUNCE_TRIMS.fetch_add(1, Ordering::Relaxed);
     }
     r
 }
 
-/// (hits, misses) of the bounce-scratch pool (process-wide, monotone).
-pub fn bounce_scratch_stats() -> (u64, u64) {
-    (BOUNCE_HITS.load(Ordering::Relaxed), BOUNCE_MISSES.load(Ordering::Relaxed))
+/// Counters of the sharded bounce-scratch shelf. `hits`/`misses`/
+/// `trims` are process-wide and monotone; `held_bytes` is a
+/// point-in-time gauge summed over the shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BounceScratchStats {
+    /// Checkouts served from a shard's shelf.
+    pub hits: u64,
+    /// Checkouts that allocated a fresh buffer.
+    pub misses: u64,
+    /// Parked buffers dropped by high-water trimming.
+    pub trims: u64,
+    /// Idle bytes currently parked across all shards.
+    pub held_bytes: usize,
+}
+
+/// Snapshot the bounce-scratch pool counters.
+pub fn bounce_scratch_stats() -> BounceScratchStats {
+    BounceScratchStats {
+        hits: BOUNCE_HITS.load(Ordering::Relaxed),
+        misses: BOUNCE_MISSES.load(Ordering::Relaxed),
+        trims: BOUNCE_TRIMS.load(Ordering::Relaxed),
+        held_bytes: BOUNCE_HELD_BYTES.load(Ordering::Relaxed),
+    }
 }
 
 /// Overlap-tolerant copy within one context: safe for a destination range
@@ -622,22 +679,56 @@ fn plan_key<LS: Layout, LD: Layout>(schema: &Arc<Schema>) -> PlanKey {
     PlanKey { pair: TypeId::of::<(LS, LD)>(), schema: Arc::as_ptr(schema) as usize }
 }
 
-struct CacheState {
-    plans: HashMap<PlanKey, Arc<TransferPlan>>,
-    specialized: HashMap<PlanKey, SpecFn>,
+/// Shard count of the shared plan cache. Power of two; keys spread by
+/// their hash, so unrelated (schema, layout-pair) tuples resolve on
+/// different mutexes (DESIGN.md §8).
+pub const PLAN_CACHE_SHARDS: usize = 8;
+
+struct CacheShard {
+    plans: Mutex<HashMap<PlanKey, Arc<TransferPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Times the shard mutex was taken by `plan_for` (NOT bumped by
+    /// per-thread `PlanHandle` hits — the flat-across-warm-iterations
+    /// contract the coordinator-scale tests pin).
+    lock_acquisitions: AtomicU64,
 }
 
-fn cache() -> &'static Mutex<CacheState> {
-    static CACHE: OnceLock<Mutex<CacheState>> = OnceLock::new();
-    CACHE.get_or_init(|| {
-        Mutex::new(CacheState { plans: HashMap::new(), specialized: HashMap::new() })
+struct PlanCache {
+    shards: [CacheShard; PLAN_CACHE_SHARDS],
+    /// Registered user fast paths (cold path: read only on a shard
+    /// miss, written by `register_specialized`).
+    specialized: Mutex<HashMap<PlanKey, SpecFn>>,
+    /// Bumped by [`clear_plan_cache`] and [`register_specialized`];
+    /// per-thread handles compare against it and drop their local maps
+    /// when stale.
+    generation: AtomicU64,
+}
+
+fn cache() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache {
+        shards: std::array::from_fn(|_| CacheShard {
+            plans: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            lock_acquisitions: AtomicU64::new(0),
+        }),
+        specialized: Mutex::new(HashMap::new()),
+        generation: AtomicU64::new(0),
     })
 }
 
-static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
-static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+fn shard_of(key: &PlanKey) -> &'static CacheShard {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    &cache().shards[(h.finish() as usize) % PLAN_CACHE_SHARDS]
+}
 
-/// Process-wide plan-cache counters (monotone).
+/// Process-wide plan-cache counters (monotone), summed over the shards.
+/// Per-thread [`PlanHandle`] hits count as cache hits here (they are
+/// served from a plan the shared cache resolved earlier).
 #[derive(Clone, Copy, Debug)]
 pub struct PlanCacheStats {
     pub hits: u64,
@@ -645,44 +736,172 @@ pub struct PlanCacheStats {
     pub entries: usize,
 }
 
-/// Snapshot the plan-cache counters.
+/// Per-shard plan-cache counters (diagnostics + the contention tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanCacheShardStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    /// Shard-mutex acquisitions: flat across warm steady-state lookups
+    /// (those are served lock-free from per-thread handles).
+    pub lock_acquisitions: u64,
+}
+
+/// Snapshot the plan-cache counters (shard-summed).
 pub fn plan_cache_stats() -> PlanCacheStats {
-    PlanCacheStats {
-        hits: CACHE_HITS.load(Ordering::Relaxed),
-        misses: CACHE_MISSES.load(Ordering::Relaxed),
-        entries: cache().lock().unwrap().plans.len(),
+    let mut s = PlanCacheStats { hits: 0, misses: 0, entries: 0 };
+    for sh in plan_cache_shard_stats() {
+        s.hits += sh.hits;
+        s.misses += sh.misses;
+        s.entries += sh.entries;
     }
+    s
+}
+
+/// Snapshot every shard's counters, in shard order.
+pub fn plan_cache_shard_stats() -> [PlanCacheShardStats; PLAN_CACHE_SHARDS] {
+    std::array::from_fn(|i| {
+        let sh = &cache().shards[i];
+        PlanCacheShardStats {
+            hits: sh.hits.load(Ordering::Relaxed),
+            misses: sh.misses.load(Ordering::Relaxed),
+            entries: sh.plans.lock().unwrap().len(),
+            lock_acquisitions: sh.lock_acquisitions.load(Ordering::Relaxed),
+        }
+    })
+}
+
+/// The cache invalidation generation. Bumped by [`clear_plan_cache`]
+/// and [`register_specialized`]; per-thread handles revalidate against
+/// it with one atomic load per lookup.
+pub fn plan_cache_generation() -> u64 {
+    cache().generation.load(Ordering::Acquire)
 }
 
 /// Drop every cached plan (registered specializations survive; the next
-/// `plan_for` recompiles). Intended for tests and tooling.
+/// `plan_for` recompiles). Per-thread [`PlanHandle`]s notice via the
+/// generation counter and drop their local maps on their next lookup.
+/// Intended for tests and tooling.
 pub fn clear_plan_cache() {
-    cache().lock().unwrap().plans.clear();
+    for sh in &cache().shards {
+        sh.plans.lock().unwrap().clear();
+    }
+    cache().generation.fetch_add(1, Ordering::AcqRel);
+}
+
+/// A per-worker local plan cache: a small map of `Arc<TransferPlan>`
+/// resolved through the shared sharded cache once, then served with no
+/// shared-lock acquisition at all (one atomic generation load per
+/// lookup). [`plan_for`] routes through a thread-local handle
+/// automatically, so every steady-state `stage_into`/`convert_to` on a
+/// warm thread touches no shared mutex; embed an explicit handle only
+/// when thread identity is unsuitable (e.g. a migrating task).
+#[derive(Default)]
+pub struct PlanHandle {
+    generation: u64,
+    plans: HashMap<PlanKey, Arc<TransferPlan>>,
+    local_hits: u64,
+    shared_lookups: u64,
+}
+
+/// Counters of one [`PlanHandle`] (monotone per handle).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanHandleStats {
+    /// Lookups served from the handle's local map (no shared lock).
+    pub local_hits: u64,
+    /// Lookups that fell through to the shared sharded cache.
+    pub shared_lookups: u64,
+}
+
+impl PlanHandle {
+    pub fn new() -> PlanHandle {
+        PlanHandle::default()
+    }
+
+    pub fn stats(&self) -> PlanHandleStats {
+        PlanHandleStats { local_hits: self.local_hits, shared_lookups: self.shared_lookups }
+    }
+
+    /// The cached plan for `(LS, LD, schema)`: local map first (lock
+    /// free), shared shard on a local miss. Invalidation: if the global
+    /// generation moved since the last lookup, the local map is stale
+    /// (a `clear_plan_cache` or specialization registration happened)
+    /// and is dropped before resolving.
+    pub fn plan_for<LS: Layout, LD: Layout>(&mut self, schema: &Arc<Schema>) -> Arc<TransferPlan> {
+        let key = plan_key::<LS, LD>(schema);
+        let now = cache().generation.load(Ordering::Acquire);
+        if now != self.generation {
+            self.plans.clear();
+            self.generation = now;
+        }
+        if let Some(p) = self.plans.get(&key) {
+            self.local_hits += 1;
+            // A local hit is still a process-wide cache hit: the shard
+            // counter is an atomic, not a lock.
+            shard_of(&key).hits.fetch_add(1, Ordering::Relaxed);
+            return p.clone();
+        }
+        self.shared_lookups += 1;
+        let plan = resolve_shared::<LS, LD>(key, schema);
+        self.plans.insert(key, plan.clone());
+        plan
+    }
+}
+
+thread_local! {
+    static LOCAL_PLANS: std::cell::RefCell<PlanHandle> =
+        std::cell::RefCell::new(PlanHandle::new());
+}
+
+/// This thread's [`PlanHandle`] counters — deterministic per thread, so
+/// tests pin the zero-shared-lock steady state without racing other
+/// threads' traffic.
+pub fn local_plan_handle_stats() -> PlanHandleStats {
+    LOCAL_PLANS.with(|h| h.borrow().stats())
+}
+
+/// Shared-cache lookup under the key's shard mutex: hit returns the
+/// cached plan, miss compiles (consulting the specialized registry)
+/// and inserts. Holding the shard lock across the specialized read and
+/// the insert keeps registration linearizable: a concurrent
+/// `register_specialized` either sees our generic entry and removes
+/// it, or its registration is visible to our compile.
+fn resolve_shared<LS: Layout, LD: Layout>(
+    key: PlanKey,
+    schema: &Arc<Schema>,
+) -> Arc<TransferPlan> {
+    let shard = shard_of(&key);
+    shard.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+    let mut g = shard.plans.lock().unwrap();
+    if let Some(p) = g.get(&key) {
+        shard.hits.fetch_add(1, Ordering::Relaxed);
+        return p.clone();
+    }
+    shard.misses.fetch_add(1, Ordering::Relaxed);
+    let spec = cache().specialized.lock().unwrap().get(&key).cloned();
+    let plan = Arc::new(TransferPlan::compile::<LS, LD>(schema.clone(), spec));
+    g.insert(key, plan.clone());
+    plan
 }
 
 /// The cached [`TransferPlan`] for copying a `RawCollection<LS>` into a
-/// `RawCollection<LD>` under `schema`. Compiles on first request; every
-/// later request for the same (schema instance, layout pair) is a hash
-/// lookup returning the shared plan.
+/// `RawCollection<LD>` under `schema`. The first request on a thread
+/// resolves through the sharded shared cache (compiling on a global
+/// first request); every later request on that thread is a lock-free
+/// lookup in its thread-local [`PlanHandle`] returning the shared plan.
 pub fn plan_for<LS: Layout, LD: Layout>(schema: &Arc<Schema>) -> Arc<TransferPlan> {
-    let key = plan_key::<LS, LD>(schema);
-    let mut g = cache().lock().unwrap();
-    if let Some(p) = g.plans.get(&key) {
-        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
-        return p.clone();
-    }
-    CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
-    let spec = g.specialized.get(&key).cloned();
-    let plan = Arc::new(TransferPlan::compile::<LS, LD>(schema.clone(), spec));
-    g.plans.insert(key, plan.clone());
-    plan
+    LOCAL_PLANS.with(|h| h.borrow_mut().plan_for::<LS, LD>(schema))
 }
 
 /// Register a specialized converter for the concrete (schema, `LS`,
 /// `LD`) tuple. Future plans for that tuple consist of a single
 /// `Specialized` op delegating to `f` (which must size `dst` itself and
 /// returns the payload bytes it moved); any already-cached plan for the
-/// tuple is invalidated so the registration takes effect immediately.
+/// tuple is invalidated — and the generation bump flushes every
+/// per-thread [`PlanHandle`] — so the registration takes effect
+/// immediately. Register once at startup (the EDM guards its
+/// registrations with a `Once`): every call invalidates all local
+/// handles process-wide.
 pub fn register_specialized<LS, LD, F>(schema: &Arc<Schema>, f: F)
 where
     LS: Layout,
@@ -695,9 +914,12 @@ where
         let d = d.downcast_mut::<RawCollection<LD>>().expect("specialized dst type");
         f(s, d)
     });
-    let mut g = cache().lock().unwrap();
-    g.specialized.insert(key, wrapped);
-    g.plans.remove(&key);
+    let c = cache();
+    // Specialized guard dropped at the semicolon; never held across the
+    // shard lock (resolve_shared locks in the opposite order).
+    c.specialized.lock().unwrap().insert(key, wrapped);
+    shard_of(&key).plans.lock().unwrap().remove(&key);
+    c.generation.fetch_add(1, Ordering::AcqRel);
 }
 
 // ---------------------------------------------------------------------
@@ -1323,11 +1545,11 @@ mod tests {
             );
         };
         one_copy(&mut dst_buf);
-        let (hits0, _) = bounce_scratch_stats();
+        let hits0 = bounce_scratch_stats().hits;
         for _ in 0..4 {
             one_copy(&mut dst_buf);
         }
-        let (hits1, _) = bounce_scratch_stats();
+        let hits1 = bounce_scratch_stats().hits;
         // Lower bound of one: the shelf is process-global, so a
         // concurrently-running bounce test may momentarily hold the
         // parked buffer — but four sequential copies cannot all miss.

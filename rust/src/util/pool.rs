@@ -1,16 +1,31 @@
-//! Pools (in-tree substrate; DESIGN.md §3, §5): a minimal fixed-size
-//! thread pool plus a generic recycling object pool.
+//! Pools (in-tree substrate; DESIGN.md §3, §5, §8): a work-stealing
+//! task scheduler plus a generic recycling object pool.
 //!
 //! The vendored dependency set has no rayon, so the small slice this
-//! project needs is implemented here: a process-wide pool of worker
-//! threads plus a *scoped* batch API — [`ThreadPool::scoped`] runs a set
-//! of jobs that may borrow from the caller's stack and blocks until all
-//! of them have finished. The transfer engine uses it to split large
-//! plane/block copies into chunks ([`crate::marionette::transfer`]).
+//! project needs is implemented here. [`ThreadPool`] is a fixed set of
+//! worker threads scheduled by work stealing (DESIGN.md §8): every
+//! worker owns a private deque it pushes and pops **LIFO** (hot cache,
+//! no contention with its siblings), external submissions land in a
+//! shared injector queue, and an idle worker first drains the injector,
+//! then steals **FIFO** from a sibling's deque — oldest task first, the
+//! one whose data is coldest for its owner. Idle workers park on a
+//! condvar; every submission performs a lock-drop/notify handshake so a
+//! worker between its "queues are empty" check and its wait can never
+//! miss the wakeup.
+//!
+//! Two submission APIs sit on top:
+//!
+//! * [`ThreadPool::spawn`] — fire-and-forget `'static` tasks (the
+//!   coordinator's host event workers run on this).
+//! * [`ThreadPool::scoped`] — run a batch of jobs that may borrow from
+//!   the caller's stack, blocking until all of them have finished. The
+//!   transfer engine uses it to split large plane/block copies into
+//!   chunks ([`crate::marionette::transfer`]).
 //!
 //! Scoped jobs must not themselves call [`ThreadPool::scoped`] on the
 //! same pool: with every worker parked inside the outer batch, the
-//! inner batch could never be picked up.
+//! inner batch could never be picked up. (Plain [`ThreadPool::spawn`]
+//! from inside a job is fine — it pushes to the worker's own deque.)
 //!
 //! [`ObjectPool`] / [`Recycler`] are the object-level recycling pair
 //! under the memory strategy in DESIGN.md §5: `checkout()` hands out a
@@ -19,25 +34,67 @@
 //! uses it for per-event staging collections; byte-level recycling is
 //! [`crate::marionette::memory::PoolContext`].
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct State {
-    jobs: VecDeque<Job>,
-    shutdown: bool,
+/// Scheduler counters of a [`ThreadPool`] (monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ThreadPoolStats {
+    /// Jobs submitted from outside the pool (landed in the injector).
+    pub injected: usize,
+    /// Jobs submitted by a worker of this pool (landed in its own deque).
+    pub local_pushes: usize,
+    /// Jobs taken FIFO from a sibling worker's deque.
+    pub steals: usize,
+    /// Jobs that finished executing (panicking jobs included).
+    pub executed: usize,
+    /// Jobs that panicked (spawned jobs are caught so the worker
+    /// survives; `scoped` re-raises after its batch completes).
+    pub panicked: usize,
 }
 
 struct Shared {
-    queue: Mutex<State>,
+    /// Process-unique pool identity, matched against the thread-local
+    /// worker registration so `submit` can route to the local deque.
+    id: usize,
+    /// External submissions (FIFO).
+    injector: Mutex<VecDeque<Job>>,
+    /// Per-worker deques: owner pushes/pops back (LIFO), thieves pop
+    /// front (FIFO).
+    locals: Vec<Mutex<VecDeque<Job>>>,
+    /// Queued-job balance. Signed: a job's pop may be counted before
+    /// its push on another thread; transient negatives are harmless.
+    /// `> 0` keeps workers scanning instead of parking.
+    pending: AtomicIsize,
+    /// Parking lot: the mutex carries no data, it only serialises the
+    /// empty-check/wait against the submitter's lock-drop/notify.
+    idle: Mutex<()>,
     cv: Condvar,
+    shutdown: AtomicBool,
+    injected: AtomicUsize,
+    local_pushes: AtomicUsize,
+    steals: AtomicUsize,
+    executed: AtomicUsize,
+    panicked: AtomicUsize,
 }
 
-/// Fixed set of worker threads draining a shared job queue.
+thread_local! {
+    /// (pool id, worker index) when the current thread is a pool worker.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+fn next_pool_id() -> usize {
+    static IDS: AtomicUsize = AtomicUsize::new(1);
+    IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fixed set of worker threads scheduled by work stealing.
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -48,13 +105,23 @@ impl ThreadPool {
     pub fn new(threads: usize) -> ThreadPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
+            id: next_pool_id(),
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicIsize::new(0),
+            idle: Mutex::new(()),
             cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            injected: AtomicUsize::new(0),
+            local_pushes: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+            executed: AtomicUsize::new(0),
+            panicked: AtomicUsize::new(0),
         });
         let workers = (0..threads)
-            .map(|_| {
+            .map(|idx| {
                 let sh = shared.clone();
-                std::thread::spawn(move || worker_loop(sh))
+                std::thread::spawn(move || worker_loop(sh, idx))
             })
             .collect();
         ThreadPool { shared, workers }
@@ -74,11 +141,49 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Snapshot the scheduler counters.
+    pub fn stats(&self) -> ThreadPoolStats {
+        ThreadPoolStats {
+            injected: self.shared.injected.load(Ordering::Relaxed),
+            local_pushes: self.shared.local_pushes.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            executed: self.shared.executed.load(Ordering::Relaxed),
+            panicked: self.shared.panicked.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `job` on the pool (fire-and-forget). A panicking job is
+    /// caught and counted ([`ThreadPoolStats::panicked`]); the worker
+    /// survives. Jobs still queued when the pool drops are drained, not
+    /// lost.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.submit(Box::new(job));
+    }
+
     fn submit(&self, job: Job) {
-        let mut g = self.shared.queue.lock().unwrap();
-        g.jobs.push_back(job);
-        drop(g);
-        self.shared.cv.notify_one();
+        let sh = &self.shared;
+        // A worker of *this* pool pushes to its own deque (uncontended
+        // in steady state); everyone else goes through the injector.
+        let local = WORKER
+            .with(|w| w.get())
+            .and_then(|(pid, idx)| (pid == sh.id).then_some(idx));
+        match local {
+            Some(idx) => {
+                sh.locals[idx].lock().unwrap().push_back(job);
+                sh.local_pushes.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                sh.injector.lock().unwrap().push_back(job);
+                sh.injected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        sh.pending.fetch_add(1, Ordering::SeqCst);
+        // Lock-drop/notify handshake: a worker that read `pending == 0`
+        // holds `idle` until it is inside `cv.wait`, so acquiring (and
+        // immediately releasing) the lock here guarantees the notify
+        // cannot race into the gap between its check and its wait.
+        drop(sh.idle.lock().unwrap());
+        sh.cv.notify_one();
     }
 
     /// Run every job to completion, blocking the caller until the last
@@ -114,7 +219,8 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        drop(self.shared.idle.lock().unwrap());
         self.shared.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -122,21 +228,53 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(sh: Arc<Shared>) {
-    loop {
-        let job = {
-            let mut g = sh.queue.lock().unwrap();
-            loop {
-                if let Some(j) = g.jobs.pop_front() {
-                    break j;
-                }
-                if g.shutdown {
-                    return;
-                }
-                g = sh.cv.wait(g).unwrap();
+impl Shared {
+    /// Claim one job: own deque LIFO, then injector FIFO, then steal
+    /// FIFO from siblings (scan order rotated per worker so thieves
+    /// spread across victims instead of converging on worker 0).
+    fn find_job(&self, idx: usize) -> Option<Job> {
+        if let Some(j) = self.locals[idx].lock().unwrap().pop_back() {
+            return Some(j);
+        }
+        if let Some(j) = self.injector.lock().unwrap().pop_front() {
+            return Some(j);
+        }
+        let n = self.locals.len();
+        for off in 1..n {
+            let victim = (idx + off) % n;
+            if let Some(j) = self.locals[victim].lock().unwrap().pop_front() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(j);
             }
-        };
-        job();
+        }
+        None
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set(Some((sh.id, idx))));
+    loop {
+        if let Some(job) = sh.find_job(idx) {
+            sh.pending.fetch_sub(1, Ordering::SeqCst);
+            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                sh.panicked.fetch_add(1, Ordering::Relaxed);
+            }
+            sh.executed.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let g = sh.idle.lock().unwrap();
+        if sh.pending.load(Ordering::SeqCst) > 0 {
+            // A submission landed between the scan and the lock; a
+            // brief re-scan also covers a sibling mid-pop (its
+            // decrement lags its dequeue by a few instructions).
+            continue;
+        }
+        if sh.shutdown.load(Ordering::SeqCst) {
+            // pending <= 0: every submitted job has been claimed, so
+            // shutdown loses nothing.
+            return;
+        }
+        let _unused = sh.cv.wait(g).unwrap();
     }
 }
 
@@ -361,6 +499,68 @@ mod tests {
     #[test]
     fn global_pool_has_multiple_workers() {
         assert!(ThreadPool::global().workers() >= 2);
+    }
+
+    fn wait_until(deadline_ms: u64, cond: impl Fn() -> bool) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms);
+        while !cond() {
+            assert!(std::time::Instant::now() < deadline, "timed out waiting for condition");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn spawn_loses_no_tasks_on_shutdown() {
+        let done = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(3);
+            for _ in 0..200 {
+                let d = done.clone();
+                pool.spawn(move || {
+                    d.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // Drop drains every queued job before joining the workers.
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn worker_submissions_go_local_and_get_stolen() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let done = Arc::new(AtomicUsize::new(0));
+        let p2 = pool.clone();
+        let d2 = done.clone();
+        // One producer job fans out 64 slow children from inside the
+        // pool: they land on the producer's own deque, and the three
+        // idle siblings can only make progress by stealing them.
+        pool.spawn(move || {
+            for _ in 0..64 {
+                let d = d2.clone();
+                p2.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    d.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        wait_until(10_000, || done.load(Ordering::Relaxed) == 64);
+        let s = pool.stats();
+        assert!(s.local_pushes >= 64, "children not pushed locally: {s:?}");
+        assert!(s.steals > 0, "no sibling stole from the producer's deque: {s:?}");
+        assert_eq!(s.panicked, 0);
+    }
+
+    #[test]
+    fn spawned_panics_are_counted_and_workers_survive() {
+        let pool = ThreadPool::new(1);
+        pool.spawn(|| panic!("boom (expected; spawned-panic test)"));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        pool.spawn(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+        wait_until(10_000, || done.load(Ordering::Relaxed) == 1);
+        assert!(pool.stats().panicked >= 1);
     }
 
     #[test]

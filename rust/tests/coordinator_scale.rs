@@ -1,0 +1,237 @@
+//! Scale-out integration tests for the sharded, task-parallel
+//! coordinator: cross-thread plan-cache behaviour (shard-summed hit
+//! rate + plan identity), the steady-state zero-shared-lock invariant
+//! of `stage_into`, multi-device-worker pipelines, the saturation
+//! harness's scheduler/latency metrics, and the work-stealing pool
+//! through the crate's public API.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use marionette::bench_support::report;
+use marionette::coordinator::{run_pipeline, PipelineConfig, RoutePolicy};
+use marionette::edm::convert::register_edm_specializations;
+use marionette::edm::generator::{EventConfig, EventGenerator};
+use marionette::edm::sensor::{SensorCollection, SensorProps};
+use marionette::marionette::layout::{AoS, SoABlob, SoAVec};
+use marionette::marionette::transfer::{
+    local_plan_handle_stats, plan_cache_generation, plan_cache_shard_stats, plan_cache_stats,
+    plan_for,
+};
+use marionette::ThreadPool;
+
+/// The four (source, destination) layout pairs the stress test mixes;
+/// returns the cached plan's identity (`Arc` pointer) for each.
+fn plan_identities(schema: &Arc<marionette::marionette::schema::Schema>) -> [usize; 4] {
+    [
+        Arc::as_ptr(&plan_for::<SoAVec, AoS>(schema)) as usize,
+        Arc::as_ptr(&plan_for::<AoS, SoAVec>(schema)) as usize,
+        Arc::as_ptr(&plan_for::<SoAVec, SoABlob>(schema)) as usize,
+        Arc::as_ptr(&plan_for::<SoABlob, AoS>(schema)) as usize,
+    ]
+}
+
+/// 16 threads hammer the sharded plan cache with a mix of four keys.
+/// Every thread must resolve the *same* `Arc<TransferPlan>` per key
+/// (identity, not just equality), and the shard-summed hit counters
+/// must absorb essentially the whole workload: at most one shared miss
+/// or lookup per (thread, key) — everything else is a hit.
+#[test]
+fn plan_cache_cross_thread_stress() {
+    // Fire the EDM's Once-guarded specialized registrations *before*
+    // measuring: registration bumps the cache generation and evicts the
+    // sensor pairs, which must not happen mid-stress.
+    register_edm_specializations();
+    let schema = SensorProps::schema();
+    let expected = plan_identities(&schema);
+
+    let before = plan_cache_stats();
+    const THREADS: usize = 16;
+    const REPS: usize = 100;
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let schema = schema.clone();
+            thread::spawn(move || {
+                let mut last = [0usize; 4];
+                for _ in 0..REPS {
+                    last = plan_identities(&schema);
+                }
+                last
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().expect("stress thread panicked");
+        assert_eq!(got, expected, "a thread resolved a different plan instance");
+    }
+
+    let after = plan_cache_stats();
+    // 16 threads x 100 reps x 4 keys lookups; only the first lookup per
+    // (thread, key) may go to the shared map (and at most 4 of those can
+    // miss). Counters are process-global and monotonic, so concurrent
+    // tests can only inflate the delta, never deflate it.
+    let total = (THREADS * REPS * 4) as u64;
+    let floor = total - (THREADS * 4) as u64;
+    assert!(
+        after.hits - before.hits >= floor,
+        "shard-summed hits {} -> {} (< {floor} new hits for {total} lookups)",
+        before.hits,
+        after.hits
+    );
+    assert!(after.entries >= 4, "stress keys not resident: {} entries", after.entries);
+}
+
+/// The PR's acceptance invariant: once a thread's local `PlanHandle` is
+/// warm, `stage_into` performs zero shared-lock acquisitions — its
+/// shared-lookup count stays flat and (in a quiet window) so does the
+/// global shard-lock counter, while local hits absorb every iteration.
+#[test]
+fn steady_state_stage_into_zero_shared_locks() {
+    register_edm_specializations();
+    // A fresh thread gets a fresh thread-local handle, so the warm/warm
+    // bookkeeping below is exact.
+    thread::spawn(|| {
+        let ev = EventGenerator::new(EventConfig::grid(24, 24, 2), 7).generate();
+        let src = ev.to_collection::<SoAVec>();
+        let mut dst = SensorCollection::<AoS>::new();
+        src.stage_into(&mut dst); // warm this thread's handle
+
+        let lock_sum =
+            || plan_cache_shard_stats().iter().map(|s| s.lock_acquisitions).sum::<u64>();
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            let gen0 = plan_cache_generation();
+            let h0 = local_plan_handle_stats();
+            let locks0 = lock_sum();
+            for _ in 0..100 {
+                src.stage_into(&mut dst);
+            }
+            let h1 = local_plan_handle_stats();
+            let locks1 = lock_sum();
+            if plan_cache_generation() != gen0 {
+                // A registration elsewhere invalidated handles mid-window;
+                // measure again.
+                continue;
+            }
+            assert_eq!(
+                h1.shared_lookups, h0.shared_lookups,
+                "warm stage_into fell back to the shared cache"
+            );
+            assert!(
+                h1.local_hits >= h0.local_hits + 100,
+                "local hits {} -> {}",
+                h0.local_hits,
+                h1.local_hits
+            );
+            if locks1 == locks0 {
+                break; // quiet window: zero shard-lock acquisitions process-wide
+            }
+            // Another test's cold lookup raced this window; the
+            // handle-local assertions above already passed, retry for
+            // the global counter.
+            assert!(
+                attempts < 50,
+                "no quiet window for shard-lock counters ({locks0} -> {locks1})"
+            );
+            thread::sleep(Duration::from_millis(10));
+        }
+    })
+    .join()
+    .expect("steady-state thread panicked");
+}
+
+/// Multiple device workers drain the full stream with nothing lost or
+/// duplicated, whether or not the AOT artifacts are present (each
+/// worker falls back to host processing when its engine fails to load).
+#[test]
+fn multiple_device_workers_complete_and_account() {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(16, 16, 1), 8);
+    cfg.policy = RoutePolicy::DeviceOnly;
+    cfg.device = true;
+    cfg.device_workers = 2;
+    cfg.seed = 4242;
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.results.len(), 8);
+    for (i, r) in rep.results.iter().enumerate() {
+        assert_eq!(r.event_id, i as u64, "results not dense/sorted");
+    }
+    assert_eq!(rep.metrics.events_in, 8);
+    assert_eq!(
+        rep.metrics.events_host + rep.metrics.events_device,
+        8,
+        "every event is accounted to exactly one path"
+    );
+}
+
+/// With device workers the physics stays deterministic: one worker and
+/// two workers produce identical per-event results.
+#[test]
+fn device_worker_count_does_not_change_physics() {
+    let run = |workers: usize| {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(24, 24, 2), 12);
+        cfg.policy = RoutePolicy::DeviceOnly;
+        cfg.device = true;
+        cfg.device_workers = workers;
+        cfg.seed = 808;
+        run_pipeline(&cfg).unwrap()
+    };
+    let (one, two) = (run(1), run(2));
+    assert_eq!(one.results.len(), two.results.len());
+    for (a, b) in one.results.iter().zip(&two.results) {
+        assert_eq!(a.event_id, b.event_id);
+        assert_eq!(a.n_particles, b.n_particles);
+        assert_eq!(a.total_energy, b.total_energy, "event {}", a.event_id);
+    }
+}
+
+/// The saturation harness feeds the new scheduler and tail-latency
+/// metrics: host tasks are injected (source thread is not a pool
+/// worker), and the latency quantiles are ordered and non-trivial.
+#[test]
+fn saturation_run_reports_sched_and_latency() {
+    let rep = report::run_saturation(24, 60, 2).unwrap();
+    assert_eq!(rep.results.len(), 60);
+    assert_eq!(rep.metrics.events_host, 60);
+    assert_eq!(rep.metrics.sched_injected, 60, "one injector submission per host event");
+    assert!(rep.metrics.e2e_p50 <= rep.metrics.e2e_p95);
+    assert!(rep.metrics.e2e_p95 <= rep.metrics.e2e_p99);
+    assert!(rep.metrics.e2e_p99 > Duration::ZERO);
+    // The hot-shard summary is surfaced in the human-readable report.
+    assert!(rep.report().contains("cache-shards"), "{}", rep.report());
+}
+
+/// Work stealing through the crate's public API: a producer job fans
+/// out skewed children onto its own deque; idle siblings must steal to
+/// finish, nothing is lost, and the counters prove it.
+#[test]
+fn work_stealing_balances_skewed_tasks() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let done = Arc::new(AtomicUsize::new(0));
+    const CHILDREN: usize = 48;
+    let (p2, d2) = (pool.clone(), done.clone());
+    pool.spawn(move || {
+        for i in 0..CHILDREN {
+            let d = d2.clone();
+            let heavy = i % 8 == 0; // skewed sizes: every 8th child is slow
+            p2.spawn(move || {
+                if heavy {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while done.load(Ordering::Relaxed) < CHILDREN {
+        assert!(Instant::now() < deadline, "pool lost tasks: {:?}", pool.stats());
+        thread::sleep(Duration::from_millis(1));
+    }
+    let s = pool.stats();
+    assert!(s.local_pushes >= CHILDREN, "children bypassed the local deque: {s:?}");
+    assert!(s.steals > 0, "no sibling stole from the producer: {s:?}");
+    assert_eq!(s.panicked, 0, "{s:?}");
+    assert!(s.executed >= CHILDREN + 1, "{s:?}");
+}
