@@ -44,6 +44,17 @@ echo "== saturate-smoke: worker scaling + tail latency =="
 cargo run --release -- saturate --events 20000 --workers 1,2,4 --quick \
     --out BENCH_saturate.json
 
+echo "== autotune-smoke: AIMD controller + access-pattern heatmaps =="
+# The adaptive saturate run fails if the controller never moves the
+# batch bound, if adaptive throughput collapses below fixed dispatch,
+# or if p99 overshoots the (generous smoke) target by >10%; the
+# autotune run fails unless every route produces a non-empty access
+# tape, and must leave the heatmap CSV behind.
+cargo run --release -- saturate --adaptive --events 4000 --workers 2 \
+    --quick --p99-target-us 2000000 --out BENCH_adaptive.json
+cargo run --release -- autotune --quick
+test -f rust/bench_results/autotune_heatmap.csv
+
 echo "== bench-smoke: reporter --quick, gated vs BENCH_baseline.json =="
 # Emits BENCH_run.json (machine-readable trajectory, DESIGN.md §7) and
 # fails if any gated series regresses beyond the baseline's tolerance.

@@ -6,6 +6,7 @@
 //! smoke runs), and [`Series`]/[`Table`] print figure data as aligned
 //! text tables + CSV for plotting.
 
+pub mod autotune;
 pub mod figures;
 pub mod report;
 

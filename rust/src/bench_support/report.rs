@@ -1,10 +1,11 @@
 //! Machine-readable BENCH reporting and regression gating.
 //!
 //! Turns the paper-figure benches into a committed performance
-//! trajectory: [`collect`] measures the six series ROADMAP calls for
+//! trajectory: [`collect`] measures the eight series ROADMAP calls for
 //! (plan-cache hit rate, bytes/s per transfer route, events/s per
-//! worker count, view-vs-owned accessor ratios, and the saturation
-//! events/s + p99 tail-latency sweep), [`BenchReport::to_json`]
+//! worker count, view-vs-owned accessor ratios, the saturation
+//! events/s + p99 tail-latency sweep, and the same sweep under the
+//! adaptive AIMD batch controller), [`BenchReport::to_json`]
 //! emits them as `BENCH_run.json`, and [`compare`] gates a fresh run
 //! against a committed `BENCH_baseline.json` within per-series
 //! tolerances. The JSON format and the baseline-update policy are
@@ -13,7 +14,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{run_pipeline, PipelineConfig, RoutePolicy};
+use crate::coordinator::{run_pipeline, AdaptiveBatch, PipelineConfig, RoutePolicy};
 use crate::edm::generator::{EventConfig, EventGenerator};
 use crate::edm::SensorCollection;
 use crate::marionette::layout::{AoS, SoAVec};
@@ -42,15 +43,25 @@ pub const SERIES_SATURATION: &str = "saturation_events_per_sec";
 /// (unit `microseconds`, lower better; informational — machine noise
 /// makes tail latency a poor hard gate).
 pub const SERIES_SATURATION_P99: &str = "saturation_p99_latency_us";
+/// Saturation throughput with the AIMD batch controller steering
+/// `max_batch` instead of a fixed value (unit `events_per_sec`): the
+/// measured-feedback autotuner's headline series (DESIGN.md §9).
+pub const SERIES_ADAPTIVE: &str = "adaptive_events_per_sec";
+/// p99 end-to-end latency of the adaptive sweep per worker count (unit
+/// `microseconds`, lower better; informational like the fixed-batch
+/// p99 — tail latency is machine noise).
+pub const SERIES_ADAPTIVE_P99: &str = "adaptive_p99_latency_us";
 
-/// Every report must carry all six series to pass [`BenchReport::validate`].
-pub const REQUIRED_SERIES: [&str; 6] = [
+/// Every report must carry all eight series to pass [`BenchReport::validate`].
+pub const REQUIRED_SERIES: [&str; 8] = [
     SERIES_PLAN_CACHE,
     SERIES_TRANSFER,
     SERIES_PIPELINE,
     SERIES_VIEW_RATIO,
     SERIES_SATURATION,
     SERIES_SATURATION_P99,
+    SERIES_ADAPTIVE,
+    SERIES_ADAPTIVE_P99,
 ];
 
 /// Which direction is an improvement for a series.
@@ -340,9 +351,10 @@ const TOL_HIT_RATE: f64 = 0.10;
 const TOL_VIEW_RATIO: f64 = 0.60; // matches the 1.6x zero-cost guard bound
 const TOL_THROUGHPUT: f64 = 0.30;
 
-/// Measure all six required series and return a validated report.
+/// Measure all eight required series and return a validated report.
 pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
     let (sat_tp, sat_p99) = saturation_series(opts)?;
+    let (ada_tp, ada_p99) = adaptive_series(opts)?;
     let report = BenchReport {
         quick: opts.quick,
         provenance: "measured".to_string(),
@@ -353,6 +365,8 @@ pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
             view_ratio_series(opts)?,
             sat_tp,
             sat_p99,
+            ada_tp,
+            ada_p99,
         ],
     };
     report.validate()?;
@@ -493,6 +507,66 @@ pub fn run_saturation(
     cfg.policy = RoutePolicy::HostOnly;
     cfg.host_workers = workers;
     cfg.seed = 20260808;
+    run_pipeline(&cfg)
+}
+
+/// The adaptive saturation sweep: the same workload as
+/// [`saturation_series`], but with the AIMD controller steering the
+/// batch bound instead of the fixed config value. Series pair is
+/// (events/s, p99 µs) per worker count, mirroring the fixed sweep so
+/// the two are directly comparable in a committed trajectory.
+pub fn adaptive_series(opts: &ReportOpts) -> Result<(BenchSeries, BenchSeries)> {
+    let events = if opts.quick { 300 } else { 2000 };
+    let mut tp = Vec::new();
+    let mut p99 = Vec::new();
+    for &w in &opts.workers {
+        let rep = run_saturation_adaptive(32, events, w, None)?;
+        tp.push(BenchPoint { label: format!("workers={w}"), value: rep.events_per_sec() });
+        p99.push(BenchPoint {
+            label: format!("workers={w}"),
+            value: rep.metrics.e2e_p99.as_micros() as f64,
+        });
+    }
+    Ok((
+        BenchSeries {
+            name: SERIES_ADAPTIVE.to_string(),
+            unit: "events_per_sec".to_string(),
+            better: Better::Higher,
+            tolerance: TOL_THROUGHPUT,
+            points: tp,
+        },
+        BenchSeries {
+            name: SERIES_ADAPTIVE_P99.to_string(),
+            unit: "microseconds".to_string(),
+            better: Better::Lower,
+            tolerance: 0.0, // informational: tail latency is machine noise
+            points: p99,
+        },
+    ))
+}
+
+/// One adaptive host-only saturation run (shared by [`adaptive_series`]
+/// and `repro saturate --adaptive`). `p99_target_us` overrides the
+/// default controller target when given.
+pub fn run_saturation_adaptive(
+    grid: usize,
+    events: usize,
+    workers: usize,
+    p99_target_us: Option<u64>,
+) -> Result<crate::coordinator::PipelineReport> {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(grid, grid, 4), events);
+    cfg.device = false;
+    cfg.policy = RoutePolicy::HostOnly;
+    cfg.host_workers = workers;
+    cfg.seed = 20260808;
+    let defaults = AdaptiveBatch::default();
+    cfg.adaptive = Some(AdaptiveBatch {
+        // Observe often enough to move on short smoke runs, without
+        // making the controller thrash on full sweeps.
+        observe_every: (events / 16).clamp(8, 64),
+        p99_target_us: p99_target_us.map_or(defaults.p99_target_us, |t| t.max(1)),
+        ..defaults
+    });
     run_pipeline(&cfg)
 }
 

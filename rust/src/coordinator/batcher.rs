@@ -6,20 +6,57 @@
 //! queue synchronisation. The batcher reorders the pending window by
 //! bucket (bounded, so no starvation) — the standard continuous-batching
 //! trick adapted to shape-bucketed AOT executables.
+//!
+//! Two bounds govern a drain (DESIGN.md §9):
+//!
+//! * `max_batch` — the most items one batch may carry. Runtime-mutable
+//!   via [`Batcher::set_max_batch`], which is what the
+//!   [`AimdBatchController`] drives.
+//! * `reorder_window` — how far past the queue head the drain may scan
+//!   for same-bucket items. This bounds both the per-drain work (the old
+//!   implementation rebuilt the whole queue on every drain, O(n) even
+//!   for a 1-item batch) and the no-starvation guarantee: every drain
+//!   removes the queue head, so an item admitted at position `p` drains
+//!   within `p + 1` drains, and total overtaking by younger items is
+//!   bounded by `(w-1)(w-2)/2` for window `w` — independent of backlog
+//!   depth, unlike the old full-queue scan whose overtaking grew with
+//!   the backlog. Both bounds are pinned by the fairness property test
+//!   below.
 
 use std::collections::VecDeque;
+
+/// Default reorder window: far enough to form full batches out of
+/// interleaved buckets, small enough that a drain never walks a deep
+/// backlog.
+pub const DEFAULT_REORDER_WINDOW: usize = 64;
 
 /// Generic bucket-grouping batcher over items with a shape key.
 #[derive(Debug)]
 pub struct Batcher<T> {
     pending: VecDeque<(usize, T)>,
     max_batch: usize,
+    reorder_window: usize,
     formed: usize,
+    /// Reused scratch for skipped-over items (no per-drain allocation
+    /// in steady state).
+    scratch: Vec<(usize, T)>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize) -> Self {
-        Batcher { pending: VecDeque::new(), max_batch: max_batch.max(1), formed: 0 }
+        Self::with_window(max_batch, DEFAULT_REORDER_WINDOW)
+    }
+
+    /// Batcher with an explicit reorder window (`0` is clamped to 1:
+    /// the head item always drains).
+    pub fn with_window(max_batch: usize, reorder_window: usize) -> Self {
+        Batcher {
+            pending: VecDeque::new(),
+            max_batch: max_batch.max(1),
+            reorder_window: reorder_window.max(1),
+            formed: 0,
+            scratch: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, bucket: usize, item: T) {
@@ -32,6 +69,22 @@ impl<T> Batcher<T> {
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Current batch-size cap.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Retarget the batch-size cap (the adaptive controller's knob).
+    /// Takes effect on the next [`Self::drain_batch`].
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        self.max_batch = max_batch.max(1);
+    }
+
+    /// The reorder window (starvation bound).
+    pub fn reorder_window(&self) -> usize {
+        self.reorder_window
     }
 
     /// Bucket of the batch the next [`Self::drain_batch`] call would
@@ -49,20 +102,30 @@ impl<T> Batcher<T> {
     /// Drain the next batch: items sharing the bucket of the oldest
     /// pending item, up to `max_batch`, preserving arrival order within
     /// the bucket. Items of other buckets keep their positions.
+    ///
+    /// The scan is bounded: at most `reorder_window` items are examined
+    /// and it stops early once `max_batch` matches are found, so a
+    /// drain is O(min(window, pending)) regardless of backlog depth.
     pub fn drain_batch(&mut self) -> Vec<(usize, T)> {
         let Some(&(lead, _)) = self.pending.front() else {
             return Vec::new();
         };
         let mut batch = Vec::new();
-        let mut rest = VecDeque::with_capacity(self.pending.len());
-        while let Some((b, item)) = self.pending.pop_front() {
-            if b == lead && batch.len() < self.max_batch {
+        let mut scanned = 0usize;
+        while scanned < self.reorder_window && batch.len() < self.max_batch {
+            let Some((b, item)) = self.pending.pop_front() else { break };
+            scanned += 1;
+            if b == lead {
                 batch.push((b, item));
             } else {
-                rest.push_back((b, item));
+                self.scratch.push((b, item));
             }
         }
-        self.pending = rest;
+        // Skipped items return to the front in their original relative
+        // order (reverse push_front of the scratch stack).
+        while let Some(entry) = self.scratch.pop() {
+            self.pending.push_front(entry);
+        }
         if !batch.is_empty() {
             self.formed += 1;
         }
@@ -70,9 +133,112 @@ impl<T> Batcher<T> {
     }
 }
 
+// ---------------------------------------------------------------------
+// AIMD batch-size controller
+// ---------------------------------------------------------------------
+
+/// Configuration-independent AIMD controller for the dispatch batch
+/// size (DESIGN.md §9). Pure decision logic — the pipeline feeds it
+/// `(queue depth, windowed p99)` observations and publishes the result
+/// to the shared `max_batch` knob; the controller holds no clock, no
+/// locks and no references, so it is trivially testable.
+///
+/// Invariants:
+///
+/// * `current` stays within `[min_batch, ceiling]`;
+/// * **additive increase** — grows by `grow_step` only while the queue
+///   is deep (`depth >= depth_threshold`) AND the measured p99 sits
+///   below `p99_target_us * grow_headroom` (the deadband that prevents
+///   grow/shrink oscillation at the target);
+/// * **multiplicative decrease** — on a p99 breach the batch halves
+///   (times `shrink_factor`) at most once per `cooldown_obs`
+///   observations, so one long-tail window cannot collapse the batch to
+///   the floor before its effect is even measurable;
+/// * with depth below the threshold and p99 under target the
+///   controller holds (no drift in either direction).
+#[derive(Debug, Clone)]
+pub struct AimdBatchController {
+    min_batch: usize,
+    ceiling: usize,
+    grow_step: usize,
+    shrink_factor: f64,
+    p99_target_us: u64,
+    grow_headroom: f64,
+    depth_threshold: usize,
+    cooldown_obs: u32,
+    current: usize,
+    cooldown: u32,
+    grows: u64,
+    shrinks: u64,
+}
+
+impl AimdBatchController {
+    pub fn new(cfg: &crate::coordinator::config::AdaptiveBatch) -> Self {
+        let min = cfg.min_batch.max(1);
+        AimdBatchController {
+            min_batch: min,
+            ceiling: cfg.max_batch.max(min),
+            grow_step: cfg.grow_step.max(1),
+            shrink_factor: cfg.shrink_factor.clamp(0.1, 0.99),
+            p99_target_us: cfg.p99_target_us.max(1),
+            grow_headroom: cfg.grow_headroom.clamp(0.1, 1.0),
+            depth_threshold: cfg.depth_threshold.max(1),
+            cooldown_obs: cfg.cooldown_obs,
+            current: min,
+            cooldown: 0,
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    /// The batch size the controller currently recommends.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+
+    /// The configured p99 target in microseconds.
+    pub fn p99_target_us(&self) -> u64 {
+        self.p99_target_us
+    }
+
+    /// Feed one observation window: current queue depth plus the p99
+    /// latency measured over the window (`None` = no completions in the
+    /// window — depth alone then drives growth). Returns the new batch
+    /// size.
+    pub fn observe(&mut self, depth: usize, p99_us: Option<u64>) -> usize {
+        self.cooldown = self.cooldown.saturating_sub(1);
+        let breach = p99_us.is_some_and(|p| p > self.p99_target_us);
+        let headroom = p99_us
+            .map(|p| (p as f64) <= self.p99_target_us as f64 * self.grow_headroom)
+            .unwrap_or(true);
+        if breach {
+            if self.cooldown == 0 && self.current > self.min_batch {
+                let shrunk = (self.current as f64 * self.shrink_factor).floor() as usize;
+                self.current = shrunk.max(self.min_batch);
+                self.shrinks += 1;
+                self.cooldown = self.cooldown_obs;
+            }
+        } else if depth >= self.depth_threshold && headroom && self.current < self.ceiling {
+            self.current = (self.current + self.grow_step).min(self.ceiling);
+            self.grows += 1;
+        }
+        self.current
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::AdaptiveBatch;
+    use crate::util::prop::Cases;
 
     #[test]
     fn groups_by_leading_bucket() {
@@ -130,5 +296,189 @@ mod tests {
         b.drain_batch();
         assert_eq!(b.next_bucket(), None);
         assert_eq!(b.batches_formed(), 2);
+    }
+
+    #[test]
+    fn scan_stops_at_window() {
+        // Window 4: items past the window keep their place even when
+        // they match the lead bucket.
+        let mut b = Batcher::with_window(100, 4);
+        for i in 0..3 {
+            b.push(7, i);
+        }
+        b.push(9, 100);
+        b.push(7, 3); // 5th item: outside the window
+        assert_eq!(b.drain_batch(), vec![(7, 0), (7, 1), (7, 2)]);
+        assert_eq!(b.len(), 2);
+        // Skipped item kept its position ahead of the out-of-window one.
+        assert_eq!(b.drain_batch(), vec![(9, 100)]);
+        assert_eq!(b.drain_batch(), vec![(7, 3)]);
+    }
+
+    #[test]
+    fn scan_stops_at_max_batch_without_disturbing_tail() {
+        // max_batch 2 with a large window: the scan must stop after two
+        // matches, leaving the rest untouched and in order.
+        let mut b = Batcher::with_window(2, 64);
+        for (bucket, id) in [(5, 0), (5, 1), (6, 2), (5, 3)] {
+            b.push(bucket, id);
+        }
+        assert_eq!(b.drain_batch(), vec![(5, 0), (5, 1)]);
+        assert_eq!(b.drain_batch(), vec![(6, 2)]);
+        assert_eq!(b.drain_batch(), vec![(5, 3)]);
+    }
+
+    #[test]
+    fn set_max_batch_takes_effect_next_drain() {
+        let mut b = Batcher::new(1);
+        for i in 0..4 {
+            b.push(3, i);
+        }
+        assert_eq!(b.drain_batch().len(), 1);
+        b.set_max_batch(3);
+        assert_eq!(b.max_batch(), 3);
+        assert_eq!(b.drain_batch().len(), 3);
+        // Clamped at 1.
+        b.set_max_batch(0);
+        assert_eq!(b.max_batch(), 1);
+    }
+
+    /// Fairness bounds (satellite): under adversarial bucket
+    /// interleavings, (a) every item drains within `position + 1`
+    /// drains of the batcher (each drain removes the queue head), and
+    /// (b) no item is overtaken by more than `(w-1)(w-2)/2` items that
+    /// arrived after it — the windowed scan's overtaking bound, flat in
+    /// the backlog depth (the pre-window full-queue scan had no such
+    /// bound).
+    #[test]
+    fn prop_fairness_bounded_wait_and_overtaking() {
+        Cases::default().check("batcher_fairness", |rng| {
+            let window = 1 + (rng.next_u64() % 16) as usize;
+            let max_batch = 1 + (rng.next_u64() % 8) as usize;
+            let n = 40 + (rng.next_u64() % 60) as usize;
+            let buckets = 1 + (rng.next_u64() % 4) as usize;
+            let overtake_bound =
+                window.saturating_sub(1) * window.saturating_sub(2) / 2;
+            let mut b = Batcher::with_window(max_batch, window);
+            for id in 0..n {
+                b.push((rng.next_u64() as usize) % buckets, id);
+            }
+            // (id, drain index it came out in), in completion order.
+            let mut drained: Vec<(usize, usize)> = Vec::new();
+            let mut drains = 0usize;
+            while !b.is_empty() {
+                let batch = b.drain_batch();
+                if batch.is_empty() {
+                    return Err("drain made no progress on non-empty queue".into());
+                }
+                drains += 1;
+                for (_, id) in batch {
+                    drained.push((id, drains));
+                }
+            }
+            if drained.len() != n {
+                return Err(format!("lost items: {} of {}", drained.len(), n));
+            }
+            for (pos, &(id, drain_idx)) in drained.iter().enumerate() {
+                // (a) bounded waiting: arrival ids are 0..n in push
+                // order, so `id` IS the initial queue position.
+                if drain_idx > id + 1 {
+                    return Err(format!(
+                        "item {id} waited {drain_idx} drains > position bound {} \
+                         (window={window}, max_batch={max_batch})",
+                        id + 1
+                    ));
+                }
+                // (b) bounded overtaking.
+                let overtakers =
+                    drained[..pos].iter().filter(|&&(other, _)| other > id).count();
+                if overtakers > overtake_bound {
+                    return Err(format!(
+                        "item {id} overtaken by {overtakers} > bound {overtake_bound} \
+                         (window={window}, max_batch={max_batch}, n={n}, \
+                         buckets={buckets})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn test_cfg() -> AdaptiveBatch {
+        AdaptiveBatch {
+            min_batch: 1,
+            max_batch: 16,
+            grow_step: 2,
+            shrink_factor: 0.5,
+            p99_target_us: 10_000,
+            grow_headroom: 0.8,
+            depth_threshold: 8,
+            observe_every: 64,
+            cooldown_obs: 2,
+        }
+    }
+
+    #[test]
+    fn controller_grows_under_deep_queue_and_settles_at_ceiling() {
+        let mut c = AimdBatchController::new(&test_cfg());
+        assert_eq!(c.current(), 1);
+        for _ in 0..20 {
+            c.observe(100, Some(1_000)); // deep queue, fast p99
+        }
+        assert_eq!(c.current(), 16, "reaches the ceiling");
+        let grows = c.grows();
+        c.observe(100, Some(1_000));
+        assert_eq!(c.current(), 16, "settles: no growth past the ceiling");
+        assert_eq!(c.grows(), grows);
+    }
+
+    #[test]
+    fn controller_shrinks_on_p99_breach_with_cooldown() {
+        let mut c = AimdBatchController::new(&test_cfg());
+        for _ in 0..20 {
+            c.observe(100, Some(1_000));
+        }
+        assert_eq!(c.current(), 16);
+        // Breach: multiplicative shrink...
+        assert_eq!(c.observe(100, Some(50_000)), 8);
+        assert_eq!(c.shrinks(), 1);
+        // ...but a second breach inside the cooldown must NOT shrink
+        // again (one bad window, one cut).
+        assert_eq!(c.observe(100, Some(50_000)), 8);
+        assert_eq!(c.shrinks(), 1);
+        // After the cooldown expires a persistent breach cuts again,
+        // bottoming out at min_batch.
+        for _ in 0..20 {
+            c.observe(100, Some(50_000));
+        }
+        assert_eq!(c.current(), 1);
+    }
+
+    #[test]
+    fn controller_holds_in_deadband_no_oscillation() {
+        let mut c = AimdBatchController::new(&test_cfg());
+        for _ in 0..6 {
+            c.observe(100, Some(1_000));
+        }
+        let settled = c.current();
+        assert!(settled > 1);
+        // p99 between headroom (8 ms) and target (10 ms), queue still
+        // deep: the deadband holds the batch size steady — no
+        // grow/shrink churn around the target.
+        let (g, s) = (c.grows(), c.shrinks());
+        for _ in 0..50 {
+            assert_eq!(c.observe(100, Some(9_000)), settled);
+        }
+        assert_eq!((c.grows(), c.shrinks()), (g, s));
+    }
+
+    #[test]
+    fn controller_holds_on_shallow_queue() {
+        let mut c = AimdBatchController::new(&test_cfg());
+        // Shallow queue: no reason to batch deeper, even with fast p99.
+        for _ in 0..10 {
+            assert_eq!(c.observe(2, Some(100)), 1);
+        }
+        assert_eq!(c.grows(), 0);
     }
 }

@@ -4,7 +4,54 @@ use std::sync::Arc;
 
 use crate::edm::generator::EventConfig;
 
-use super::pipeline::StagePool;
+use super::pipeline::{RouteTapes, StagePool};
+
+/// Adaptive (AIMD) batch-size control for event dispatch (DESIGN.md §9).
+/// `None` on [`PipelineConfig::adaptive`] keeps the fixed `max_batch`
+/// behaviour; `Some` hands the knob to an
+/// [`super::batcher::AimdBatchController`] fed by queue depth and the
+/// windowed end-to-end p99.
+#[derive(Clone, Debug)]
+pub struct AdaptiveBatch {
+    /// Floor (and starting point) of the controlled batch size.
+    pub min_batch: usize,
+    /// Ceiling of the controlled batch size.
+    pub max_batch: usize,
+    /// Additive increase per observation window while the queue is deep.
+    pub grow_step: usize,
+    /// Multiplicative decrease factor on a p99 breach (e.g. 0.5).
+    pub shrink_factor: f64,
+    /// End-to-end p99 target in microseconds; above it the batch shrinks.
+    pub p99_target_us: u64,
+    /// Growth is allowed only while p99 <= target * headroom (deadband
+    /// between grow and shrink thresholds; prevents oscillation).
+    pub grow_headroom: f64,
+    /// Queue depth (in-flight + queued events) required before growing.
+    pub depth_threshold: usize,
+    /// Controller observation cadence, in completed events.
+    pub observe_every: usize,
+    /// Observation windows to wait after a shrink before shrinking again.
+    pub cooldown_obs: u32,
+}
+
+impl Default for AdaptiveBatch {
+    fn default() -> Self {
+        AdaptiveBatch {
+            min_batch: 1,
+            max_batch: 64,
+            grow_step: 2,
+            shrink_factor: 0.5,
+            // The histogram buckets latencies by power of two, so the
+            // target is generous; the smoke run checks p99 stays within
+            // 1.1x of it.
+            p99_target_us: 50_000,
+            grow_headroom: 0.8,
+            depth_threshold: 8,
+            observe_every: 64,
+            cooldown_obs: 2,
+        }
+    }
+}
 
 /// Where events may execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +110,14 @@ pub struct PipelineConfig {
     /// amortises across runs; tests inject a private pool to observe
     /// its counters in isolation.
     pub stage_pool: Option<Arc<StagePool>>,
+    /// Adaptive batch-size control; `None` keeps the fixed `max_batch`.
+    pub adaptive: Option<AdaptiveBatch>,
+    /// Per-route access-pattern tapes; `None` (the default) runs the
+    /// untraced fast paths. `Some` routes staging/reco accessor
+    /// traffic through tracing sources feeding these tapes (autotuner
+    /// measurement runs only — tracing bypasses the cached-plane fast
+    /// path by design).
+    pub trace: Option<Arc<RouteTapes>>,
 }
 
 impl PipelineConfig {
@@ -82,6 +137,8 @@ impl PipelineConfig {
             max_batch: 16,
             warm_buckets: vec![bucket],
             stage_pool: None,
+            adaptive: None,
+            trace: None,
         }
     }
 }

@@ -63,6 +63,35 @@ impl LatencyHisto {
         }
         self.max()
     }
+
+    /// Point-in-time copy of the raw bucket counters. The adaptive
+    /// controller diffs two of these to compute a *windowed* quantile —
+    /// the cumulative [`Self::quantile`] is too sluggish for control
+    /// once the histogram holds a long history.
+    pub fn bucket_counts(&self) -> [u64; 32] {
+        std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed))
+    }
+}
+
+/// Quantile of the *delta* between two bucket snapshots (`prev` taken
+/// before the window, `cur` after). Returns `None` when no observation
+/// landed in the window. Same upper-bound convention as
+/// [`LatencyHisto::quantile`].
+pub fn quantile_between(prev: &[u64; 32], cur: &[u64; 32], q: f64) -> Option<Duration> {
+    let deltas: [u64; 32] = std::array::from_fn(|b| cur[b].saturating_sub(prev[b]));
+    let total: u64 = deltas.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let target = (total as f64 * q).ceil() as u64;
+    let mut seen = 0;
+    for (b, &d) in deltas.iter().enumerate() {
+        seen += d;
+        if seen >= target {
+            return Some(Duration::from_micros(1u64 << (b + 1)));
+        }
+    }
+    Some(Duration::from_micros(1u64 << 32))
 }
 
 /// All pipeline counters (shared by reference across threads).
@@ -104,6 +133,13 @@ pub struct PipelineMetrics {
     pub sched_injected: AtomicUsize,
     pub sched_local_pushes: AtomicUsize,
     pub sched_steals: AtomicUsize,
+    /// Adaptive batch controller: additive grow steps taken.
+    pub batch_grows: AtomicU64,
+    /// Adaptive batch controller: multiplicative shrinks taken.
+    pub batch_shrinks: AtomicU64,
+    /// Batch size the controller settled on (fixed `max_batch` when the
+    /// controller is off).
+    pub max_batch_final: AtomicUsize,
     pub host_latency: LatencyHisto,
     pub device_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
@@ -173,6 +209,17 @@ pub struct MetricsSnapshot {
     pub sched_injected: usize,
     pub sched_local_pushes: usize,
     pub sched_steals: usize,
+    /// Adaptive batch controller activity (zero when the controller is
+    /// off).
+    pub batch_grows: u64,
+    pub batch_shrinks: u64,
+    /// Final batch size (the fixed `max_batch` when the controller is
+    /// off).
+    pub max_batch_final: usize,
+    /// Per-route access-pattern summaries; empty unless the run traced
+    /// (`PipelineConfig::trace`). Filled by `run_pipeline` after the
+    /// counter snapshot.
+    pub trace_routes: Vec<crate::marionette::trace::RouteTraceSummary>,
     /// Per-shard plan-cache counters at snapshot time (process-wide).
     pub plan_cache_shards: [crate::marionette::transfer::PlanCacheShardStats;
         crate::marionette::transfer::PLAN_CACHE_SHARDS],
@@ -217,6 +264,10 @@ impl PipelineMetrics {
             sched_injected: self.sched_injected.load(Ordering::Relaxed),
             sched_local_pushes: self.sched_local_pushes.load(Ordering::Relaxed),
             sched_steals: self.sched_steals.load(Ordering::Relaxed),
+            batch_grows: self.batch_grows.load(Ordering::Relaxed),
+            batch_shrinks: self.batch_shrinks.load(Ordering::Relaxed),
+            max_batch_final: self.max_batch_final.load(Ordering::Relaxed),
+            trace_routes: Vec::new(),
             plan_cache_shards: crate::marionette::transfer::plan_cache_shard_stats(),
         }
     }
@@ -225,7 +276,7 @@ impl PipelineMetrics {
 impl MetricsSnapshot {
     /// Multi-line human-readable report.
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "events: in={} host={} device={} spilled={}\n\
              particles: {}\n\
              transfers: planned={} bytes={} plan-cache hits={} misses={}\n\
@@ -267,7 +318,23 @@ impl MetricsSnapshot {
             self.sched_steals,
             self.plan_cache_shards.iter().filter(|s| s.hits + s.misses > 0).count(),
             self.plan_cache_shards.len(),
-        )
+        );
+        out.push_str(&format!(
+            "\nadaptive: grows={} shrinks={} max-batch-final={}",
+            self.batch_grows, self.batch_shrinks, self.max_batch_final
+        ));
+        for r in &self.trace_routes {
+            out.push_str(&format!(
+                "\ntrace[{}]: reads={} writes={} seq={:.2} record={:.2} -> {}",
+                r.route,
+                r.total_reads,
+                r.total_writes,
+                r.seq_fraction,
+                r.record_fraction,
+                r.choice.as_str()
+            ));
+        }
+        out
     }
 }
 
@@ -293,6 +360,27 @@ mod tests {
     fn quantile_of_empty_is_zero() {
         let h = LatencyHisto::default();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn windowed_quantile_sees_only_the_delta() {
+        let h = LatencyHisto::default();
+        // History: a thousand fast events.
+        for _ in 0..1000 {
+            h.record(Duration::from_micros(10));
+        }
+        let prev = h.bucket_counts();
+        // Empty window: no observations.
+        assert_eq!(quantile_between(&prev, &h.bucket_counts(), 0.99), None);
+        // Window holds only slow events; the cumulative quantile would
+        // still report the fast history, the windowed one must not.
+        for _ in 0..10 {
+            h.record(Duration::from_micros(5_000));
+        }
+        let cur = h.bucket_counts();
+        let windowed = quantile_between(&prev, &cur, 0.99).unwrap();
+        assert!(windowed >= Duration::from_micros(5_000), "windowed={windowed:?}");
+        assert!(h.quantile(0.99) <= Duration::from_micros(64), "cumulative stays fast");
     }
 
     #[test]

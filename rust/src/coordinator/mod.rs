@@ -20,8 +20,10 @@ pub mod metrics;
 pub mod pipeline;
 pub mod router;
 
-pub use config::{PipelineConfig, RoutePolicy};
+pub use batcher::{AimdBatchController, Batcher};
+pub use config::{AdaptiveBatch, PipelineConfig, RoutePolicy};
 pub use metrics::{MetricsSnapshot, PipelineMetrics};
 pub use pipeline::{
-    run_pipeline, EventResult, PipelineReport, Route, StageCtx, StagePool, StagedParticles,
+    run_pipeline, EventResult, PipelineReport, Route, RouteTapes, StageCtx, StagePool,
+    StagedParticles,
 };

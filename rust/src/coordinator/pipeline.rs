@@ -44,6 +44,7 @@
 //! [`TransferPlan`]: crate::marionette::transfer::TransferPlan
 //! [`PoolContext`]: crate::marionette::memory::PoolContext
 
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{channel, sync_channel};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
@@ -52,20 +53,22 @@ use anyhow::{Context, Result};
 
 use crate::edm::generator::{EventGenerator, RawEvent};
 use crate::edm::particle::{ParticleCollection, ParticleProps};
-use crate::edm::sensor::{SensorCollection, SensorProps, SensorView};
+use crate::edm::sensor::{SensorCollection, SensorProps, SensorView, SensorViewMut};
 use crate::edm::{calib, reco};
+use crate::marionette::interface::TracingSource;
 use crate::marionette::layout::{AoS, Layout, SoAVec};
 use crate::marionette::memory::{
     CountingContext, CountingInfo, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext,
     StagingInfo,
 };
+use crate::marionette::trace::{RouteTraceSummary, TraceTape};
 use crate::marionette::transfer;
 use crate::runtime::Engine;
 use crate::util::pool::{ObjectPool, ObjectPoolStats, Recycler, ThreadPool};
 
-use super::batcher::Batcher;
+use super::batcher::{AimdBatchController, Batcher};
 use super::config::PipelineConfig;
-use super::metrics::{MetricsSnapshot, PipelineMetrics};
+use super::metrics::{quantile_between, MetricsSnapshot, PipelineMetrics};
 use super::router::{QueueGauge, Router};
 
 /// Which path processed an event.
@@ -319,6 +322,86 @@ pub fn process_device_staged<L: Layout>(
     Ok((back.data.len(), energy, timing, stats.bytes))
 }
 
+/// Per-route access-pattern tapes for the autotuner's measurement runs
+/// (DESIGN.md §9): `staging` counts the calibration pass's reads and
+/// writes, `gather` the device-download gather reads, `reco` the
+/// reconstruction stencil reads. All three tape the one sensor schema;
+/// [`RouteTapes::summaries`] drops routes that never executed (a
+/// host-only run reports no `gather` heatmap).
+#[derive(Debug)]
+pub struct RouteTapes {
+    pub staging: TraceTape,
+    pub gather: TraceTape,
+    pub reco: TraceTape,
+}
+
+impl RouteTapes {
+    pub fn new() -> Arc<RouteTapes> {
+        let schema = SensorProps::schema();
+        Arc::new(RouteTapes {
+            staging: TraceTape::new("staging", &schema),
+            gather: TraceTape::new("gather", &schema),
+            reco: TraceTape::new("reco", &schema),
+        })
+    }
+
+    /// Snapshots of the routes that recorded at least one access.
+    pub fn summaries(&self) -> Vec<RouteTraceSummary> {
+        [&self.staging, &self.gather, &self.reco]
+            .into_iter()
+            .filter(|t| !t.is_empty())
+            .map(|t| t.snapshot())
+            .collect()
+    }
+}
+
+/// [`process_host_staged`] with the calibration and reconstruction
+/// accessor traffic routed through tracing sources onto the autotuner
+/// tapes. Measurement runs only: a tracing source advertises no cached
+/// plane, so every access takes the per-element path the tape counts —
+/// the untraced entry points compile exactly as before.
+pub fn process_host_staged_traced<L: Layout>(
+    ev: &RawEvent,
+    staged: &mut ParticleCollection<L>,
+    tapes: &RouteTapes,
+) -> (usize, f64, usize) {
+    let mut col = ev.to_collection::<SoAVec>();
+    {
+        let mut src = col.traced_mut(&tapes.staging);
+        let mut v = SensorViewMut::attach(&mut src).expect("traced staging attach");
+        calib::calibrate_view(&mut v);
+    }
+    let particles = {
+        let src = col.traced(&tapes.reco);
+        let v = SensorView::attach(&src).expect("traced reco attach");
+        reco::reconstruct(&v)
+    };
+    let pc = reco::into_collection::<SoAVec>(ev.event_id, &particles);
+    let stats = pc.stage_into(staged);
+    let back = reco::fill_back_aos(staged);
+    let energy = back.data.iter().map(|p| p.energy as f64).sum();
+    (back.data.len(), energy, stats.bytes)
+}
+
+/// [`process_device_staged`] with the download gather reads taped; see
+/// [`process_host_staged_traced`].
+pub fn process_device_staged_traced<L: Layout>(
+    engine: &Engine,
+    ev: &RawEvent,
+    staged: &mut ParticleCollection<L>,
+    tapes: &RouteTapes,
+) -> Result<(usize, f64, crate::runtime::ExecTiming, usize)> {
+    let (s, p, timing) = engine.run_full_event(ev)?;
+    let planes = crate::runtime::downloaded_planes(ev, &s)?;
+    let traced = TracingSource::new(&planes, &tapes.gather);
+    let view = SensorView::attach(&traced)?;
+    let pc = reco::particles_from_download::<SoAVec, _>(&view, &p.seeds, &p.sums);
+    let stats = pc.stage_into(staged);
+    let back = reco::fill_back_aos(staged);
+    let energy = back.data.iter().map(|p| p.energy as f64).sum();
+    Ok((back.data.len(), energy, timing, stats.bytes))
+}
+
 /// Bounded-in-flight gate for the host path: the source acquires one
 /// permit per dispatched task, the task's RAII permit releases on
 /// completion (a panicking task cannot leak its permit). This replaces
@@ -342,6 +425,12 @@ impl Gate {
         }
         *g += 1;
         GatePermit(self.clone())
+    }
+
+    /// Currently outstanding permits (the host path's queue depth; the
+    /// adaptive controller reads this as part of its load signal).
+    fn in_flight(&self) -> usize {
+        *self.state.lock().unwrap()
     }
 }
 
@@ -368,9 +457,10 @@ fn device_worker_loop(
     tx: std::sync::mpsc::Sender<EventResult>,
     metrics: Arc<PipelineMetrics>,
     gauge: QueueGauge,
-    max_batch: usize,
+    max_batch: Arc<AtomicUsize>,
     warm_buckets: Vec<usize>,
     pool: Arc<StagePool>,
+    tapes: Option<Arc<RouteTapes>>,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
     let engine = match Engine::load_default() {
@@ -417,8 +507,12 @@ fn device_worker_loop(
     let mut sensors_staged =
         SensorCollection::<SoAVec<StagingContext>>::new_in(staging_info.clone());
     let mut warmed_bucket = None;
-    let mut batcher: Batcher<Task> = Batcher::new(max_batch);
+    let mut batcher: Batcher<Task> = Batcher::new(max_batch.load(Relaxed).max(1));
     loop {
+        // Refresh the (possibly adaptive) batch bound before each
+        // wakeup; with a fixed config the load returns the same value
+        // every iteration.
+        batcher.set_max_batch(max_batch.load(Relaxed).max(1));
         // Block for one task, then opportunistically drain more.
         match dev_rx.recv() {
             Ok(t) => {
@@ -452,7 +546,13 @@ fn device_worker_loop(
                 metrics.planned_transfers.fetch_add(1, Relaxed);
                 metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
                 let mut particles_staged = pool.checkout();
-                match process_device_staged(&engine, &task.ev, &mut *particles_staged) {
+                let outcome = match &tapes {
+                    Some(t) => {
+                        process_device_staged_traced(&engine, &task.ev, &mut *particles_staged, t)
+                    }
+                    None => process_device_staged(&engine, &task.ev, &mut *particles_staged),
+                };
+                match outcome {
                     Ok((n, energy, timing, bytes)) => {
                         let latency = task.enqueued.elapsed();
                         metrics.events_device.fetch_add(1, Relaxed);
@@ -505,6 +605,52 @@ fn device_worker_loop(
     }
 }
 
+/// Dispatch one adaptive host group: a single pool task processes the
+/// buffered events back-to-back over one pooled staging destination,
+/// releasing each event's gate permit as it completes. Grouping trades
+/// per-event spawn overhead against tail latency; the AIMD controller
+/// moves the group size along exactly that trade-off.
+fn flush_host_group(
+    group: Vec<(Task, GatePermit)>,
+    host_pool: &ThreadPool,
+    res_tx: &std::sync::mpsc::Sender<EventResult>,
+    metrics: &Arc<PipelineMetrics>,
+    stage_pool: &Arc<StagePool>,
+    tapes: Option<Arc<RouteTapes>>,
+) {
+    if group.is_empty() {
+        return;
+    }
+    let tx = res_tx.clone();
+    let metrics = metrics.clone();
+    let pool = stage_pool.clone();
+    host_pool.spawn(move || {
+        use std::sync::atomic::Ordering::Relaxed;
+        let mut staged = pool.checkout();
+        for (task, permit) in group {
+            let (n, energy, bytes) = match &tapes {
+                Some(t) => process_host_staged_traced(&task.ev, &mut *staged, t),
+                None => process_host_staged(&task.ev, &mut *staged),
+            };
+            let latency = task.enqueued.elapsed();
+            metrics.events_host.fetch_add(1, Relaxed);
+            metrics.particles_out.fetch_add(n, Relaxed);
+            metrics.planned_transfers.fetch_add(1, Relaxed);
+            metrics.planned_bytes.fetch_add(bytes, Relaxed);
+            metrics.host_latency.record(latency);
+            metrics.e2e_latency.record(latency);
+            let _ = tx.send(EventResult {
+                event_id: task.ev.event_id,
+                route: Route::Host,
+                n_particles: n,
+                total_energy: energy,
+                latency,
+            });
+            drop(permit);
+        }
+    });
+}
+
 /// Run the full pipeline to completion.
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     // Compile-once setup: register the EDM's specialized rungs and warm
@@ -540,6 +686,22 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     let host_pool = ThreadPool::new(cfg.host_workers.max(1));
     let host_gate = Gate::new(cfg.queue_depth);
 
+    // Adaptive batch control (DESIGN.md §9): one shared knob, read by
+    // every device batcher and by the host group dispatcher below. The
+    // effective ceiling is clamped to half the gate depth so the source
+    // can never hold every permit while still waiting to fill a group
+    // (buffered permits < gate limit ⇒ some in-flight task can always
+    // finish and wake the source: deadlock-free by construction).
+    let adaptive = cfg.adaptive.clone().map(|mut a| {
+        a.max_batch = a.max_batch.clamp(1, (cfg.queue_depth / 2).max(1));
+        a.min_batch = a.min_batch.clamp(1, a.max_batch);
+        a
+    });
+    let mut controller = adaptive.as_ref().map(AimdBatchController::new);
+    let shared_max_batch = Arc::new(AtomicUsize::new(
+        controller.as_ref().map(|c| c.current()).unwrap_or(cfg.max_batch.max(1)),
+    ));
+
     // Device path: N worker threads, each owning its own engine and
     // bounded queue (the engine's PJRT handles are single-threaded).
     // The router spills on the *aggregate* gauge across workers.
@@ -551,12 +713,22 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
             let tx = res_tx.clone();
             let metrics = metrics.clone();
             let gauge = gauge.clone();
-            let max_batch = cfg.max_batch;
+            let max_batch = shared_max_batch.clone();
             let warm_buckets = cfg.warm_buckets.clone();
             let pool = stage_pool.clone();
+            let tapes = cfg.trace.clone();
             dev_txs.push(dev_tx);
             dev_threads.push(std::thread::spawn(move || {
-                device_worker_loop(dev_rx, tx, metrics, gauge, max_batch, warm_buckets, pool);
+                device_worker_loop(
+                    dev_rx,
+                    tx,
+                    metrics,
+                    gauge,
+                    max_batch,
+                    warm_buckets,
+                    pool,
+                    tapes,
+                );
             }));
         }
     }
@@ -564,7 +736,10 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     // Source + router (this thread).
     let mut gen = EventGenerator::new(cfg.event.clone(), cfg.seed);
     let mut next_dev = 0usize;
-    for _ in 0..cfg.n_events {
+    let mut host_buffer: Vec<(Task, GatePermit)> = Vec::new();
+    let mut prev_buckets = metrics.e2e_latency.bucket_counts();
+    let observe_every = adaptive.as_ref().map(|a| a.observe_every.max(1)).unwrap_or(1);
+    for produced in 0..cfg.n_events {
         let ev = gen.generate();
         metrics.events_in.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let d = router.decide(ev.rows, ev.cols);
@@ -573,11 +748,31 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         }
         let task = Task { ev, enqueued: Instant::now() };
         match d.route {
+            Route::Host if controller.is_some() => {
+                // Adaptive host path: buffer up to the controlled batch
+                // size, then dispatch the group as one pool task. The
+                // permits are acquired here (backpressure holds) and
+                // released per event inside the group.
+                let permit = host_gate.acquire();
+                host_buffer.push((task, permit));
+                let bound = shared_max_batch.load(std::sync::atomic::Ordering::Relaxed);
+                if host_buffer.len() >= bound.max(1) {
+                    flush_host_group(
+                        std::mem::take(&mut host_buffer),
+                        &host_pool,
+                        &res_tx,
+                        &metrics,
+                        &stage_pool,
+                        cfg.trace.clone(),
+                    );
+                }
+            }
             Route::Host => {
                 let permit = host_gate.acquire();
                 let tx = res_tx.clone();
                 let metrics = metrics.clone();
                 let pool = stage_pool.clone();
+                let tapes = cfg.trace.clone();
                 host_pool.spawn(move || {
                     let _permit = permit;
                     // Draw the staging destination from this thread's
@@ -586,7 +781,10 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                     // cached plan (a lock-free per-thread handle hit)
                     // executes into it with zero allocations.
                     let mut staged = pool.checkout();
-                    let (n, energy, bytes) = process_host_staged(&task.ev, &mut *staged);
+                    let (n, energy, bytes) = match &tapes {
+                        Some(t) => process_host_staged_traced(&task.ev, &mut *staged, t),
+                        None => process_host_staged(&task.ev, &mut *staged),
+                    };
                     let latency = task.enqueued.elapsed();
                     use std::sync::atomic::Ordering::Relaxed;
                     metrics.events_host.fetch_add(1, Relaxed);
@@ -611,7 +809,32 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                 dev_txs[w].send(task).context("device queue closed")?;
             }
         }
+        // Measured feedback: every `observe_every` dispatched events the
+        // controller reads the load (outstanding host permits + device
+        // queue depth) and the *windowed* e2e p99 (bucket delta since
+        // the last observation — the cumulative histogram would be far
+        // too sluggish to steer with), then publishes the next bound.
+        if let Some(c) = controller.as_mut() {
+            if (produced + 1) % observe_every == 0 {
+                let cur = metrics.e2e_latency.bucket_counts();
+                let p99 = quantile_between(&prev_buckets, &cur, 0.99)
+                    .map(|d| d.as_micros() as u64);
+                prev_buckets = cur;
+                let depth = host_gate.in_flight() + gauge.depth();
+                let next = c.observe(depth, p99);
+                shared_max_batch.store(next, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
     }
+    // Tail group: whatever is still buffered below the batch bound.
+    flush_host_group(
+        host_buffer,
+        &host_pool,
+        &res_tx,
+        &metrics,
+        &stage_pool,
+        cfg.trace.clone(),
+    );
     drop(res_tx);
     drop(dev_txs);
 
@@ -626,13 +849,28 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
 
     metrics.set_pool_counters(&stage_pool);
     metrics.set_sched_counters(&host_pool.stats());
-    Ok(PipelineReport { wall, results, metrics: metrics.snapshot() })
+    {
+        use std::sync::atomic::Ordering::Relaxed;
+        match &controller {
+            Some(c) => {
+                metrics.batch_grows.store(c.grows(), Relaxed);
+                metrics.batch_shrinks.store(c.shrinks(), Relaxed);
+                metrics.max_batch_final.store(c.current(), Relaxed);
+            }
+            None => metrics.max_batch_final.store(cfg.max_batch.max(1), Relaxed),
+        }
+    }
+    let mut snapshot = metrics.snapshot();
+    if let Some(t) = &cfg.trace {
+        snapshot.trace_routes = t.summaries();
+    }
+    Ok(PipelineReport { wall, results, metrics: snapshot })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::RoutePolicy;
+    use crate::coordinator::config::{AdaptiveBatch, RoutePolicy};
     use crate::edm::generator::EventConfig;
 
     fn base_cfg(n: usize) -> PipelineConfig {
@@ -734,6 +972,71 @@ mod tests {
         let rep = run_pipeline(&cfg).unwrap();
         assert_eq!(rep.metrics.events_host, 8);
         assert_eq!(rep.metrics.events_device, 0);
+    }
+
+    #[test]
+    fn adaptive_host_run_completes_and_moves_the_knob() {
+        let mut cfg = base_cfg(64);
+        cfg.device = false;
+        cfg.policy = RoutePolicy::HostOnly;
+        cfg.queue_depth = 16;
+        cfg.adaptive = Some(AdaptiveBatch {
+            min_batch: 1,
+            max_batch: 8,
+            grow_step: 2,
+            shrink_factor: 0.5,
+            // Unreachable target: growth is gated only on depth here.
+            p99_target_us: u64::MAX / 4,
+            grow_headroom: 0.8,
+            depth_threshold: 0,
+            observe_every: 8,
+            cooldown_obs: 2,
+        });
+        let rep = run_pipeline(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 64);
+        assert_eq!(rep.metrics.events_host, 64);
+        // depth_threshold 0: every observation window grows until the
+        // (queue-depth-clamped) ceiling, so the knob must have moved.
+        assert!(rep.metrics.batch_grows >= 1, "controller never grew");
+        assert!(rep.metrics.max_batch_final >= 1);
+        assert!(rep.metrics.max_batch_final <= 8, "ceiling violated");
+        // Nothing lost or duplicated by group dispatch.
+        for (i, r) in rep.results.iter().enumerate() {
+            assert_eq!(r.event_id, i as u64);
+        }
+        assert!(rep.report().contains("adaptive:"));
+    }
+
+    #[test]
+    fn traced_run_fills_route_summaries_and_matches_untraced_physics() {
+        let mut cfg = base_cfg(6);
+        cfg.device = false;
+        cfg.policy = RoutePolicy::HostOnly;
+        cfg.trace = Some(RouteTapes::new());
+        let rep = run_pipeline(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 6);
+        let routes: Vec<&str> = rep.metrics.trace_routes.iter().map(|r| r.route).collect();
+        assert!(routes.contains(&"staging"), "staging tape empty: {routes:?}");
+        assert!(routes.contains(&"reco"), "reco tape empty: {routes:?}");
+        assert!(!routes.contains(&"gather"), "gather taped on a host-only run");
+        for r in &rep.metrics.trace_routes {
+            assert!(r.total_reads > 0, "route {} recorded no reads", r.route);
+            assert!(!r.per_field.is_empty());
+        }
+        // Calibration writes energy/noise/sig per sensor.
+        let staging =
+            rep.metrics.trace_routes.iter().find(|r| r.route == "staging").unwrap();
+        assert!(staging.total_writes > 0, "calibration writes not taped");
+
+        let mut plain = base_cfg(6);
+        plain.device = false;
+        plain.policy = RoutePolicy::HostOnly;
+        let pl = run_pipeline(&plain).unwrap();
+        for (a, b) in rep.results.iter().zip(&pl.results) {
+            assert_eq!(a.event_id, b.event_id);
+            assert_eq!(a.n_particles, b.n_particles, "tracing changed physics");
+            assert!((a.total_energy - b.total_energy).abs() < 1e-9);
+        }
     }
 
     #[test]

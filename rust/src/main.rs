@@ -11,6 +11,10 @@
 //!                         against a committed baseline (DESIGN.md §7)
 //!   saturate [...]        host-path saturation sweep over worker
 //!                         counts: events/s + p50/p95/p99 tail latency
+//!                         (--adaptive hands the batch knob to the
+//!                         AIMD controller and compares vs fixed)
+//!   autotune [...]        measured-feedback autotuner: traced access
+//!                         heatmaps per route + layout ablation check
 //!   doctor                environment + artifact checks
 //!
 //! Shared flags: --quick (small grids, short harness), --grid N,
@@ -45,6 +49,8 @@ struct Args {
     out: Option<String>,
     gate: Option<String>,
     write_baseline: bool,
+    adaptive: bool,
+    p99_target_us: Option<u64>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -74,6 +80,8 @@ fn parse_args() -> Result<Args> {
             "--out" => args.out = Some(val("--out")?),
             "--gate" => args.gate = Some(val("--gate")?),
             "--write-baseline" => args.write_baseline = true,
+            "--adaptive" => args.adaptive = true,
+            "--p99-target-us" => args.p99_target_us = Some(val("--p99-target-us")?.parse()?),
             "--particles" => {
                 args.particles = Some(
                     val("--particles")?
@@ -197,13 +205,35 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     println!("wrote {}", out.display());
 
     if args.write_baseline {
+        // Committed baselines carry *where* they were measured so a
+        // gate failure on a different host is interpretable. collect()
+        // itself always stamps plain "measured" — only the baseline
+        // write path adds provenance detail.
+        let mut stamped = run.clone();
+        stamped.provenance = format!(
+            "measured:host={},workers={}",
+            hostname(),
+            opts.workers.iter().map(|w| w.to_string()).collect::<Vec<_>>().join("/")
+        );
         let base_path = std::path::PathBuf::from("BENCH_baseline.json");
-        run.save(&base_path)?;
-        println!("baseline updated -> {} (commit it)", base_path.display());
+        stamped.save(&base_path)?;
+        println!(
+            "baseline updated -> {} (provenance {}; commit it)",
+            base_path.display(),
+            stamped.provenance
+        );
     }
 
     if let Some(gate) = &args.gate {
         let baseline = BenchReport::load(std::path::Path::new(gate))?;
+        if baseline.provenance == "estimated-unmeasured-seed" {
+            eprintln!(
+                "WARNING: baseline {gate} is hand-estimated (provenance \
+                 'estimated-unmeasured-seed'), not measured — gate numbers are \
+                 guesses; run `repro bench-report --write-baseline` on a quiet \
+                 host and commit the result"
+            );
+        }
         let failures = report::compare(&run, &baseline);
         if failures.is_empty() {
             println!(
@@ -221,6 +251,124 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Best-effort host name for baseline provenance stamps.
+fn hostname() -> String {
+    std::process::Command::new("uname")
+        .arg("-n")
+        .output()
+        .ok()
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown-host".to_string())
+}
+
+/// Adaptive saturation: the same small-event host sweep, but with the
+/// AIMD controller steering the batch bound. Per worker count this
+/// runs the fixed-dispatch reference first (on the host-only path the
+/// fixed `max_batch` knob bounds only the *device* batcher, so one
+/// per-event-dispatch run IS the whole fixed ladder), then the
+/// adaptive run, and bails when the controller never moved, when
+/// adaptive throughput falls catastrophically below fixed, or when
+/// p99 overshoots the target by more than 10%.
+fn cmd_saturate_adaptive(args: &Args) -> Result<()> {
+    use marionette::bench_support::report::{
+        run_saturation, run_saturation_adaptive, BenchPoint, BenchReport, BenchSeries, Better,
+        SERIES_ADAPTIVE, SERIES_ADAPTIVE_P99,
+    };
+    use marionette::coordinator::AdaptiveBatch;
+
+    let grid = args.grid.unwrap_or(if args.quick { 32 } else { 64 });
+    let events = args.events.unwrap_or(if args.quick { 4_000 } else { 20_000 });
+    let workers = args.workers.clone().unwrap_or_else(|| vec![1, 2, 4]);
+    if workers.is_empty() || workers.contains(&0) {
+        bail!("--workers needs a comma list of counts >= 1");
+    }
+    let target_us = args.p99_target_us.unwrap_or(AdaptiveBatch::default().p99_target_us);
+
+    println!(
+        "== adaptive saturation: {events} events of {grid}x{grid}, \
+         workers {workers:?}, p99 target {target_us}us =="
+    );
+    let mut tp = Vec::new();
+    let mut p99 = Vec::new();
+    for &w in &workers {
+        let fixed = run_saturation(grid, events, w)?;
+        let fixed_evs = fixed.events_per_sec();
+        let rep = run_saturation_adaptive(grid, events, w, Some(target_us))?;
+        let evs = rep.events_per_sec();
+        let m = &rep.metrics;
+        let p99_us = m.e2e_p99.as_micros() as f64;
+        println!(
+            "workers={w}: adaptive {evs:.1} ev/s vs fixed {fixed_evs:.1} ev/s \
+             ({:.2}x) | p99={:?} | grows={} shrinks={} max-batch-final={}",
+            evs / fixed_evs.max(1e-9),
+            m.e2e_p99,
+            m.batch_grows,
+            m.batch_shrinks,
+            m.max_batch_final,
+        );
+        if m.batch_grows + m.batch_shrinks == 0 {
+            bail!("workers={w}: controller never moved the batch bound (grows+shrinks == 0)");
+        }
+        if p99_us > target_us as f64 * 1.1 {
+            bail!(
+                "workers={w}: p99 {p99_us:.0}us exceeds target {target_us}us by more than 10%"
+            );
+        }
+        if evs < fixed_evs * 0.8 {
+            bail!(
+                "workers={w}: adaptive {evs:.1} ev/s fell below 0.8x of the fixed \
+                 dispatch {fixed_evs:.1} ev/s"
+            );
+        }
+        tp.push(BenchPoint { label: format!("workers={w}"), value: evs });
+        p99.push(BenchPoint { label: format!("workers={w}"), value: p99_us });
+    }
+
+    let report = BenchReport {
+        quick: args.quick,
+        provenance: "measured".to_string(),
+        series: vec![
+            BenchSeries {
+                name: SERIES_ADAPTIVE.to_string(),
+                unit: "events_per_sec".to_string(),
+                better: Better::Higher,
+                tolerance: 0.3,
+                points: tp,
+            },
+            BenchSeries {
+                name: SERIES_ADAPTIVE_P99.to_string(),
+                unit: "microseconds".to_string(),
+                better: Better::Lower,
+                tolerance: 0.0,
+                points: p99,
+            },
+        ],
+    };
+    let out = std::path::PathBuf::from(args.out.as_deref().unwrap_or("BENCH_run.json"));
+    report.save(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// The measured-feedback autotuner: traced pipeline run -> per-route
+/// access heatmaps -> layout recommendation -> timed ablation check
+/// (DESIGN.md §9).
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let outcome = marionette::bench_support::autotune::run_autotune(args.quick)?;
+    println!("{}", outcome.rendered);
+    let mismatches = outcome.ablation.iter().filter(|r| !r.matched()).count();
+    if mismatches > 0 {
+        println!(
+            "note: {mismatches}/{} routes where the traced recommendation was not \
+             within 1.25x of the measured-best layout (timing noise on small \
+             kernels; see the per-layout times above)",
+            outcome.ablation.len()
+        );
+    }
+    Ok(())
+}
+
 /// Saturation sweep: many small host-only events per worker count;
 /// reports events/s + tail latency per count, bails on catastrophic
 /// scaling loss (< 0.8x from 1 worker to the max), and writes the
@@ -230,6 +378,10 @@ fn cmd_saturate(args: &Args) -> Result<()> {
         run_saturation, BenchPoint, BenchReport, BenchSeries, Better, SERIES_SATURATION,
         SERIES_SATURATION_P99,
     };
+
+    if args.adaptive {
+        return cmd_saturate_adaptive(args);
+    }
 
     let grid = args.grid.unwrap_or(if args.quick { 32 } else { 64 });
     let events = args.events.unwrap_or(if args.quick { 4_000 } else { 20_000 });
@@ -359,18 +511,25 @@ fn run() -> Result<()> {
         }
         "bench-report" => cmd_bench_report(&args),
         "saturate" => cmd_saturate(&args),
+        "autotune" => cmd_autotune(&args),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!(
                 "repro <command> [flags]\n\
                  commands: demo | run-pipeline | fig1 | fig2 | zero-cost | \
-                 transfers | ablation | bench-report | saturate | doctor\n\
+                 transfers | ablation | bench-report | saturate | autotune | \
+                 doctor\n\
                  flags: --quick --grid N --grids a,b,c --events N \
                  --particles a,b,c --workers a,b,c --dev-workers N \
                  --policy host|device|auto --no-device --csv NAME\n\
                  bench-report: --out PATH --gate BASELINE --write-baseline\n\
                  saturate: --events N --workers a,b,c --out PATH (events/s + \
-                 p50/p95/p99 tail-latency sweep over host worker counts)"
+                 p50/p95/p99 tail-latency sweep over host worker counts); \
+                 --adaptive [--p99-target-us N] steers the batch bound with \
+                 the AIMD controller and compares against fixed dispatch\n\
+                 autotune: --quick (traced access heatmaps per route + \
+                 layout-selection ablation; writes \
+                 bench_results/autotune_heatmap.csv)"
             );
             Ok(())
         }

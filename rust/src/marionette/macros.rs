@@ -480,6 +480,36 @@ macro_rules! marionette_collection {
                 $crate::marionette::transfer::plan_for::<L2, L>(self.raw.schema())
             }
 
+            /// Wrap this collection in an access-tracing source: attach
+            /// a view to the result and every accessor call is booked
+            /// on `tape` (reads; see
+            /// [`Self::traced_mut`] for writes) before resolving
+            /// against the underlying storage. The tape must have been
+            /// built over this collection's schema. Tracing is per-call
+            /// opt-in — views attached to `&self` directly are
+            /// unaffected (DESIGN.md §9).
+            pub fn traced<'a>(
+                &'a self,
+                tape: &'a $crate::marionette::trace::TraceTape,
+            ) -> $crate::marionette::interface::TracingSource<
+                'a,
+                $crate::marionette::collection::RawCollection<L>,
+            > {
+                $crate::marionette::interface::TracingSource::new(&self.raw, tape)
+            }
+
+            /// Mutable twin of [`Self::traced`]: wraps the collection
+            /// for a `ViewMut`, booking reads and writes on `tape`.
+            pub fn traced_mut<'a>(
+                &'a mut self,
+                tape: &'a $crate::marionette::trace::TraceTape,
+            ) -> $crate::marionette::interface::TracingSourceMut<
+                'a,
+                $crate::marionette::collection::RawCollection<L>,
+            > {
+                $crate::marionette::interface::TracingSourceMut::new(&mut self.raw, tape)
+            }
+
             // ---- per-item scalar accessors --------------------------
 
             $(

@@ -741,6 +741,133 @@ impl<Inner: MemoryContext> MemoryContext for PoolContext<Inner> {
     }
 }
 
+// ---------------------------------------------------------------------
+// TracingContext: byte-level access accounting over any inner context
+// ---------------------------------------------------------------------
+
+/// Byte/call counters recorded by a [`TracingContext`] (DESIGN.md §9).
+/// All counters are monotone and relaxed — the tracer observes, it never
+/// synchronises.
+#[derive(Debug, Default)]
+pub struct CtxTraceStats {
+    pub allocs: AtomicUsize,
+    pub deallocs: AtomicUsize,
+    pub memset_calls: AtomicUsize,
+    pub memset_bytes: AtomicUsize,
+    pub copy_in_calls: AtomicUsize,
+    pub copy_in_bytes: AtomicUsize,
+    pub copy_out_calls: AtomicUsize,
+    pub copy_out_bytes: AtomicUsize,
+    pub copy_within_calls: AtomicUsize,
+    pub copy_within_bytes: AtomicUsize,
+    pub noted_read_bytes: AtomicUsize,
+    pub noted_write_bytes: AtomicUsize,
+}
+
+impl CtxTraceStats {
+    /// Total bytes that moved through this context in either direction
+    /// (copies + memsets; accounting-only notes excluded).
+    pub fn moved_bytes(&self) -> usize {
+        self.copy_in_bytes.load(Ordering::Relaxed)
+            + self.copy_out_bytes.load(Ordering::Relaxed)
+            + self.copy_within_bytes.load(Ordering::Relaxed)
+            + self.memset_bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Context info of [`TracingContext`]: the inner info plus a shared
+/// trace-stats block.
+pub struct TraceInfo<Inner: MemoryContext = HostContext> {
+    pub inner: Inner::Info,
+    pub stats: Arc<CtxTraceStats>,
+}
+
+impl<Inner: MemoryContext> Clone for TraceInfo<Inner> {
+    fn clone(&self) -> Self {
+        TraceInfo { inner: self.inner.clone(), stats: self.stats.clone() }
+    }
+}
+
+impl<Inner: MemoryContext> Default for TraceInfo<Inner> {
+    fn default() -> Self {
+        TraceInfo { inner: Inner::Info::default(), stats: Arc::new(CtxTraceStats::default()) }
+    }
+}
+
+impl<Inner: MemoryContext> fmt::Debug for TraceInfo<Inner> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "TraceInfo<{}>(in={}B out={}B within={}B memset={}B)",
+            Inner::NAME,
+            self.stats.copy_in_bytes.load(Ordering::Relaxed),
+            self.stats.copy_out_bytes.load(Ordering::Relaxed),
+            self.stats.copy_within_bytes.load(Ordering::Relaxed),
+            self.stats.memset_bytes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Access-tracing memory context: every allocation, copy, memset and
+/// accounting note is booked in a shared [`CtxTraceStats`] block, then
+/// delegated to the inner context unchanged. This is the context half
+/// of the autotuner's instrumentation (the view half is
+/// `interface::TracingSource`): opt in by building a collection over
+/// `TracingContext<Inner>`; code that doesn't is untouched — there is
+/// no global flag and no cost on untraced paths (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TracingContext<Inner: MemoryContext = HostContext>(PhantomData<Inner>);
+
+impl<Inner: MemoryContext> MemoryContext for TracingContext<Inner> {
+    type Info = TraceInfo<Inner>;
+    const NAME: &'static str = "tracing";
+    const HOST_ACCESSIBLE: bool = Inner::HOST_ACCESSIBLE;
+
+    fn allocate(info: &Self::Info, layout: AllocLayout) -> NonNull<u8> {
+        info.stats.allocs.fetch_add(1, Ordering::Relaxed);
+        Inner::allocate(&info.inner, layout)
+    }
+
+    unsafe fn deallocate(info: &Self::Info, ptr: NonNull<u8>, layout: AllocLayout) {
+        info.stats.deallocs.fetch_add(1, Ordering::Relaxed);
+        Inner::deallocate(&info.inner, ptr, layout);
+    }
+
+    unsafe fn memset(info: &Self::Info, ptr: *mut u8, len: usize, value: u8) {
+        info.stats.memset_calls.fetch_add(1, Ordering::Relaxed);
+        info.stats.memset_bytes.fetch_add(len, Ordering::Relaxed);
+        Inner::memset(&info.inner, ptr, len, value);
+    }
+
+    unsafe fn copy_in(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        info.stats.copy_in_calls.fetch_add(1, Ordering::Relaxed);
+        info.stats.copy_in_bytes.fetch_add(len, Ordering::Relaxed);
+        Inner::copy_in(&info.inner, dst, src, len);
+    }
+
+    unsafe fn copy_out(info: &Self::Info, src: *const u8, dst: *mut u8, len: usize) {
+        info.stats.copy_out_calls.fetch_add(1, Ordering::Relaxed);
+        info.stats.copy_out_bytes.fetch_add(len, Ordering::Relaxed);
+        Inner::copy_out(&info.inner, src, dst, len);
+    }
+
+    unsafe fn copy_within(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        info.stats.copy_within_calls.fetch_add(1, Ordering::Relaxed);
+        info.stats.copy_within_bytes.fetch_add(len, Ordering::Relaxed);
+        Inner::copy_within(&info.inner, dst, src, len);
+    }
+
+    fn note_read(info: &Self::Info, len: usize) {
+        info.stats.noted_read_bytes.fetch_add(len, Ordering::Relaxed);
+        Inner::note_read(&info.inner, len);
+    }
+
+    fn note_write(info: &Self::Info, len: usize) {
+        info.stats.noted_write_bytes.fetch_add(len, Ordering::Relaxed);
+        Inner::note_write(&info.inner, len);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -939,6 +1066,30 @@ mod tests {
         assert_eq!(q.as_ptr() as usize % 64, 0);
         assert_eq!(info.0.stats().hits, 0);
         unsafe { PoolContext::<HostContext>::deallocate(&info, q, l64) };
+    }
+
+    #[test]
+    fn tracing_books_and_delegates() {
+        let info = TraceInfo::<CountingContext>::default();
+        roundtrip::<TracingContext<CountingContext>>(&info);
+        // The tracer booked everything...
+        assert_eq!(info.stats.allocs.load(Ordering::Relaxed), 1);
+        assert_eq!(info.stats.deallocs.load(Ordering::Relaxed), 1);
+        assert_eq!(info.stats.copy_in_bytes.load(Ordering::Relaxed), 256);
+        assert_eq!(info.stats.copy_out_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(info.stats.memset_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(info.stats.moved_bytes(), 256 + 1024 + 1024);
+        // ...and the inner context still saw identical traffic.
+        assert_eq!(info.inner.0.allocs.load(Ordering::Relaxed), 1);
+        assert_eq!(info.inner.0.bytes_copied_in.load(Ordering::Relaxed), 256);
+        assert_eq!(info.inner.0.bytes_copied_out.load(Ordering::Relaxed), 1024);
+        assert_eq!(info.inner.0.live_allocs(), 0);
+        // Accounting notes pass through and are booked separately.
+        TracingContext::<CountingContext>::note_read(&info, 10);
+        TracingContext::<CountingContext>::note_write(&info, 20);
+        assert_eq!(info.stats.noted_read_bytes.load(Ordering::Relaxed), 10);
+        assert_eq!(info.stats.noted_write_bytes.load(Ordering::Relaxed), 20);
+        assert_eq!(info.inner.0.bytes_copied_out.load(Ordering::Relaxed), 1034);
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod memory;
 pub mod pod;
 pub mod schema;
 pub mod soavec;
+pub mod trace;
 pub mod transfer;
 
 /// Convenience re-exports for downstream users.
@@ -55,12 +56,17 @@ pub mod prelude {
     pub use super::holder::LayoutHolder;
     pub use super::interface::{
         check_attach, AttachError, Build, CollectionFamily, PlaneSource, PlaneSourceMut,
-        SlicePlanes, SourceJagged,
+        SlicePlanes, SourceJagged, TracingSource, TracingSourceMut,
     };
     pub use super::layout::{AoS, AoSoA, Layout, PlaneShape, SoABlob, SoAVec};
     pub use super::memory::{
-        AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, HostContext,
-        MemoryContext, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext, StagingInfo,
+        AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, CtxTraceStats,
+        HostContext, MemoryContext, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext,
+        StagingInfo, TraceInfo, TracingContext,
+    };
+    pub use super::trace::{
+        recommend_layout, warm_staging_plan, FieldTraceSummary, LayoutChoice, RouteTraceSummary,
+        TraceTape,
     };
     pub use super::pod::{Dtype, Pod};
     pub use super::schema::{
@@ -71,7 +77,7 @@ pub mod prelude {
         bounce_scratch_stats, copy_collection, copy_collection_stats,
         copy_collection_unplanned, local_plan_handle_stats, memcopy_with_context,
         plan_cache_generation, plan_cache_shard_stats, plan_cache_stats, plan_for,
-        register_specialized, BounceScratchStats, PlanCacheShardStats, PlanCacheStats,
+        prewarm_plan, register_specialized, BounceScratchStats, PlanCacheShardStats, PlanCacheStats,
         PlanHandle, PlanHandleStats, PlanOp, TransferPlan, TransferPriority, TransferStats,
         PLAN_CACHE_SHARDS,
     };

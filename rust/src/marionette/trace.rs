@@ -1,0 +1,382 @@
+//! Access-pattern instrumentation for the layout autotuner (DESIGN.md §9).
+//!
+//! A [`TraceTape`] records per-field/per-lane read and write counts plus
+//! stride transitions for one *route* (e.g. sensor staging, device
+//! gather, host reco). It is fed by [`super::interface::TracingSource`]
+//! wrappers — attach a generated view to `col.traced(&tape)` instead of
+//! `&col` and every accessor call lands on the tape via `elem_ptr`.
+//! Untraced code paths never see the tape: the generated views keep
+//! their cached-plane fast paths and the zero-cost guard keeps holding
+//! (`tests/zero_cost_guard.rs`).
+//!
+//! The tape classifies each access against the previous one:
+//!
+//! * **field-sequential** — same field, index advanced by one: the
+//!   column-wise traversal SoA-family layouts are built for;
+//! * **record-coherent** — different field, same index: the whole-record
+//!   traversal AoS is built for.
+//!
+//! [`recommend_layout`] turns the measured fractions into a
+//! [`LayoutChoice`], and [`warm_staging_plan`] pre-compiles the matching
+//! `TransferPlan` specialization so the chosen route pays no first-use
+//! plan build.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::layout::{AoS, AoSoA, SoABlob, SoAVec};
+use super::memory::HostContext;
+use super::schema::{FieldId, FieldMeta, Schema};
+use super::transfer::prewarm_plan;
+
+/// Counters of one (field, lane) cell of a [`TraceTape`].
+#[derive(Debug, Default)]
+struct TraceCell {
+    reads: AtomicU64,
+    writes: AtomicU64,
+    /// Accesses whose item index was exactly `last index + 1` for this
+    /// cell (per-cell sequential stride).
+    seq: AtomicU64,
+    /// Last item index accessed through this cell, stored as `i + 1`
+    /// (`0` = never accessed).
+    last_idx: AtomicU64,
+}
+
+/// Per-route access tape: one cell per (field, lane), plus tape-level
+/// stride classification. All counters are relaxed atomics — recording
+/// is lock-free and safe from concurrent workers, at the cost of
+/// transition classification being approximate under interleaving
+/// (fine: the autotuner consumes aggregate fractions, not exact runs).
+pub struct TraceTape {
+    route: &'static str,
+    schema: Arc<Schema>,
+    /// First cell of each field (cumulative extents), plus total.
+    lane_base: Vec<u32>,
+    cells: Vec<TraceCell>,
+    /// Previous access, packed as `(field_index << 32) | (i + 1)`
+    /// (`0` = none).
+    last_global: AtomicU64,
+    accesses: AtomicU64,
+    /// Same field, index advanced by one.
+    field_seq: AtomicU64,
+    /// Different field, same index.
+    record_coherent: AtomicU64,
+}
+
+impl TraceTape {
+    pub fn new(route: &'static str, schema: &Arc<Schema>) -> TraceTape {
+        let mut lane_base = Vec::with_capacity(schema.num_fields() + 1);
+        let mut total = 0u32;
+        for m in schema.metas() {
+            lane_base.push(total);
+            total += m.extent.max(1);
+        }
+        lane_base.push(total);
+        let cells = (0..total).map(|_| TraceCell::default()).collect();
+        TraceTape {
+            route,
+            schema: schema.clone(),
+            lane_base,
+            cells,
+            last_global: AtomicU64::new(0),
+            accesses: AtomicU64::new(0),
+            field_seq: AtomicU64::new(0),
+            record_coherent: AtomicU64::new(0),
+        }
+    }
+
+    pub fn route(&self) -> &'static str {
+        self.route
+    }
+
+    pub fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    /// Whether anything has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.accesses.load(Ordering::Relaxed) == 0
+    }
+
+    #[inline]
+    fn cell(&self, meta: FieldMeta, k: usize) -> &TraceCell {
+        let base = self.lane_base[meta.index as usize] as usize;
+        let lanes = meta.extent.max(1) as usize;
+        &self.cells[base + k.min(lanes - 1)]
+    }
+
+    #[inline]
+    fn classify(&self, meta: FieldMeta, i: usize) {
+        self.accesses.fetch_add(1, Ordering::Relaxed);
+        let packed = ((meta.index as u64) << 32) | (i as u64 + 1);
+        let prev = self.last_global.swap(packed, Ordering::Relaxed);
+        if prev == 0 {
+            return;
+        }
+        let prev_field = prev >> 32;
+        let prev_idx = prev & 0xFFFF_FFFF; // i + 1
+        if prev_field == meta.index as u64 && (i as u64 + 1) == prev_idx + 1 {
+            self.field_seq.fetch_add(1, Ordering::Relaxed);
+        } else if prev_field != meta.index as u64 && (i as u64 + 1) == prev_idx {
+            self.record_coherent.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Book one element read of `meta`, item `i`, lane `k`.
+    #[inline]
+    pub fn record_read(&self, meta: FieldMeta, i: usize, k: usize) {
+        let cell = self.cell(meta, k);
+        cell.reads.fetch_add(1, Ordering::Relaxed);
+        let prev = cell.last_idx.swap(i as u64 + 1, Ordering::Relaxed);
+        if prev != 0 && i as u64 + 1 == prev + 1 {
+            cell.seq.fetch_add(1, Ordering::Relaxed);
+        }
+        self.classify(meta, i);
+    }
+
+    /// Book one element write of `meta`, item `i`, lane `k`.
+    #[inline]
+    pub fn record_write(&self, meta: FieldMeta, i: usize, k: usize) {
+        let cell = self.cell(meta, k);
+        cell.writes.fetch_add(1, Ordering::Relaxed);
+        let prev = cell.last_idx.swap(i as u64 + 1, Ordering::Relaxed);
+        if prev != 0 && i as u64 + 1 == prev + 1 {
+            cell.seq.fetch_add(1, Ordering::Relaxed);
+        }
+        self.classify(meta, i);
+    }
+
+    /// Clear every counter (reuse the tape for another measurement).
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.reads.store(0, Ordering::Relaxed);
+            c.writes.store(0, Ordering::Relaxed);
+            c.seq.store(0, Ordering::Relaxed);
+            c.last_idx.store(0, Ordering::Relaxed);
+        }
+        self.last_global.store(0, Ordering::Relaxed);
+        self.accesses.store(0, Ordering::Relaxed);
+        self.field_seq.store(0, Ordering::Relaxed);
+        self.record_coherent.store(0, Ordering::Relaxed);
+    }
+
+    /// Aggregate the counters into a plain-data summary (heatmap rows +
+    /// stride fractions + the recommended layout).
+    pub fn snapshot(&self) -> RouteTraceSummary {
+        let mut per_field = Vec::new();
+        let mut total_reads = 0u64;
+        let mut total_writes = 0u64;
+        for m in self.schema.metas() {
+            let name = self.schema.field(FieldId(m.index)).name.clone();
+            let base = self.lane_base[m.index as usize] as usize;
+            for k in 0..m.extent.max(1) as usize {
+                let cell = &self.cells[base + k];
+                let reads = cell.reads.load(Ordering::Relaxed);
+                let writes = cell.writes.load(Ordering::Relaxed);
+                total_reads += reads;
+                total_writes += writes;
+                let touched = reads + writes;
+                let seq = cell.seq.load(Ordering::Relaxed);
+                per_field.push(FieldTraceSummary {
+                    name: if m.extent > 1 { format!("{name}[{k}]") } else { name.clone() },
+                    lane: k as u32,
+                    reads,
+                    writes,
+                    seq_fraction: if touched > 0 { seq as f64 / touched as f64 } else { 0.0 },
+                });
+            }
+        }
+        let accesses = self.accesses.load(Ordering::Relaxed).max(1);
+        let mut summary = RouteTraceSummary {
+            route: self.route,
+            total_reads,
+            total_writes,
+            seq_fraction: self.field_seq.load(Ordering::Relaxed) as f64 / accesses as f64,
+            record_fraction: self.record_coherent.load(Ordering::Relaxed) as f64
+                / accesses as f64,
+            per_field,
+            choice: LayoutChoice::SoAVec,
+        };
+        summary.choice = recommend_layout(&summary);
+        summary
+    }
+}
+
+impl std::fmt::Debug for TraceTape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TraceTape({} schema={} accesses={})",
+            self.route,
+            self.schema.name(),
+            self.accesses.load(Ordering::Relaxed)
+        )
+    }
+}
+
+/// Heatmap row: one (field, lane) cell of a route's tape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FieldTraceSummary {
+    pub name: String,
+    pub lane: u32,
+    pub reads: u64,
+    pub writes: u64,
+    /// Fraction of this cell's accesses at stride exactly +1.
+    pub seq_fraction: f64,
+}
+
+/// Plain-data summary of one route's measured access pattern.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteTraceSummary {
+    pub route: &'static str,
+    pub total_reads: u64,
+    pub total_writes: u64,
+    /// Fraction of accesses that were field-sequential (column-wise).
+    pub seq_fraction: f64,
+    /// Fraction of accesses that were record-coherent (row-wise).
+    pub record_fraction: f64,
+    pub per_field: Vec<FieldTraceSummary>,
+    /// Layout recommended from the fractions above.
+    pub choice: LayoutChoice,
+}
+
+/// A staging-layout recommendation (the autotuner's decision space —
+/// the four in-tree layout families with AoSoA fixed at K=8, one cache
+/// line of f32 lanes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayoutChoice {
+    AoS,
+    SoAVec,
+    SoABlob,
+    AoSoA8,
+}
+
+impl LayoutChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LayoutChoice::AoS => "aos",
+            LayoutChoice::SoAVec => "soavec",
+            LayoutChoice::SoABlob => "soablob",
+            LayoutChoice::AoSoA8 => "aosoa8",
+        }
+    }
+}
+
+/// Layout-selection policy (DESIGN.md §9): whole-record traversal wants
+/// records contiguous (AoS); field-sequential traversal wants planes
+/// contiguous (SoA); mixed/strided traffic takes the blocked middle
+/// ground (AoSoA<8>). Thresholds at 0.5 — the dominant pattern wins.
+pub fn recommend_layout(s: &RouteTraceSummary) -> LayoutChoice {
+    if s.record_fraction >= 0.5 {
+        LayoutChoice::AoS
+    } else if s.seq_fraction >= 0.5 {
+        LayoutChoice::SoAVec
+    } else {
+        LayoutChoice::AoSoA8
+    }
+}
+
+/// Pre-compile the `SoAVec → choice` staging `TransferPlan` for the
+/// recommended layout so the first event on the retuned route pays no
+/// plan build. Returns whether the plan was already cached.
+pub fn warm_staging_plan(choice: LayoutChoice, schema: &Arc<Schema>) -> bool {
+    match choice {
+        LayoutChoice::AoS => prewarm_plan::<SoAVec<HostContext>, AoS<HostContext>>(schema),
+        LayoutChoice::SoAVec => {
+            prewarm_plan::<SoAVec<HostContext>, SoAVec<HostContext>>(schema)
+        }
+        LayoutChoice::SoABlob => {
+            prewarm_plan::<SoAVec<HostContext>, SoABlob<HostContext>>(schema)
+        }
+        LayoutChoice::AoSoA8 => {
+            prewarm_plan::<SoAVec<HostContext>, AoSoA<8, HostContext>>(schema)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_field_schema() -> Arc<Schema> {
+        Arc::new(Schema::builder("trace-test").per_item::<f32>("a").per_item::<f32>("b").build())
+    }
+
+    fn meta_of(schema: &Arc<Schema>, name: &str) -> FieldMeta {
+        let (id, _) = schema.fields().find(|(_, f)| f.name == name).unwrap();
+        schema.meta(id)
+    }
+
+    #[test]
+    fn column_scan_reads_as_sequential() {
+        let schema = two_field_schema();
+        let tape = TraceTape::new("test", &schema);
+        assert!(tape.is_empty());
+        let a = meta_of(&schema, "a");
+        let b = meta_of(&schema, "b");
+        for i in 0..100 {
+            tape.record_read(a, i, 0);
+        }
+        for i in 0..100 {
+            tape.record_read(b, i, 0);
+        }
+        let s = tape.snapshot();
+        assert_eq!(s.total_reads, 200);
+        assert!(s.seq_fraction > 0.9, "seq={}", s.seq_fraction);
+        assert!(s.record_fraction < 0.1, "rec={}", s.record_fraction);
+        assert_eq!(s.choice, LayoutChoice::SoAVec);
+        assert_eq!(recommend_layout(&s), LayoutChoice::SoAVec);
+    }
+
+    #[test]
+    fn record_scan_reads_as_coherent() {
+        let schema = two_field_schema();
+        let tape = TraceTape::new("test", &schema);
+        let a = meta_of(&schema, "a");
+        let b = meta_of(&schema, "b");
+        for i in 0..100 {
+            tape.record_read(a, i, 0);
+            tape.record_write(b, i, 0);
+        }
+        let s = tape.snapshot();
+        assert_eq!(s.total_reads, 100);
+        assert_eq!(s.total_writes, 100);
+        assert!(s.record_fraction >= 0.45, "rec={}", s.record_fraction);
+        assert_eq!(s.choice, LayoutChoice::AoS);
+        // Per-field rows carry the heatmap data.
+        let row_a = s.per_field.iter().find(|r| r.name == "a").unwrap();
+        assert_eq!((row_a.reads, row_a.writes), (100, 0));
+        // Reset wipes everything.
+        tape.reset();
+        assert!(tape.is_empty());
+        assert_eq!(tape.snapshot().total_reads, 0);
+    }
+
+    #[test]
+    fn random_access_takes_blocked_middle_ground() {
+        let schema = two_field_schema();
+        let tape = TraceTape::new("test", &schema);
+        let a = meta_of(&schema, "a");
+        // Stride-7 scatter: neither field-sequential nor record-coherent.
+        let mut i = 0usize;
+        for _ in 0..100 {
+            tape.record_read(a, i % 101, 0);
+            i += 7;
+        }
+        let s = tape.snapshot();
+        assert_eq!(s.choice, LayoutChoice::AoSoA8);
+    }
+
+    #[test]
+    fn warm_staging_plan_caches_each_choice() {
+        let schema = two_field_schema();
+        for choice in
+            [LayoutChoice::AoS, LayoutChoice::SoAVec, LayoutChoice::SoABlob, LayoutChoice::AoSoA8]
+        {
+            // First warm may or may not find it (other tests share the
+            // process-wide cache); the second must.
+            let _ = warm_staging_plan(choice, &schema);
+            assert!(warm_staging_plan(choice, &schema), "{choice:?} not cached");
+        }
+    }
+}

@@ -893,6 +893,23 @@ pub fn plan_for<LS: Layout, LD: Layout>(schema: &Arc<Schema>) -> Arc<TransferPla
     LOCAL_PLANS.with(|h| h.borrow_mut().plan_for::<LS, LD>(schema))
 }
 
+/// Ensure the `(LS, LD, schema)` plan is compiled and resident in the
+/// shared cache without executing anything — the autotuner calls this
+/// for the layout it just chose so the first event on the retuned route
+/// pays no plan build. Returns whether the plan was already cached
+/// (true = warm call was a no-op).
+pub fn prewarm_plan<LS: Layout, LD: Layout>(schema: &Arc<Schema>) -> bool {
+    let key = plan_key::<LS, LD>(schema);
+    let already = {
+        let shard = shard_of(&key);
+        shard.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        let g = shard.plans.lock().unwrap();
+        g.contains_key(&key)
+    };
+    let _ = plan_for::<LS, LD>(schema);
+    already
+}
+
 /// Register a specialized converter for the concrete (schema, `LS`,
 /// `LD`) tuple. Future plans for that tuple consist of a single
 /// `Specialized` op delegating to `f` (which must size `dst` itself and

@@ -6,8 +6,9 @@
 use std::path::PathBuf;
 
 use marionette::bench_support::report::{
-    self, BenchReport, ReportOpts, REQUIRED_SERIES, SERIES_PIPELINE, SERIES_PLAN_CACHE,
-    SERIES_SATURATION, SERIES_SATURATION_P99, SERIES_TRANSFER, SERIES_VIEW_RATIO,
+    self, BenchReport, ReportOpts, REQUIRED_SERIES, SERIES_ADAPTIVE, SERIES_ADAPTIVE_P99,
+    SERIES_PIPELINE, SERIES_PLAN_CACHE, SERIES_SATURATION, SERIES_SATURATION_P99,
+    SERIES_TRANSFER, SERIES_VIEW_RATIO,
 };
 
 fn baseline_path() -> PathBuf {
@@ -41,8 +42,11 @@ fn bench_json_schema_round_trips() {
     assert_eq!(parsed.series(SERIES_VIEW_RATIO).unwrap().unit, "ratio");
     assert_eq!(parsed.series(SERIES_SATURATION).unwrap().unit, "events_per_sec");
     assert_eq!(parsed.series(SERIES_SATURATION_P99).unwrap().unit, "microseconds");
-    // The p99 tail series is informational — it must never hard-gate.
+    assert_eq!(parsed.series(SERIES_ADAPTIVE).unwrap().unit, "events_per_sec");
+    assert_eq!(parsed.series(SERIES_ADAPTIVE_P99).unwrap().unit, "microseconds");
+    // The p99 tail series are informational — they must never hard-gate.
     assert_eq!(parsed.series(SERIES_SATURATION_P99).unwrap().tolerance, 0.0);
+    assert_eq!(parsed.series(SERIES_ADAPTIVE_P99).unwrap().tolerance, 0.0);
 
     // The trajectory's headline points are all present.
     let pipeline = parsed.series(SERIES_PIPELINE).unwrap();
