@@ -36,6 +36,8 @@ cargo test -q --test transfer_matrix
 cargo test -q --test pipeline_integration
 cargo test -q --test bench_report_guard
 cargo test -q --test coordinator_scale
+cargo test -q --test prop_marionette
+cargo test -q --test chaos
 
 echo "== saturate-smoke: worker scaling + tail latency =="
 # Drives the sharded coordinator at 1/2/4 host workers; the command
@@ -54,6 +56,13 @@ cargo run --release -- saturate --adaptive --events 4000 --workers 2 \
     --quick --p99-target-us 2000000 --out BENCH_adaptive.json
 cargo run --release -- autotune --quick
 test -f rust/bench_results/autotune_heatmap.csv
+
+echo "== chaos-smoke: kill a device worker mid-run, lose nothing =="
+# Seeded fault injection (DESIGN.md §10): the device worker is killed
+# at the 50th dequeue; the command fails unless every event lands in
+# exactly one of {completed, quarantined} and every completed event
+# matches the clean run's golden output.
+cargo run --release -- chaos --quick --seed 7 --kill-device-at 50
 
 echo "== bench-smoke: reporter --quick, gated vs BENCH_baseline.json =="
 # Emits BENCH_run.json (machine-readable trajectory, DESIGN.md §7) and

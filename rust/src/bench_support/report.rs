@@ -1,11 +1,12 @@
 //! Machine-readable BENCH reporting and regression gating.
 //!
 //! Turns the paper-figure benches into a committed performance
-//! trajectory: [`collect`] measures the eight series ROADMAP calls for
+//! trajectory: [`collect`] measures the nine series ROADMAP calls for
 //! (plan-cache hit rate, bytes/s per transfer route, events/s per
 //! worker count, view-vs-owned accessor ratios, the saturation
-//! events/s + p99 tail-latency sweep, and the same sweep under the
-//! adaptive AIMD batch controller), [`BenchReport::to_json`]
+//! events/s + p99 tail-latency sweep, the same sweep under the
+//! adaptive AIMD batch controller, and degraded-mode throughput with a
+//! device worker killed mid-run), [`BenchReport::to_json`]
 //! emits them as `BENCH_run.json`, and [`compare`] gates a fresh run
 //! against a committed `BENCH_baseline.json` within per-series
 //! tolerances. The JSON format and the baseline-update policy are
@@ -14,7 +15,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{run_pipeline, AdaptiveBatch, PipelineConfig, RoutePolicy};
+use crate::coordinator::{run_pipeline, AdaptiveBatch, FaultPlan, PipelineConfig, RoutePolicy};
 use crate::edm::generator::{EventConfig, EventGenerator};
 use crate::edm::SensorCollection;
 use crate::marionette::layout::{AoS, SoAVec};
@@ -51,9 +52,15 @@ pub const SERIES_ADAPTIVE: &str = "adaptive_events_per_sec";
 /// `microseconds`, lower better; informational like the fixed-batch
 /// p99 — tail latency is machine noise).
 pub const SERIES_ADAPTIVE_P99: &str = "adaptive_p99_latency_us";
+/// Graceful-degradation throughput (unit `events_per_sec`): the same
+/// device-routed stream run clean and with a chaos plan that kills the
+/// device worker halfway through (DESIGN.md §10). Both points require
+/// exactly-once delivery; the `kill-at-50%` point gates how much
+/// throughput survives a worker death.
+pub const SERIES_DEGRADED: &str = "degraded_events_per_sec";
 
-/// Every report must carry all eight series to pass [`BenchReport::validate`].
-pub const REQUIRED_SERIES: [&str; 8] = [
+/// Every report must carry all nine series to pass [`BenchReport::validate`].
+pub const REQUIRED_SERIES: [&str; 9] = [
     SERIES_PLAN_CACHE,
     SERIES_TRANSFER,
     SERIES_PIPELINE,
@@ -62,6 +69,7 @@ pub const REQUIRED_SERIES: [&str; 8] = [
     SERIES_SATURATION_P99,
     SERIES_ADAPTIVE,
     SERIES_ADAPTIVE_P99,
+    SERIES_DEGRADED,
 ];
 
 /// Which direction is an improvement for a series.
@@ -351,7 +359,7 @@ const TOL_HIT_RATE: f64 = 0.10;
 const TOL_VIEW_RATIO: f64 = 0.60; // matches the 1.6x zero-cost guard bound
 const TOL_THROUGHPUT: f64 = 0.30;
 
-/// Measure all eight required series and return a validated report.
+/// Measure all nine required series and return a validated report.
 pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
     let (sat_tp, sat_p99) = saturation_series(opts)?;
     let (ada_tp, ada_p99) = adaptive_series(opts)?;
@@ -367,6 +375,7 @@ pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
             sat_p99,
             ada_tp,
             ada_p99,
+            degraded_series(opts)?,
         ],
     };
     report.validate()?;
@@ -568,6 +577,47 @@ pub fn run_saturation_adaptive(
         ..defaults
     });
     run_pipeline(&cfg)
+}
+
+/// Graceful-degradation throughput (DESIGN.md §10): the same
+/// device-routed workload run clean and with a chaos plan that kills
+/// the device worker halfway through the stream. Both runs must
+/// account for every event (completed or reported quarantined; the
+/// chaos run recovers in-flight events from the supervisor ledger and
+/// respawns the worker). Single host + device worker so the
+/// count-driven kill schedule is deterministic. Uses only the per-run
+/// kill injector — never the process-global transfer hook, which would
+/// cross-fire into concurrent benches.
+pub fn degraded_series(opts: &ReportOpts) -> Result<BenchSeries> {
+    let events = if opts.quick { 60 } else { 300 };
+    let run = |fault: Option<FaultPlan>| -> Result<crate::coordinator::PipelineReport> {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 4), events);
+        cfg.device = true;
+        cfg.policy = RoutePolicy::DeviceOnly;
+        cfg.host_workers = 1;
+        cfg.device_workers = 1;
+        cfg.seed = 20260808;
+        cfg.fault = fault;
+        let rep = run_pipeline(&cfg)?;
+        let accounted = rep.results.len() + rep.quarantined.len();
+        if accounted != events {
+            bail!("degraded series lost events: {accounted} of {events} accounted for");
+        }
+        Ok(rep)
+    };
+    let clean = run(None)?;
+    let kill =
+        run(Some(FaultPlan::new(20260808).kill_device_at((events as u64 / 2).max(1))))?;
+    Ok(BenchSeries {
+        name: SERIES_DEGRADED.to_string(),
+        unit: "events_per_sec".to_string(),
+        better: Better::Higher,
+        tolerance: TOL_THROUGHPUT,
+        points: vec![
+            BenchPoint { label: "clean".to_string(), value: clean.events_per_sec() },
+            BenchPoint { label: "kill-at-50%".to_string(), value: kill.events_per_sec() },
+        ],
+    })
 }
 
 /// Borrowed-view cost over owned-accessor cost per layout, from the

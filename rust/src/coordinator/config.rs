@@ -118,6 +118,11 @@ pub struct PipelineConfig {
     /// measurement runs only — tracing bypasses the cached-plane fast
     /// path by design).
     pub trace: Option<Arc<RouteTapes>>,
+    /// Seeded fault-injection schedule (chaos harness, DESIGN.md §10).
+    /// `None` (the default) runs clean with zero overhead; `Some` arms
+    /// the memory/engine/transfer injectors and switches event
+    /// processing to the guarded retry/quarantine paths.
+    pub fault: Option<super::fault::FaultPlan>,
 }
 
 impl PipelineConfig {
@@ -139,6 +144,7 @@ impl PipelineConfig {
             stage_pool: None,
             adaptive: None,
             trace: None,
+            fault: None,
         }
     }
 }

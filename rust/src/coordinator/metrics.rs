@@ -140,6 +140,19 @@ pub struct PipelineMetrics {
     /// Batch size the controller settled on (fixed `max_batch` when the
     /// controller is off).
     pub max_batch_final: AtomicUsize,
+    /// Chaos-harness counters (DESIGN.md §10); all zero on clean runs.
+    /// Faults fired by the armed injectors (all four layers).
+    pub fault_injected: AtomicU64,
+    /// Events that completed successfully after at least one fault hit
+    /// them (host reroute, retry success, engine-fault fallback).
+    pub fault_recovered: AtomicU64,
+    /// Retry attempts made (an event re-submitted after a failure).
+    pub fault_requeued: AtomicU64,
+    /// Events given up on after the retry budget: reported in
+    /// `PipelineReport::quarantined`, never silently dropped.
+    pub fault_quarantined: AtomicU64,
+    /// Device-worker supervisor restarts (fresh engine after a kill).
+    pub fault_respawns: AtomicU64,
     pub host_latency: LatencyHisto,
     pub device_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
@@ -216,6 +229,12 @@ pub struct MetricsSnapshot {
     /// Final batch size (the fixed `max_batch` when the controller is
     /// off).
     pub max_batch_final: usize,
+    /// Chaos-harness counters (zero on clean runs; DESIGN.md §10).
+    pub fault_injected: u64,
+    pub fault_recovered: u64,
+    pub fault_requeued: u64,
+    pub fault_quarantined: u64,
+    pub fault_respawns: u64,
     /// Per-route access-pattern summaries; empty unless the run traced
     /// (`PipelineConfig::trace`). Filled by `run_pipeline` after the
     /// counter snapshot.
@@ -267,6 +286,11 @@ impl PipelineMetrics {
             batch_grows: self.batch_grows.load(Ordering::Relaxed),
             batch_shrinks: self.batch_shrinks.load(Ordering::Relaxed),
             max_batch_final: self.max_batch_final.load(Ordering::Relaxed),
+            fault_injected: self.fault_injected.load(Ordering::Relaxed),
+            fault_recovered: self.fault_recovered.load(Ordering::Relaxed),
+            fault_requeued: self.fault_requeued.load(Ordering::Relaxed),
+            fault_quarantined: self.fault_quarantined.load(Ordering::Relaxed),
+            fault_respawns: self.fault_respawns.load(Ordering::Relaxed),
             trace_routes: Vec::new(),
             plan_cache_shards: crate::marionette::transfer::plan_cache_shard_stats(),
         }
@@ -322,6 +346,14 @@ impl MetricsSnapshot {
         out.push_str(&format!(
             "\nadaptive: grows={} shrinks={} max-batch-final={}",
             self.batch_grows, self.batch_shrinks, self.max_batch_final
+        ));
+        out.push_str(&format!(
+            "\nfault: injected={} recovered={} requeued={} quarantined={} respawns={}",
+            self.fault_injected,
+            self.fault_recovered,
+            self.fault_requeued,
+            self.fault_quarantined,
+            self.fault_respawns
         ));
         for r in &self.trace_routes {
             out.push_str(&format!(

@@ -16,14 +16,16 @@
 
 pub mod batcher;
 pub mod config;
+pub mod fault;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
 
 pub use batcher::{AimdBatchController, Batcher};
 pub use config::{AdaptiveBatch, PipelineConfig, RoutePolicy};
+pub use fault::{FaultPlan, FaultState};
 pub use metrics::{MetricsSnapshot, PipelineMetrics};
 pub use pipeline::{
-    run_pipeline, EventResult, PipelineReport, Route, RouteTapes, StageCtx, StagePool,
-    StagedParticles,
+    run_pipeline, EventResult, PipelineError, PipelineReport, Route, RouteTapes, StageCtx,
+    StagePool, StagedParticles,
 };

@@ -44,12 +44,13 @@
 //! [`TransferPlan`]: crate::marionette::transfer::TransferPlan
 //! [`PoolContext`]: crate::marionette::memory::PoolContext
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{channel, sync_channel};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::edm::generator::{EventGenerator, RawEvent};
 use crate::edm::particle::{ParticleCollection, ParticleProps};
@@ -58,16 +59,17 @@ use crate::edm::{calib, reco};
 use crate::marionette::interface::TracingSource;
 use crate::marionette::layout::{AoS, Layout, SoAVec};
 use crate::marionette::memory::{
-    CountingContext, CountingInfo, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext,
-    StagingInfo,
+    CountingContext, CountingInfo, FaultyContext, FaultyInfo, Pool, PoolContext, PoolInfo,
+    PoolSnapshot, StagingContext, StagingInfo,
 };
 use crate::marionette::trace::{RouteTraceSummary, TraceTape};
 use crate::marionette::transfer;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, FaultyEngine, FullEventRunner};
 use crate::util::pool::{ObjectPool, ObjectPoolStats, Recycler, ThreadPool};
 
 use super::batcher::{AimdBatchController, Batcher};
 use super::config::PipelineConfig;
+use super::fault::{FaultPlan, FaultState};
 use super::metrics::{quantile_between, MetricsSnapshot, PipelineMetrics};
 use super::router::{QueueGauge, Router};
 
@@ -94,6 +96,11 @@ pub struct PipelineReport {
     pub wall: Duration,
     pub results: Vec<EventResult>,
     pub metrics: MetricsSnapshot,
+    /// Events given up on after the chaos retry budget (DESIGN.md §10):
+    /// reported here, never silently dropped. Empty on clean runs, and
+    /// disjoint from `results` — every submitted event is in exactly
+    /// one of the two.
+    pub quarantined: Vec<u64>,
 }
 
 impl PipelineReport {
@@ -106,16 +113,46 @@ impl PipelineReport {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "pipeline: {} events in {:?} ({:.1} ev/s), {} particles\n{}",
             self.results.len(),
             self.wall,
             self.events_per_sec(),
             self.total_particles(),
             self.metrics.report()
+        );
+        if !self.quarantined.is_empty() {
+            out.push_str(&format!("\nquarantined events: {:?}", self.quarantined));
+        }
+        out
+    }
+}
+
+/// A device worker's panic escaped supervision (real supervisor-layer
+/// failure, or deliberately via `FaultPlan::worker_abort`). The run
+/// still drains, joins and snapshots; this error carries the partial
+/// [`PipelineReport`] so callers keep the metrics and every result
+/// that completed before shutdown. Downcast with
+/// `err.downcast_ref::<PipelineError>()`.
+#[derive(Debug)]
+pub struct PipelineError {
+    pub panicked_workers: usize,
+    pub report: PipelineReport,
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} device worker(s) panicked; {} of {} events completed before shutdown",
+            self.panicked_workers,
+            self.report.results.len(),
+            self.report.metrics.events_in,
         )
     }
 }
+
+impl std::error::Error for PipelineError {}
 
 struct Task {
     ev: RawEvent,
@@ -301,10 +338,11 @@ pub fn process_device(
 }
 
 /// Device path with an explicit reusable staging collection; see
-/// [`process_host_staged`]. Returns (particles, energy, timing, staged
-/// bytes).
-pub fn process_device_staged<L: Layout>(
-    engine: &Engine,
+/// [`process_host_staged`]. Generic over the runner so the chaos
+/// harness's [`FaultyEngine`] slots in without touching the clean
+/// path. Returns (particles, energy, timing, staged bytes).
+pub fn process_device_staged<L: Layout, E: FullEventRunner>(
+    engine: &E,
     ev: &RawEvent,
     staged: &mut ParticleCollection<L>,
 ) -> Result<(usize, f64, crate::runtime::ExecTiming, usize)> {
@@ -385,8 +423,8 @@ pub fn process_host_staged_traced<L: Layout>(
 
 /// [`process_device_staged`] with the download gather reads taped; see
 /// [`process_host_staged_traced`].
-pub fn process_device_staged_traced<L: Layout>(
-    engine: &Engine,
+pub fn process_device_staged_traced<L: Layout, E: FullEventRunner>(
+    engine: &E,
     ev: &RawEvent,
     staged: &mut ParticleCollection<L>,
     tapes: &RouteTapes,
@@ -445,24 +483,151 @@ impl Drop for GatePermit {
     }
 }
 
+/// One dequeued-but-unfinished device event, held by the worker's
+/// supervisor so a dying worker strands nothing: entries are admitted
+/// at dequeue time and settled right before their result is sent, so
+/// whatever is in the ledger when a panic unwinds is exactly the set of
+/// in-flight events to recover.
+struct LedgerEntry {
+    ev: RawEvent,
+    enqueued: Instant,
+}
+
+/// The in-flight ledger one supervisor shares with its worker loop.
+/// Locks are held only for push/retain — never across processing — so
+/// a worker panic can never poison the mutex.
+#[derive(Default)]
+struct WorkerLedger(Mutex<Vec<LedgerEntry>>);
+
+impl WorkerLedger {
+    fn admit(&self, ev: &RawEvent, enqueued: Instant) {
+        self.0.lock().unwrap().push(LedgerEntry { ev: ev.clone(), enqueued });
+    }
+
+    fn settle(&self, event_id: u64) {
+        self.0.lock().unwrap().retain(|e| e.ev.event_id != event_id);
+    }
+
+    fn drain(&self) -> Vec<LedgerEntry> {
+        std::mem::take(&mut *self.0.lock().unwrap())
+    }
+}
+
+/// Host-process one event under chaos: when allocation faults are
+/// armed, stage into a fresh `FaultyContext` collection wired to the
+/// run's shared trigger (fresh per attempt — a half-built collection
+/// from a failed attempt is simply dropped, never retried into);
+/// otherwise a plain owned staging destination. Deliberately not drawn
+/// from the stage pool: injected panics must not be able to wedge
+/// pooled state.
+fn process_host_chaos(ev: &RawEvent, fault: &FaultState) -> (usize, f64, usize) {
+    if fault.plan.alloc_fail_every.is_some() {
+        let info = FaultyInfo::<CountingContext> {
+            inner: CountingInfo::default(),
+            faults: fault.alloc_cell.clone(),
+        };
+        let mut staged = ParticleCollection::build()
+            .layout::<AoS<FaultyContext<CountingContext>>>()
+            .context(info)
+            .finish();
+        process_host_staged(ev, &mut staged)
+    } else {
+        let mut staged = ParticleCollection::<AoS>::new();
+        process_host_staged(ev, &mut staged)
+    }
+}
+
+/// The guarded retry/quarantine path (DESIGN.md §10): process one event
+/// on the host with every attempt under `catch_unwind`, backing off
+/// exponentially between attempts; past the plan's retry budget the
+/// event is poison-quarantined (reported in the run's
+/// [`PipelineReport::quarantined`], never silently dropped).
+/// `prior_fault` marks events that already hit an injector upstream
+/// (worker kill, device error, dead queue) so a first-attempt success
+/// still counts as a recovery.
+fn recover_event(
+    entry: LedgerEntry,
+    fault: &FaultState,
+    tx: &std::sync::mpsc::Sender<EventResult>,
+    metrics: &Arc<PipelineMetrics>,
+    prior_fault: bool,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut attempt: u32 = 0;
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| process_host_chaos(&entry.ev, fault)));
+        match outcome {
+            Ok((n, energy, bytes)) => {
+                let latency = entry.enqueued.elapsed();
+                metrics.events_host.fetch_add(1, Relaxed);
+                metrics.particles_out.fetch_add(n, Relaxed);
+                metrics.planned_transfers.fetch_add(1, Relaxed);
+                metrics.planned_bytes.fetch_add(bytes, Relaxed);
+                metrics.host_latency.record(latency);
+                metrics.e2e_latency.record(latency);
+                if prior_fault || attempt > 0 {
+                    metrics.fault_recovered.fetch_add(1, Relaxed);
+                }
+                let _ = tx.send(EventResult {
+                    event_id: entry.ev.event_id,
+                    route: Route::Host,
+                    n_particles: n,
+                    total_energy: energy,
+                    latency,
+                });
+                return;
+            }
+            Err(_) => {
+                attempt += 1;
+                if attempt > fault.plan.retry_budget {
+                    metrics.fault_quarantined.fetch_add(1, Relaxed);
+                    fault.quarantine(entry.ev.event_id);
+                    eprintln!(
+                        "event {} quarantined after {attempt} failed attempts",
+                        entry.ev.event_id
+                    );
+                    return;
+                }
+                metrics.fault_requeued.fetch_add(1, Relaxed);
+                std::thread::sleep(Duration::from_millis(fault.plan.backoff_ms(attempt)));
+            }
+        }
+    }
+}
+
 /// Body of one device worker thread: owns its own `Engine` (PJRT
 /// handles are single-threaded), event staging state, and `Batcher`;
 /// drains its own bounded queue. On engine-load failure it degrades to
 /// a host-path drain (the router already committed events here); on a
 /// per-event device error it falls back to the host path for that
-/// event.
+/// event. Runs under the supervisor in `run_pipeline`, which recovers
+/// the shared ledger's in-flight events and respawns the loop (fresh
+/// engine) if this body panics.
 #[allow(clippy::too_many_arguments)]
 fn device_worker_loop(
-    dev_rx: std::sync::mpsc::Receiver<Task>,
-    tx: std::sync::mpsc::Sender<EventResult>,
-    metrics: Arc<PipelineMetrics>,
-    gauge: QueueGauge,
-    max_batch: Arc<AtomicUsize>,
-    warm_buckets: Vec<usize>,
-    pool: Arc<StagePool>,
-    tapes: Option<Arc<RouteTapes>>,
+    dev_rx: &std::sync::mpsc::Receiver<Task>,
+    tx: &std::sync::mpsc::Sender<EventResult>,
+    metrics: &Arc<PipelineMetrics>,
+    gauge: &QueueGauge,
+    max_batch: &Arc<AtomicUsize>,
+    warm_buckets: &[usize],
+    pool: &Arc<StagePool>,
+    tapes: Option<&Arc<RouteTapes>>,
+    fault: &Arc<FaultState>,
+    ledger: &WorkerLedger,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
+    // Every dequeue is admitted to the ledger *before* anything can
+    // fail (including the injected kill below), so a worker death never
+    // strands an event. The gauge is decremented here too: once off the
+    // channel the event no longer occupies device-queue depth, whether
+    // it ends up processed, recovered or quarantined.
+    let admit = |t: Task| -> Task {
+        gauge.dec();
+        ledger.admit(&t.ev, t.enqueued);
+        fault.on_device_dequeue(); // may panic: the injected worker kill
+        t
+    };
     let engine = match Engine::load_default() {
         Ok(e) => e,
         Err(e) => {
@@ -470,7 +635,7 @@ fn device_worker_loop(
             // Drain and bounce everything to nowhere: the router
             // already sent events here, so process on host path.
             while let Ok(task) = dev_rx.recv() {
-                gauge.dec();
+                let task = admit(task);
                 let mut staged = pool.checkout();
                 let (n, energy, bytes) = process_host_staged(&task.ev, &mut *staged);
                 let latency = task.enqueued.elapsed();
@@ -479,6 +644,7 @@ fn device_worker_loop(
                 metrics.planned_transfers.fetch_add(1, Relaxed);
                 metrics.planned_bytes.fetch_add(bytes, Relaxed);
                 metrics.e2e_latency.record(latency);
+                ledger.settle(task.ev.event_id);
                 let _ = tx.send(EventResult {
                     event_id: task.ev.event_id,
                     route: Route::Host,
@@ -490,10 +656,14 @@ fn device_worker_loop(
             return;
         }
     };
+    // Wrap the engine in the chaos fuse (one relaxed load per event
+    // when disarmed). The fuse is shared through `FaultState`, so a
+    // respawned worker's fresh engine continues the same schedule.
+    let engine = FaultyEngine::with_fuse(engine, fault.engine_fuse.clone());
     // Pre-compile expected buckets so the first event does not pay XLA
     // compilation (EXPERIMENTS.md §Perf-4).
-    for b in warm_buckets {
-        if let Err(e) = engine.warm("full_event", b, b) {
+    for &b in warm_buckets {
+        if let Err(e) = engine.inner().warm("full_event", b, b) {
             eprintln!("device warmup for {b}x{b} skipped: {e:#}");
         }
     }
@@ -516,8 +686,10 @@ fn device_worker_loop(
         // Block for one task, then opportunistically drain more.
         match dev_rx.recv() {
             Ok(t) => {
+                let t = admit(t);
                 batcher.push(t.ev.rows, t);
                 while let Ok(t) = dev_rx.try_recv() {
+                    let t = admit(t);
                     batcher.push(t.ev.rows, t);
                 }
             }
@@ -530,14 +702,13 @@ fn device_worker_loop(
             // it).
             if let Some(b) = batcher.next_bucket() {
                 if warmed_bucket != Some(b) {
-                    let _ = engine.warm("full_event", b, b);
+                    let _ = engine.inner().warm("full_event", b, b);
                     warmed_bucket = Some(b);
                 }
             }
             let batch = batcher.drain_batch();
             metrics.device_batches.fetch_add(1, Relaxed);
             for (_, task) in batch {
-                gauge.dec();
                 // Stage the event through the pinned buffer: the cached
                 // host→staging plan reuses the buffer and books the H2D
                 // traffic the upload represents.
@@ -546,7 +717,7 @@ fn device_worker_loop(
                 metrics.planned_transfers.fetch_add(1, Relaxed);
                 metrics.planned_bytes.fetch_add(up.bytes, Relaxed);
                 let mut particles_staged = pool.checkout();
-                let outcome = match &tapes {
+                let outcome = match tapes {
                     Some(t) => {
                         process_device_staged_traced(&engine, &task.ev, &mut *particles_staged, t)
                     }
@@ -570,6 +741,7 @@ fn device_worker_loop(
                             .fetch_add(timing.download.as_micros() as u64, Relaxed);
                         metrics.device_latency.record(latency);
                         metrics.e2e_latency.record(latency);
+                        ledger.settle(task.ev.event_id);
                         let _ = tx.send(EventResult {
                             event_id: task.ev.event_id,
                             route: Route::Device,
@@ -577,6 +749,24 @@ fn device_worker_loop(
                             total_energy: energy,
                             latency,
                         });
+                    }
+                    Err(e) if fault.plan.any_armed() => {
+                        // Chaos runs route device errors (injected or
+                        // real) through the guarded retry/quarantine
+                        // path, which sends or quarantines the event
+                        // itself.
+                        eprintln!(
+                            "device failed on event {}: {e:#}; guarded host recovery",
+                            task.ev.event_id
+                        );
+                        recover_event(
+                            LedgerEntry { ev: task.ev.clone(), enqueued: task.enqueued },
+                            fault,
+                            tx,
+                            metrics,
+                            true,
+                        );
+                        ledger.settle(task.ev.event_id);
                     }
                     Err(e) => {
                         eprintln!(
@@ -591,6 +781,7 @@ fn device_worker_loop(
                         metrics.planned_transfers.fetch_add(1, Relaxed);
                         metrics.planned_bytes.fetch_add(bytes, Relaxed);
                         metrics.e2e_latency.record(latency);
+                        ledger.settle(task.ev.event_id);
                         let _ = tx.send(EventResult {
                             event_id: task.ev.event_id,
                             route: Route::Host,
@@ -610,6 +801,7 @@ fn device_worker_loop(
 /// releasing each event's gate permit as it completes. Grouping trades
 /// per-event spawn overhead against tail latency; the AIMD controller
 /// moves the group size along exactly that trade-off.
+#[allow(clippy::too_many_arguments)]
 fn flush_host_group(
     group: Vec<(Task, GatePermit)>,
     host_pool: &ThreadPool,
@@ -617,6 +809,7 @@ fn flush_host_group(
     metrics: &Arc<PipelineMetrics>,
     stage_pool: &Arc<StagePool>,
     tapes: Option<Arc<RouteTapes>>,
+    fault: &Arc<FaultState>,
 ) {
     if group.is_empty() {
         return;
@@ -624,8 +817,24 @@ fn flush_host_group(
     let tx = res_tx.clone();
     let metrics = metrics.clone();
     let pool = stage_pool.clone();
+    let fault = fault.clone();
     host_pool.spawn(move || {
         use std::sync::atomic::Ordering::Relaxed;
+        if fault.plan.guard_host() {
+            // Chaos: per-event guarded retry/quarantine instead of the
+            // grouped fast path (permits still release per event).
+            for (task, permit) in group {
+                recover_event(
+                    LedgerEntry { ev: task.ev, enqueued: task.enqueued },
+                    &fault,
+                    &tx,
+                    &metrics,
+                    false,
+                );
+                drop(permit);
+            }
+            return;
+        }
         let mut staged = pool.checkout();
         for (task, permit) in group {
             let (n, energy, bytes) = match &tapes {
@@ -662,11 +871,24 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     if cfg.device {
         let _ = transfer::plan_for::<SoAVec, SoAVec<StagingContext>>(&SensorProps::schema());
     }
+    // Pre-compile the chaos staging plan before faults arm, so the
+    // first guarded recovery doesn't pay (or trip on) plan compilation.
+    if cfg.fault.as_ref().map_or(false, |p| p.alloc_fail_every.is_some()) {
+        let _ = transfer::plan_for::<SoAVec, AoS<FaultyContext<CountingContext>>>(
+            &ParticleProps::schema(),
+        );
+    }
 
     // Amortise-once setup: the stage pool every worker draws per-event
     // staging destinations from (shared across runs unless the config
     // injects a private one).
     let stage_pool = cfg.stage_pool.clone().unwrap_or_else(StagePool::shared);
+
+    // Chaos control plane (DESIGN.md §10): always present so the
+    // supervision and recovery paths have one shape; an inert plan
+    // (clean run) arms nothing and costs one relaxed counter bump per
+    // device dequeue.
+    let fault = FaultState::arm(cfg.fault.clone().unwrap_or_else(|| FaultPlan::new(cfg.seed)));
 
     let metrics = Arc::new(PipelineMetrics::default());
     let gauge = QueueGauge::default();
@@ -717,18 +939,51 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
             let warm_buckets = cfg.warm_buckets.clone();
             let pool = stage_pool.clone();
             let tapes = cfg.trace.clone();
+            let fault = fault.clone();
             dev_txs.push(dev_tx);
             dev_threads.push(std::thread::spawn(move || {
-                device_worker_loop(
-                    dev_rx,
-                    tx,
-                    metrics,
-                    gauge,
-                    max_batch,
-                    warm_buckets,
-                    pool,
-                    tapes,
-                );
+                // Supervisor (DESIGN.md §10): the worker body runs under
+                // catch_unwind; on a panic the in-flight ledger is
+                // recovered onto the host path and the loop respawns
+                // with a fresh engine, continuing the same queue. With
+                // `worker_abort` the panic is re-raised instead so the
+                // join path's error reporting can be regression-tested.
+                let ledger = WorkerLedger::default();
+                loop {
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        device_worker_loop(
+                            &dev_rx,
+                            &tx,
+                            &metrics,
+                            &gauge,
+                            &max_batch,
+                            &warm_buckets,
+                            &pool,
+                            tapes.as_ref(),
+                            &fault,
+                            &ledger,
+                        )
+                    }));
+                    match run {
+                        Ok(()) => break,
+                        Err(payload) => {
+                            if fault.plan.worker_abort {
+                                resume_unwind(payload);
+                            }
+                            metrics
+                                .fault_respawns
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            eprintln!(
+                                "device worker panicked; recovering {} in-flight event(s) \
+                                 and respawning",
+                                ledger.0.lock().unwrap().len()
+                            );
+                            for entry in ledger.drain() {
+                                recover_event(entry, &fault, &tx, &metrics, true);
+                            }
+                        }
+                    }
+                }
             }));
         }
     }
@@ -764,6 +1019,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                         &metrics,
                         &stage_pool,
                         cfg.trace.clone(),
+                        &fault,
                     );
                 }
             }
@@ -773,8 +1029,24 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                 let metrics = metrics.clone();
                 let pool = stage_pool.clone();
                 let tapes = cfg.trace.clone();
+                let fault = fault.clone();
                 host_pool.spawn(move || {
                     let _permit = permit;
+                    if fault.plan.guard_host() {
+                        // Chaos: host events can hit the armed
+                        // allocation/transfer injectors, so they run
+                        // the guarded retry/quarantine path. The pool's
+                        // own catch_unwind would otherwise swallow an
+                        // injected panic and silently lose the event.
+                        recover_event(
+                            LedgerEntry { ev: task.ev, enqueued: task.enqueued },
+                            &fault,
+                            &tx,
+                            &metrics,
+                            false,
+                        );
+                        return;
+                    }
                     // Draw the staging destination from this thread's
                     // pool shard: after warmup this is a warm collection
                     // whose capacity already fits the workload — the
@@ -806,7 +1078,24 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                 gauge.inc();
                 let w = next_dev % dev_txs.len();
                 next_dev += 1;
-                dev_txs[w].send(task).context("device queue closed")?;
+                if let Err(send_err) = dev_txs[w].send(task) {
+                    // The worker died unrecoverably (its supervisor
+                    // aborted): the event comes back in the error and
+                    // is re-routed to the guarded host path instead of
+                    // failing the whole run.
+                    gauge.dec();
+                    let task = send_err.0;
+                    metrics
+                        .fault_requeued
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    recover_event(
+                        LedgerEntry { ev: task.ev, enqueued: task.enqueued },
+                        &fault,
+                        &res_tx,
+                        &metrics,
+                        true,
+                    );
+                }
             }
         }
         // Measured feedback: every `observe_every` dispatched events the
@@ -834,23 +1123,35 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         &metrics,
         &stage_pool,
         cfg.trace.clone(),
+        &fault,
     );
     drop(res_tx);
     drop(dev_txs);
 
     // Collector: terminates once every host task and device worker has
-    // dropped its result sender.
+    // dropped its result sender. A worker whose panic escaped
+    // supervision must not abort the run here — it is counted and
+    // reported as a `PipelineError` carrying the partial report.
     let mut results: Vec<EventResult> = res_rx.iter().collect();
+    let mut panicked_workers = 0usize;
     for w in dev_threads {
-        w.join().expect("device worker panicked");
+        if w.join().is_err() {
+            panicked_workers += 1;
+        }
     }
     results.sort_by_key(|r| r.event_id);
     let wall = start.elapsed();
+
+    // The transfer hook is process-global: disarm before anything else
+    // in this process runs transfers again.
+    fault.disarm();
+    let quarantined = fault.take_quarantined();
 
     metrics.set_pool_counters(&stage_pool);
     metrics.set_sched_counters(&host_pool.stats());
     {
         use std::sync::atomic::Ordering::Relaxed;
+        metrics.fault_injected.store(fault.injected_total(), Relaxed);
         match &controller {
             Some(c) => {
                 metrics.batch_grows.store(c.grows(), Relaxed);
@@ -864,7 +1165,11 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     if let Some(t) = &cfg.trace {
         snapshot.trace_routes = t.summaries();
     }
-    Ok(PipelineReport { wall, results, metrics: snapshot })
+    let report = PipelineReport { wall, results, metrics: snapshot, quarantined };
+    if panicked_workers > 0 {
+        return Err(anyhow::Error::new(PipelineError { panicked_workers, report }));
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -1048,5 +1353,66 @@ mod tests {
         assert!(rep.report().contains("events"));
         assert!(rep.report().contains("plan-cache"));
         assert!(rep.report().contains("pool: stage"));
+        assert!(rep.report().contains("fault:"));
+        assert!(rep.quarantined.is_empty(), "clean run must quarantine nothing");
+    }
+
+    /// The shutdown regression (was `w.join().expect(...)` — a worker
+    /// panic aborted the whole process): an unsupervised worker death
+    /// must surface as a typed `Err` that still carries the partial
+    /// metrics and every result that completed.
+    #[test]
+    fn worker_panic_returns_err_with_partial_metrics() {
+        use crate::coordinator::fault::FaultPlan;
+        let mut cfg = base_cfg(8);
+        cfg.policy = RoutePolicy::DeviceOnly;
+        cfg.device_workers = 1;
+        cfg.host_workers = 1;
+        cfg.fault = Some(FaultPlan::new(1).kill_device_at(2).worker_abort(true));
+        let err = run_pipeline(&cfg).unwrap_err();
+        let pe = err
+            .downcast_ref::<PipelineError>()
+            .expect("worker panic must downcast to PipelineError");
+        assert_eq!(pe.panicked_workers, 1);
+        assert_eq!(pe.report.metrics.events_in, 8, "partial metrics lost");
+        assert!(pe.report.results.len() < 8, "the killed batch cannot have completed");
+        assert!(pe.report.metrics.fault_injected >= 1);
+        assert!(format!("{err}").contains("device worker(s) panicked"));
+    }
+
+    /// Supervised kill: the worker dies mid-run, in-flight events are
+    /// recovered from the ledger onto the host path, the worker
+    /// respawns, and every submitted event lands in exactly one of
+    /// {results, quarantined} with clean-run physics.
+    #[test]
+    fn chaos_kill_recovers_every_event() {
+        use crate::coordinator::fault::FaultPlan;
+        let mut cfg = base_cfg(12);
+        cfg.policy = RoutePolicy::DeviceOnly;
+        cfg.device_workers = 1;
+        cfg.host_workers = 1;
+        cfg.fault = Some(FaultPlan::new(9).kill_device_at(3));
+        let rep = run_pipeline(&cfg).unwrap();
+        let mut seen: Vec<u64> = rep.results.iter().map(|r| r.event_id).collect();
+        seen.extend(rep.quarantined.iter().copied());
+        seen.sort_unstable();
+        assert_eq!(seen, (0..12).collect::<Vec<u64>>(), "exactly-once accounting");
+        assert!(rep.metrics.fault_injected >= 1, "kill never fired");
+        assert!(rep.metrics.fault_respawns >= 1, "worker never respawned");
+        assert!(rep.metrics.fault_recovered >= 1, "in-flight events not recovered");
+
+        let mut clean = base_cfg(12);
+        clean.device = false;
+        clean.policy = RoutePolicy::HostOnly;
+        clean.host_workers = 1;
+        let golden = run_pipeline(&clean).unwrap();
+        for r in &rep.results {
+            let g = &golden.results[r.event_id as usize];
+            assert_eq!(g.event_id, r.event_id);
+            assert_eq!(g.n_particles, r.n_particles, "event {}", r.event_id);
+            let rel =
+                (g.total_energy - r.total_energy).abs() / g.total_energy.abs().max(1.0);
+            assert!(rel < 1e-3, "energy drift {rel} on event {}", r.event_id);
+        }
     }
 }

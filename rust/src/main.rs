@@ -15,6 +15,10 @@
 //!                         AIMD controller and compares vs fixed)
 //!   autotune [...]        measured-feedback autotuner: traced access
 //!                         heatmaps per route + layout ablation check
+//!   chaos [...]           fault-injection chaos run: kill a device
+//!                         worker / fail allocations on a seeded
+//!                         schedule, assert exactly-once delivery and
+//!                         golden-output equivalence vs the clean run
 //!   doctor                environment + artifact checks
 //!
 //! Shared flags: --quick (small grids, short harness), --grid N,
@@ -51,6 +55,9 @@ struct Args {
     write_baseline: bool,
     adaptive: bool,
     p99_target_us: Option<u64>,
+    seed: Option<u64>,
+    kill_device_at: Option<u64>,
+    alloc_fail_every: Option<u64>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -82,6 +89,13 @@ fn parse_args() -> Result<Args> {
             "--write-baseline" => args.write_baseline = true,
             "--adaptive" => args.adaptive = true,
             "--p99-target-us" => args.p99_target_us = Some(val("--p99-target-us")?.parse()?),
+            "--seed" => args.seed = Some(val("--seed")?.parse()?),
+            "--kill-device-at" => {
+                args.kill_device_at = Some(val("--kill-device-at")?.parse()?)
+            }
+            "--alloc-fail-every" => {
+                args.alloc_fail_every = Some(val("--alloc-fail-every")?.parse()?)
+            }
             "--particles" => {
                 args.particles = Some(
                     val("--particles")?
@@ -457,6 +471,94 @@ fn cmd_saturate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fault-injection chaos run (DESIGN.md §10): run the same seeded
+/// workload clean and with an armed `FaultPlan` (device-worker kill
+/// mid-run, optionally allocation faults), then assert no event was
+/// lost — everything completes or is reported quarantined — and that
+/// every completed event matches the clean run's physics.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use marionette::coordinator::FaultPlan;
+
+    let grid = args.grid.unwrap_or(if args.quick { 32 } else { 64 });
+    let events = args.events.unwrap_or(if args.quick { 100 } else { 400 });
+    let seed = args.seed.unwrap_or(7);
+
+    // One host + one device worker: every fault trigger is
+    // count-driven, so a single-worker run makes the fired schedule
+    // (and the counters) deterministic for a given seed.
+    let mk = || {
+        let mut cfg = PipelineConfig::new(EventConfig::grid(grid, grid, 3), events);
+        cfg.device = !args.no_device;
+        cfg.policy =
+            if args.no_device { RoutePolicy::HostOnly } else { RoutePolicy::DeviceOnly };
+        cfg.host_workers = 1;
+        cfg.device_workers = 1;
+        cfg.seed = seed;
+        cfg
+    };
+
+    let mut plan = FaultPlan::new(seed);
+    if !args.no_device {
+        // Default: kill the device worker halfway through the stream.
+        plan.kill_device_at =
+            Some(args.kill_device_at.unwrap_or((events as u64 / 2).max(1)));
+    }
+    plan.alloc_fail_every = args.alloc_fail_every;
+
+    println!("== chaos: {events} events of {grid}x{grid}, seed {seed} ==");
+    println!("plan: {plan:?}");
+
+    // Golden reference: the identical event stream, clean, host-only.
+    let mut clean_cfg = mk();
+    clean_cfg.device = false;
+    clean_cfg.policy = RoutePolicy::HostOnly;
+    let clean = run_pipeline(&clean_cfg)?;
+
+    let mut chaos_cfg = mk();
+    chaos_cfg.fault = Some(plan);
+    let chaos = run_pipeline(&chaos_cfg)?;
+    println!("{}", chaos.report());
+
+    // Exactly-once: every submitted event in exactly one of
+    // {completed, quarantined}.
+    let mut seen: Vec<u64> = chaos.results.iter().map(|r| r.event_id).collect();
+    seen.extend(chaos.quarantined.iter().copied());
+    seen.sort_unstable();
+    seen.dedup();
+    let expect: Vec<u64> = (0..events as u64).collect();
+    if seen != expect {
+        bail!(
+            "exactly-once violated: {} completed + {} quarantined != {events} submitted",
+            chaos.results.len(),
+            chaos.quarantined.len()
+        );
+    }
+
+    // Golden equivalence for every completed event.
+    for r in &chaos.results {
+        let g = &clean.results[r.event_id as usize];
+        if g.n_particles != r.n_particles {
+            bail!(
+                "event {}: {} particles vs clean {}",
+                r.event_id,
+                r.n_particles,
+                g.n_particles
+            );
+        }
+        let rel = (g.total_energy - r.total_energy).abs() / g.total_energy.abs().max(1.0);
+        if rel > 1e-3 {
+            bail!("event {}: energy drift {rel:.2e} vs clean run", r.event_id);
+        }
+    }
+    println!(
+        "chaos OK: {}/{events} completed with clean-run physics, {} quarantined \
+         (reported), no event lost",
+        chaos.results.len(),
+        chaos.quarantined.len()
+    );
+    Ok(())
+}
+
 fn cmd_doctor() -> Result<()> {
     println!("PJRT: {}", client::device_description());
     match Engine::load_default() {
@@ -512,13 +614,14 @@ fn run() -> Result<()> {
         "bench-report" => cmd_bench_report(&args),
         "saturate" => cmd_saturate(&args),
         "autotune" => cmd_autotune(&args),
+        "chaos" => cmd_chaos(&args),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!(
                 "repro <command> [flags]\n\
                  commands: demo | run-pipeline | fig1 | fig2 | zero-cost | \
                  transfers | ablation | bench-report | saturate | autotune | \
-                 doctor\n\
+                 chaos | doctor\n\
                  flags: --quick --grid N --grids a,b,c --events N \
                  --particles a,b,c --workers a,b,c --dev-workers N \
                  --policy host|device|auto --no-device --csv NAME\n\
@@ -529,7 +632,10 @@ fn run() -> Result<()> {
                  the AIMD controller and compares against fixed dispatch\n\
                  autotune: --quick (traced access heatmaps per route + \
                  layout-selection ablation; writes \
-                 bench_results/autotune_heatmap.csv)"
+                 bench_results/autotune_heatmap.csv)\n\
+                 chaos: --seed S --kill-device-at K --alloc-fail-every N \
+                 (seeded fault injection; asserts exactly-once delivery and \
+                 golden-output equivalence vs the clean run)"
             );
             Ok(())
         }

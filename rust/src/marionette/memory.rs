@@ -36,7 +36,7 @@ use std::collections::HashMap;
 use std::fmt;
 use std::marker::PhantomData;
 use std::ptr::NonNull;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Abstraction over a way of managing memory (paper: memory context).
@@ -868,6 +868,163 @@ impl<Inner: MemoryContext> MemoryContext for TracingContext<Inner> {
     }
 }
 
+// ---------------------------------------------------------------------
+// FaultyContext: schedule-driven allocation-fault injection
+// ---------------------------------------------------------------------
+
+/// Shared trigger of a [`FaultyContext`]: fires (panics) on every
+/// `every`-th `allocate` call while armed. The trigger is a plain
+/// global counter over the cell — schedule-driven, never time- or
+/// race-driven — so with a fixed allocation sequence the set of fired
+/// faults is deterministic (DESIGN.md §10).
+///
+/// The cell panics *before* delegating to the inner allocator, so a
+/// fired fault never leaks inner-context state: the collection under
+/// construction unwinds and drops whatever it already owned.
+#[derive(Debug, Default)]
+pub struct FaultCell {
+    armed: AtomicBool,
+    every: AtomicU64,
+    count: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultCell {
+    /// A cell that never fires (injection disabled).
+    pub fn disarmed() -> Arc<FaultCell> {
+        Arc::new(FaultCell::default())
+    }
+
+    /// A cell armed to fire on every `every`-th allocation (0 disarms).
+    pub fn armed_every(every: u64) -> Arc<FaultCell> {
+        let cell = FaultCell::default();
+        cell.arm(every);
+        Arc::new(cell)
+    }
+
+    /// Arm (or re-arm) the cell; resets the allocation counter.
+    pub fn arm(&self, every: u64) {
+        self.count.store(0, Ordering::Relaxed);
+        self.every.store(every, Ordering::Relaxed);
+        self.armed.store(every > 0, Ordering::Relaxed);
+    }
+
+    /// Disarm without resetting the injected-fault count.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    /// Number of faults this cell has fired since creation.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Count one allocation; true when the fault must fire.
+    fn trip(&self) -> bool {
+        if !self.armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let every = self.every.load(Ordering::Relaxed);
+        if every == 0 {
+            return false;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % every == 0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+}
+
+/// Context info of [`FaultyContext`]: the inner info plus the shared
+/// fault trigger.
+pub struct FaultyInfo<Inner: MemoryContext = HostContext> {
+    pub inner: Inner::Info,
+    pub faults: Arc<FaultCell>,
+}
+
+impl<Inner: MemoryContext> Clone for FaultyInfo<Inner> {
+    fn clone(&self) -> Self {
+        FaultyInfo { inner: self.inner.clone(), faults: self.faults.clone() }
+    }
+}
+
+impl<Inner: MemoryContext> Default for FaultyInfo<Inner> {
+    fn default() -> Self {
+        FaultyInfo { inner: Inner::Info::default(), faults: FaultCell::disarmed() }
+    }
+}
+
+impl<Inner: MemoryContext> fmt::Debug for FaultyInfo<Inner> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "FaultyInfo<{}>(armed={} injected={})",
+            Inner::NAME,
+            self.faults.armed.load(Ordering::Relaxed),
+            self.faults.injected(),
+        )
+    }
+}
+
+/// Fault-injecting memory context: counts `allocate` calls against a
+/// shared [`FaultCell`] and panics with a recognisable message when the
+/// schedule says so; everything else delegates to the inner context
+/// unchanged. Disarmed, it is a transparent wrapper (one relaxed load
+/// per allocation) and passes the full conformance harness. The chaos
+/// pipeline stages recovered events into `FaultyContext` collections so
+/// allocation faults land mid-`stage_into`, where the per-event
+/// `catch_unwind` in `coordinator/pipeline.rs` must contain them
+/// (DESIGN.md §10).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultyContext<Inner: MemoryContext = HostContext>(PhantomData<Inner>);
+
+impl<Inner: MemoryContext> MemoryContext for FaultyContext<Inner> {
+    type Info = FaultyInfo<Inner>;
+    const NAME: &'static str = "faulty";
+    const HOST_ACCESSIBLE: bool = Inner::HOST_ACCESSIBLE;
+
+    fn allocate(info: &Self::Info, layout: AllocLayout) -> NonNull<u8> {
+        if info.faults.trip() {
+            panic!(
+                "injected allocation fault #{} ({} bytes)",
+                info.faults.injected(),
+                layout.size()
+            );
+        }
+        Inner::allocate(&info.inner, layout)
+    }
+
+    unsafe fn deallocate(info: &Self::Info, ptr: NonNull<u8>, layout: AllocLayout) {
+        Inner::deallocate(&info.inner, ptr, layout);
+    }
+
+    unsafe fn memset(info: &Self::Info, ptr: *mut u8, len: usize, value: u8) {
+        Inner::memset(&info.inner, ptr, len, value);
+    }
+
+    unsafe fn copy_in(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        Inner::copy_in(&info.inner, dst, src, len);
+    }
+
+    unsafe fn copy_out(info: &Self::Info, src: *const u8, dst: *mut u8, len: usize) {
+        Inner::copy_out(&info.inner, src, dst, len);
+    }
+
+    unsafe fn copy_within(info: &Self::Info, dst: *mut u8, src: *const u8, len: usize) {
+        Inner::copy_within(&info.inner, dst, src, len);
+    }
+
+    fn note_read(info: &Self::Info, len: usize) {
+        Inner::note_read(&info.inner, len);
+    }
+
+    fn note_write(info: &Self::Info, len: usize) {
+        Inner::note_write(&info.inner, len);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1090,6 +1247,42 @@ mod tests {
         assert_eq!(info.stats.noted_read_bytes.load(Ordering::Relaxed), 10);
         assert_eq!(info.stats.noted_write_bytes.load(Ordering::Relaxed), 20);
         assert_eq!(info.inner.0.bytes_copied_out.load(Ordering::Relaxed), 1034);
+    }
+
+    #[test]
+    fn faulty_disarmed_is_transparent() {
+        let info = FaultyInfo::<CountingContext>::default();
+        roundtrip::<FaultyContext<CountingContext>>(&info);
+        assert_eq!(info.faults.injected(), 0);
+        assert_eq!(info.inner.0.allocs.load(Ordering::Relaxed), 1);
+        assert_eq!(info.inner.0.live_allocs(), 0);
+    }
+
+    #[test]
+    fn faulty_fires_on_schedule_and_leaks_no_inner_state() {
+        let info =
+            FaultyInfo::<CountingContext> { inner: Default::default(), faults: FaultCell::armed_every(3) };
+        let layout = AllocLayout::from_size_align(64, 8).unwrap();
+        // Allocations 1 and 2 succeed, 3 must panic before touching the
+        // inner allocator.
+        for _ in 0..2 {
+            let p = FaultyContext::<CountingContext>::allocate(&info, layout);
+            unsafe { FaultyContext::<CountingContext>::deallocate(&info, p, layout) };
+        }
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            FaultyContext::<CountingContext>::allocate(&info, layout)
+        }));
+        assert!(caught.is_err(), "third allocation must fire the fault");
+        assert_eq!(info.faults.injected(), 1);
+        // The panic fired pre-delegation: inner booked only the two good
+        // allocations and none are live.
+        assert_eq!(info.inner.0.allocs.load(Ordering::Relaxed), 2);
+        assert_eq!(info.inner.0.live_allocs(), 0);
+        // Disarm and the same info allocates normally again.
+        info.faults.disarm();
+        let p = FaultyContext::<CountingContext>::allocate(&info, layout);
+        unsafe { FaultyContext::<CountingContext>::deallocate(&info, p, layout) };
+        assert_eq!(info.faults.injected(), 1);
     }
 
     #[test]

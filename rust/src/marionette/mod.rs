@@ -61,8 +61,8 @@ pub mod prelude {
     pub use super::layout::{AoS, AoSoA, Layout, PlaneShape, SoABlob, SoAVec};
     pub use super::memory::{
         AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, CtxTraceStats,
-        HostContext, MemoryContext, Pool, PoolContext, PoolInfo, PoolSnapshot, StagingContext,
-        StagingInfo, TraceInfo, TracingContext,
+        FaultCell, FaultyContext, FaultyInfo, HostContext, MemoryContext, Pool, PoolContext,
+        PoolInfo, PoolSnapshot, StagingContext, StagingInfo, TraceInfo, TracingContext,
     };
     pub use super::trace::{
         recommend_layout, warm_staging_plan, FieldTraceSummary, LayoutChoice, RouteTraceSummary,
@@ -74,11 +74,11 @@ pub mod prelude {
         JaggedProp, Schema, SchemaBuilder, TagId,
     };
     pub use super::transfer::{
-        bounce_scratch_stats, copy_collection, copy_collection_stats,
-        copy_collection_unplanned, local_plan_handle_stats, memcopy_with_context,
-        plan_cache_generation, plan_cache_shard_stats, plan_cache_stats, plan_for,
-        prewarm_plan, register_specialized, BounceScratchStats, PlanCacheShardStats, PlanCacheStats,
-        PlanHandle, PlanHandleStats, PlanOp, TransferPlan, TransferPriority, TransferStats,
-        PLAN_CACHE_SHARDS,
+        arm_transfer_fault, bounce_scratch_stats, copy_collection, copy_collection_stats,
+        copy_collection_unplanned, disarm_transfer_fault, local_plan_handle_stats,
+        memcopy_with_context, plan_cache_generation, plan_cache_shard_stats, plan_cache_stats,
+        plan_for, prewarm_plan, register_specialized, transfer_faults_injected, BounceScratchStats,
+        PlanCacheShardStats, PlanCacheStats, PlanHandle, PlanHandleStats, PlanOp, TransferPlan,
+        TransferPriority, TransferStats, PLAN_CACHE_SHARDS,
     };
 }

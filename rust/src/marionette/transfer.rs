@@ -126,6 +126,56 @@ static BOUNCE_MISSES: AtomicU64 = AtomicU64::new(0);
 static BOUNCE_TRIMS: AtomicU64 = AtomicU64::new(0);
 static BOUNCE_HELD_BYTES: AtomicUsize = AtomicUsize::new(0);
 
+// ---------------------------------------------------------------------
+// Transfer-rung fault injection (chaos harness, DESIGN.md §10)
+// ---------------------------------------------------------------------
+
+/// Process-global transfer fault schedule: while armed, every
+/// `TRANSFER_FAULT_EVERY`-th plan execution panics before copying a
+/// byte. The counter is global and schedule-driven, so the number of
+/// fired faults for a fixed transfer sequence is deterministic and
+/// independent of thread interleaving.
+///
+/// Because the hook is process-global, callers that arm it (the chaos
+/// pipeline via `FaultPlan::transfer_fail_every`, `tests/chaos.rs`)
+/// must serialise against other transfer-running work in the same
+/// process; in-tree chaos tests take a shared lock for this.
+static TRANSFER_FAULT_EVERY: AtomicU64 = AtomicU64::new(0);
+static TRANSFER_FAULT_COUNT: AtomicU64 = AtomicU64::new(0);
+static TRANSFER_FAULT_INJECTED: AtomicU64 = AtomicU64::new(0);
+
+/// Arm the transfer fault hook: every `every`-th plan execution panics
+/// (0 disarms). Resets the execution counter so equal-seed chaos runs
+/// fire identical schedules.
+pub fn arm_transfer_fault(every: u64) {
+    TRANSFER_FAULT_COUNT.store(0, Ordering::Relaxed);
+    TRANSFER_FAULT_EVERY.store(every, Ordering::Relaxed);
+}
+
+/// Disarm the transfer fault hook (the injected-fault total persists).
+pub fn disarm_transfer_fault() {
+    TRANSFER_FAULT_EVERY.store(0, Ordering::Relaxed);
+}
+
+/// Total transfer faults fired since process start (monotone; chaos
+/// runs difference it around a run to get the per-run count).
+pub fn transfer_faults_injected() -> u64 {
+    TRANSFER_FAULT_INJECTED.load(Ordering::Relaxed)
+}
+
+#[inline]
+fn maybe_inject_transfer_fault() {
+    let every = TRANSFER_FAULT_EVERY.load(Ordering::Relaxed);
+    if every == 0 {
+        return;
+    }
+    let n = TRANSFER_FAULT_COUNT.fetch_add(1, Ordering::Relaxed) + 1;
+    if n % every == 0 {
+        TRANSFER_FAULT_INJECTED.fetch_add(1, Ordering::Relaxed);
+        panic!("injected transfer fault (plan execution #{n})");
+    }
+}
+
 #[derive(Default)]
 struct BounceShelf {
     bufs: Vec<Vec<u8>>,
@@ -504,6 +554,9 @@ impl TransferPlan {
         dst: &mut RawCollection<LD>,
         pool: Option<&ThreadPool>,
     ) -> TransferStats {
+        // Chaos hook: fires before any byte moves or any dst resize, so
+        // a fired fault leaves src untouched and dst structurally intact.
+        maybe_inject_transfer_fault();
         assert!(
             src.schema().same_structure(dst.schema()),
             "transfer requires structurally equal schemas ({} vs {})",

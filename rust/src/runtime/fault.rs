@@ -1,0 +1,167 @@
+//! Device-side fault injection: a schedule-driven [`FaultyEngine`]
+//! wrapper for the chaos harness (DESIGN.md §10).
+//!
+//! The wrapper intercepts `run_full_event` and, on the armed schedule,
+//! either returns an `Err` ("short planes": the recoverable shape the
+//! device worker's existing host-fallback path already handles) or
+//! panics mid-batch (the shape only the worker supervisor's
+//! `catch_unwind` can contain). Disarmed, it is one relaxed load per
+//! event on top of the real engine.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::edm::generator::RawEvent;
+
+use super::executor::{Engine, ExecTiming, ParticleStageOut, SensorStageOut};
+
+/// Anything that can run one raw event end-to-end on the device path.
+/// Implemented by the real [`Engine`] and by [`FaultyEngine`]; the
+/// coordinator's `process_device_staged*` helpers are generic over it,
+/// so the fault wrapper slots into the device worker without touching
+/// the clean path.
+pub trait FullEventRunner {
+    fn run_full_event(
+        &self,
+        ev: &RawEvent,
+    ) -> Result<(SensorStageOut, ParticleStageOut, ExecTiming)>;
+}
+
+impl FullEventRunner for Engine {
+    fn run_full_event(
+        &self,
+        ev: &RawEvent,
+    ) -> Result<(SensorStageOut, ParticleStageOut, ExecTiming)> {
+        Engine::run_full_event(self, ev)
+    }
+}
+
+/// The schedule half of [`FaultyEngine`], split out so the trigger
+/// arithmetic is testable without PJRT artifacts: counts events and
+/// fires on every `every`-th one while armed.
+#[derive(Debug, Default)]
+pub struct FaultFuse {
+    armed: AtomicBool,
+    every: AtomicU64,
+    count: AtomicU64,
+    injected: AtomicU64,
+    /// Fire as a panic instead of an `Err` (exercises the supervisor
+    /// instead of the in-worker host fallback).
+    panic_mode: AtomicBool,
+}
+
+impl FaultFuse {
+    /// Arm to fire on every `every`-th event (0 disarms); resets the
+    /// event counter so equal schedules fire identically.
+    pub fn arm(&self, every: u64, panic_mode: bool) {
+        self.count.store(0, Ordering::Relaxed);
+        self.every.store(every, Ordering::Relaxed);
+        self.panic_mode.store(panic_mode, Ordering::Relaxed);
+        self.armed.store(every > 0, Ordering::Relaxed);
+    }
+
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    /// Faults fired since creation.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Count one event; `Some(panic_mode)` when the fault must fire.
+    pub fn trip(&self) -> Option<bool> {
+        if !self.armed.load(Ordering::Relaxed) {
+            return None;
+        }
+        let every = self.every.load(Ordering::Relaxed);
+        if every == 0 {
+            return None;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % every == 0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Some(self.panic_mode.load(Ordering::Relaxed));
+        }
+        None
+    }
+}
+
+/// Fault-injecting engine wrapper. Owns the real [`Engine`] (engines
+/// are single-threaded and worker-owned, so the wrapper is too) and
+/// consults a shared [`FaultFuse`] before each event. The fuse is
+/// `Arc`ed so a chaos run keeps one schedule across worker respawns —
+/// a fresh engine after a kill continues the old fuse's count instead
+/// of restarting the schedule.
+pub struct FaultyEngine {
+    inner: Engine,
+    fuse: Arc<FaultFuse>,
+}
+
+impl FaultyEngine {
+    /// Wrap an engine with a fresh, disarmed fuse (pass-through).
+    pub fn new(inner: Engine) -> FaultyEngine {
+        FaultyEngine { inner, fuse: Arc::new(FaultFuse::default()) }
+    }
+
+    /// Wrap an engine around an existing (usually armed, shared) fuse.
+    pub fn with_fuse(inner: Engine, fuse: Arc<FaultFuse>) -> FaultyEngine {
+        FaultyEngine { inner, fuse }
+    }
+
+    pub fn fuse(&self) -> &FaultFuse {
+        &self.fuse
+    }
+
+    pub fn inner(&self) -> &Engine {
+        &self.inner
+    }
+}
+
+impl FullEventRunner for FaultyEngine {
+    fn run_full_event(
+        &self,
+        ev: &RawEvent,
+    ) -> Result<(SensorStageOut, ParticleStageOut, ExecTiming)> {
+        match self.fuse.trip() {
+            Some(true) => panic!(
+                "injected device fault (panic) on event {} after {} faults",
+                ev.event_id,
+                self.fuse.injected()
+            ),
+            Some(false) => bail!(
+                "injected device fault: short planes on event {}",
+                ev.event_id
+            ),
+            None => self.inner.run_full_event(ev),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuse_fires_on_schedule() {
+        let fuse = FaultFuse::default();
+        assert_eq!(fuse.trip(), None, "disarmed fuse never fires");
+        fuse.arm(3, false);
+        let fired: Vec<bool> = (0..9).map(|_| fuse.trip().is_some()).collect();
+        assert_eq!(
+            fired,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(fuse.injected(), 3);
+        // Re-arming resets the phase, so equal schedules fire equally.
+        fuse.arm(3, true);
+        assert_eq!(fuse.trip(), None);
+        assert_eq!(fuse.trip(), None);
+        assert_eq!(fuse.trip(), Some(true), "panic mode is reported to the caller");
+        fuse.disarm();
+        assert_eq!(fuse.trip(), None);
+        assert_eq!(fuse.injected(), 4);
+    }
+}

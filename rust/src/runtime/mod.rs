@@ -15,7 +15,9 @@ pub mod artifact;
 pub mod client;
 pub mod devmem;
 pub mod executor;
+pub mod fault;
 
 pub use artifact::{ArtifactRecord, Manifest, TensorSpec};
 pub use devmem::{downloaded_planes, DeviceEvent, DeviceEventPool, ResidentEvent};
 pub use executor::{Engine, ExecTiming, ParticleStageOut, SensorStageOut};
+pub use fault::{FaultFuse, FaultyEngine, FullEventRunner};

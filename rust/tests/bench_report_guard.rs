@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use marionette::bench_support::report::{
     self, BenchReport, ReportOpts, REQUIRED_SERIES, SERIES_ADAPTIVE, SERIES_ADAPTIVE_P99,
-    SERIES_PIPELINE, SERIES_PLAN_CACHE, SERIES_SATURATION, SERIES_SATURATION_P99,
-    SERIES_TRANSFER, SERIES_VIEW_RATIO,
+    SERIES_DEGRADED, SERIES_PIPELINE, SERIES_PLAN_CACHE, SERIES_SATURATION,
+    SERIES_SATURATION_P99, SERIES_TRANSFER, SERIES_VIEW_RATIO,
 };
 
 fn baseline_path() -> PathBuf {
@@ -44,9 +44,22 @@ fn bench_json_schema_round_trips() {
     assert_eq!(parsed.series(SERIES_SATURATION_P99).unwrap().unit, "microseconds");
     assert_eq!(parsed.series(SERIES_ADAPTIVE).unwrap().unit, "events_per_sec");
     assert_eq!(parsed.series(SERIES_ADAPTIVE_P99).unwrap().unit, "microseconds");
+    assert_eq!(parsed.series(SERIES_DEGRADED).unwrap().unit, "events_per_sec");
     // The p99 tail series are informational — they must never hard-gate.
     assert_eq!(parsed.series(SERIES_SATURATION_P99).unwrap().tolerance, 0.0);
     assert_eq!(parsed.series(SERIES_ADAPTIVE_P99).unwrap().tolerance, 0.0);
+
+    // The degraded-mode series gates (it is the chaos harness's
+    // throughput contract) and carries both the clean and the
+    // kill-at-50% points.
+    let degraded = parsed.series(SERIES_DEGRADED).unwrap();
+    assert!(degraded.tolerance > 0.0, "degraded series must hard-gate");
+    for label in ["clean", "kill-at-50%"] {
+        assert!(
+            degraded.points.iter().any(|p| p.label == label),
+            "degraded series missing point {label}"
+        );
+    }
 
     // The trajectory's headline points are all present.
     let pipeline = parsed.series(SERIES_PIPELINE).unwrap();
@@ -106,6 +119,23 @@ fn gate_fails_on_degraded_series() {
     assert!(
         failures.iter().any(|f| f.contains(SERIES_VIEW_RATIO)),
         "degraded view ratio not flagged: {failures:?}"
+    );
+
+    // Degraded-mode throughput collapsing must be flagged: losing a
+    // device worker is allowed to cost throughput, but not 10x.
+    let mut dead = baseline.clone();
+    let s = dead
+        .series
+        .iter_mut()
+        .find(|s| s.name == SERIES_DEGRADED)
+        .expect("baseline has degraded series");
+    for p in &mut s.points {
+        p.value *= 0.1;
+    }
+    let failures = report::compare(&dead, &baseline);
+    assert!(
+        failures.iter().any(|f| f.contains(SERIES_DEGRADED)),
+        "collapsed degraded throughput not flagged: {failures:?}"
     );
 
     // A vanished series is a regression too.

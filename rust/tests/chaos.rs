@@ -1,0 +1,152 @@
+//! Chaos-harness integration tests (DESIGN.md §10): under seeded fault
+//! injection — device-worker kills, injected engine errors, allocation
+//! and transfer faults — the pipeline must lose nothing (every event
+//! completes or is reported quarantined), completed events must match
+//! the clean run's physics, and the fired fault schedule must be a
+//! pure function of the plan (same seed ⇒ bit-identical counters).
+//!
+//! All tests pin one host and one device worker: every injector
+//! triggers on a *count* (Nth allocation, Kth dequeue, Nth transfer
+//! execution), so a single-worker run makes the schedule — and the
+//! counters the determinism test compares — independent of thread
+//! timing.
+
+use std::sync::Mutex;
+
+use marionette::coordinator::{
+    run_pipeline, FaultPlan, PipelineConfig, PipelineError, PipelineReport, RoutePolicy,
+};
+use marionette::edm::generator::EventConfig;
+
+/// The transfer-fault hook is process-global, so tests in this binary
+/// that run armed plans must not overlap; everything serialises here.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    // An assert failure in another test must not cascade as poison.
+    CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const EVENTS: usize = 24;
+
+fn chaos_cfg(seed: u64, plan: FaultPlan) -> PipelineConfig {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 3), EVENTS);
+    cfg.device = true;
+    cfg.policy = RoutePolicy::DeviceOnly;
+    cfg.host_workers = 1;
+    cfg.device_workers = 1;
+    cfg.seed = seed;
+    cfg.fault = Some(plan);
+    cfg
+}
+
+fn clean_cfg(seed: u64) -> PipelineConfig {
+    let mut cfg = PipelineConfig::new(EventConfig::grid(32, 32, 3), EVENTS);
+    cfg.device = false;
+    cfg.policy = RoutePolicy::HostOnly;
+    cfg.host_workers = 1;
+    cfg.seed = seed;
+    cfg
+}
+
+fn fault_counters(rep: &PipelineReport) -> (u64, u64, u64, u64, u64) {
+    let m = &rep.metrics;
+    (
+        m.fault_injected,
+        m.fault_recovered,
+        m.fault_requeued,
+        m.fault_quarantined,
+        m.fault_respawns,
+    )
+}
+
+/// Property: for randomized-but-seeded fault plans, every submitted
+/// event lands in exactly one of {completed, quarantined}, and every
+/// completed event carries the clean run's physics.
+#[test]
+fn randomized_fault_plans_never_lose_events() {
+    let _g = chaos_lock();
+    for seed in 0..8u64 {
+        let plan = FaultPlan::from_seed(seed);
+        let golden = run_pipeline(&clean_cfg(seed)).unwrap();
+        let rep = run_pipeline(&chaos_cfg(seed, plan.clone()))
+            .unwrap_or_else(|e| panic!("seed {seed} plan {plan:?}: {e:#}"));
+
+        let mut seen: Vec<u64> = rep.results.iter().map(|r| r.event_id).collect();
+        seen.extend(rep.quarantined.iter().copied());
+        seen.sort_unstable();
+        assert_eq!(
+            seen,
+            (0..EVENTS as u64).collect::<Vec<u64>>(),
+            "seed {seed}: exactly-once violated ({} completed + {} quarantined, \
+             plan {plan:?})",
+            rep.results.len(),
+            rep.quarantined.len(),
+        );
+
+        for r in &rep.results {
+            let g = &golden.results[r.event_id as usize];
+            assert_eq!(g.event_id, r.event_id);
+            assert_eq!(
+                g.n_particles, r.n_particles,
+                "seed {seed} event {}: particle count diverged from clean run",
+                r.event_id
+            );
+            let rel =
+                (g.total_energy - r.total_energy).abs() / g.total_energy.abs().max(1.0);
+            assert!(
+                rel < 1e-3,
+                "seed {seed} event {}: energy drift {rel} vs clean run",
+                r.event_id
+            );
+        }
+    }
+}
+
+/// Determinism: the same seed and plan must fire the identical fault
+/// schedule — all five counters, the quarantine list, and the surviving
+/// results agree bit-for-bit between runs.
+#[test]
+fn same_seed_runs_produce_identical_fault_counters() {
+    let _g = chaos_lock();
+    let plan = FaultPlan::new(11)
+        .kill_device_at(4)
+        .alloc_fail_every(7)
+        .transfer_fail_every(11)
+        .retry_budget(2);
+    let a = run_pipeline(&chaos_cfg(11, plan.clone())).unwrap();
+    let b = run_pipeline(&chaos_cfg(11, plan)).unwrap();
+
+    let (ca, cb) = (fault_counters(&a), fault_counters(&b));
+    assert_eq!(ca, cb, "fault counters diverged between same-seed runs");
+    assert!(ca.0 >= 1, "plan armed three injectors but nothing fired");
+    assert_eq!(a.quarantined, b.quarantined, "quarantine lists diverged");
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.event_id, y.event_id);
+        assert_eq!(x.n_particles, y.n_particles, "event {}", x.event_id);
+    }
+}
+
+/// `worker_abort` lets the kill escape supervision: the run must come
+/// back as a typed error with the partial metrics intact — and the
+/// process must stay healthy (global hooks disarmed) for the next run.
+#[test]
+fn worker_abort_is_reported_and_process_survives() {
+    let _g = chaos_lock();
+    let plan = FaultPlan::new(5).kill_device_at(2).worker_abort(true);
+    let err = run_pipeline(&chaos_cfg(5, plan)).unwrap_err();
+    let pe = err
+        .downcast_ref::<PipelineError>()
+        .expect("worker panic must downcast to PipelineError");
+    assert_eq!(pe.panicked_workers, 1);
+    assert_eq!(pe.report.metrics.events_in, EVENTS, "partial metrics lost");
+    assert!(pe.report.metrics.fault_injected >= 1, "kill not counted");
+
+    // A clean run right after completes fully: nothing leaked from the
+    // aborted run's armed state.
+    let rep = run_pipeline(&clean_cfg(5)).unwrap();
+    assert_eq!(rep.results.len(), EVENTS);
+    assert!(rep.quarantined.is_empty());
+    assert_eq!(fault_counters(&rep), (0, 0, 0, 0, 0), "clean run booked faults");
+}

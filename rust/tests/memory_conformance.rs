@@ -1,7 +1,8 @@
 //! MemoryContext conformance harness.
 //!
 //! One generic checker, instantiated for every in-tree context (Host,
-//! Aligned, Counting, Arena, Staging, Pool): property-style programs of
+//! Aligned, Counting, Arena, Staging, Pool, Tracing, disarmed
+//! Faulty): property-style programs of
 //! randomized allocate / fill / verify / free / grow / rehome steps are
 //! decoded from `u64` ops exactly like `prop_marionette.rs` decodes its
 //! collection programs (`util::prop::Cases::shrinkable`), and every
@@ -21,11 +22,13 @@
 
 use std::alloc::Layout as AllocLayout;
 use std::ptr::NonNull;
+use std::sync::atomic::Ordering;
 
 use marionette::marionette::buffer::{ContextAwareVec, RawBuf};
 use marionette::marionette::memory::{
-    AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, HostContext,
-    MemoryContext, PoolContext, PoolInfo, StagingContext, StagingInfo,
+    AlignedContext, ArenaContext, ArenaInfo, CountingContext, CountingInfo, FaultyContext,
+    FaultyInfo, HostContext, MemoryContext, PoolContext, PoolInfo, StagingContext,
+    StagingInfo, TraceInfo, TracingContext,
 };
 use marionette::util::prop::Cases;
 
@@ -243,6 +246,58 @@ fn pool_conforms() {
         }
         Ok(())
     });
+}
+
+/// The tracing decorator is a pure pass-through: it must conform like
+/// its inner context, with a balanced call ledger of its own.
+#[test]
+fn tracing_conforms() {
+    check_context::<TracingContext<CountingContext>>(
+        "conformance-tracing",
+        TraceInfo::<CountingContext>::default,
+        |info| {
+            let allocs = info.stats.allocs.load(Ordering::Relaxed);
+            let deallocs = info.stats.deallocs.load(Ordering::Relaxed);
+            if allocs != deallocs {
+                return Err(format!(
+                    "trace ledger imbalance: {allocs} allocs vs {deallocs} deallocs"
+                ));
+            }
+            if info.inner.0.live_allocs() != 0 {
+                return Err(format!(
+                    "inner live allocs {} != 0",
+                    info.inner.0.live_allocs()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// With injection disarmed (the default), the chaos harness's faulty
+/// decorator must be indistinguishable from its inner context — and its
+/// fault cell must never fire.
+#[test]
+fn faulty_disabled_conforms() {
+    check_context::<FaultyContext<CountingContext>>(
+        "conformance-faulty-disarmed",
+        FaultyInfo::<CountingContext>::default,
+        |info| {
+            if info.faults.injected() != 0 {
+                return Err(format!(
+                    "disarmed fault cell fired {} times",
+                    info.faults.injected()
+                ));
+            }
+            if info.inner.0.live_allocs() != 0 {
+                return Err(format!(
+                    "inner live allocs {} != 0",
+                    info.inner.0.live_allocs()
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 /// The pool must actually recycle under the harness workload: replaying

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use marionette::marionette::collection::{InfoOf, RawCollection};
-use marionette::marionette::interface::AttachError;
+use marionette::marionette::interface::{AttachError, SourceJagged};
 use marionette::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
 use marionette::marionette::schema::{FieldMeta, Schema};
 use marionette::marionette_collection;
@@ -313,6 +313,88 @@ fn view_reads_equal_owned_reads_all_layouts() {
         check_view_equals_owned::<AoS>(program)?;
         check_view_equals_owned::<SoABlob>(program)?;
         check_view_equals_owned::<AoSoA<4>>(program)
+    });
+}
+
+/// First coverage of the jagged view-layer primitives: after a random
+/// program (ops 0/5/6 grow items with random multiplicities), a
+/// hand-constructed `SourceJagged` over the raw collection — with its
+/// range resolved through `JaggedProp`'s prefix meta, exactly as the
+/// generated views do — must agree with the owned `jagged_view`, the
+/// generated view accessor, and the model, on every layout.
+fn check_source_jagged<L: Layout>(program: &[u64]) -> Result<(), String>
+where
+    InfoOf<L>: Default,
+{
+    let (s, metas) = schema();
+    let mut m = Model::default();
+    let mut c = RawCollection::<L>::new(s);
+    for &op in program {
+        apply(op, &mut m, &mut c, &metas);
+    }
+    let v = PropView::attach(&c).map_err(|e| format!("attach failed: {e}"))?;
+
+    // Prefix-meta consistency: the per-item ranges tile the values tag
+    // (no gaps, no overlap) and reproduce the model's multiplicities.
+    let mut expect_lo = 0usize;
+    for i in 0..c.len() {
+        let lo = c.prefix_at(0, i);
+        let hi = c.prefix_at(0, i + 1);
+        if lo != expect_lo {
+            return Err(format!("prefix gap at item {i}: {lo} != {expect_lo}"));
+        }
+        if hi - lo != m.cells[i].len() {
+            return Err(format!(
+                "multiplicity[{i}]: prefix says {}, model says {}",
+                hi - lo,
+                m.cells[i].len()
+            ));
+        }
+        expect_lo = hi;
+
+        let j = SourceJagged::<u64, _>::new(&c, PropProps::CELLS.values, lo..hi);
+        if j.len() != m.cells[i].len() || j.is_empty() != m.cells[i].is_empty() {
+            return Err(format!("source jagged len[{i}]: {} != {}", j.len(), m.cells[i].len()));
+        }
+        for (n, &want) in m.cells[i].iter().enumerate() {
+            if j.get(n) != want {
+                return Err(format!("source jagged get({i}, {n}) != model"));
+            }
+        }
+        let iterated: Vec<u64> = j.iter().collect();
+        if iterated != m.cells[i] {
+            return Err(format!("source jagged iter[{i}] != model"));
+        }
+        if j.to_vec() != c.jagged_view::<u64>(metas.cells, 0, i).to_vec() {
+            return Err(format!("source jagged[{i}] != owned jagged_view"));
+        }
+        if j.to_vec() != v.cells(i).to_vec() {
+            return Err(format!("source jagged[{i}] != generated view accessor"));
+        }
+        // Dense sources may hand out a borrowed slice; when they do it
+        // must be the same values.
+        if let Some(slice) = j.as_slice() {
+            if slice != m.cells[i].as_slice() {
+                return Err(format!("as_slice[{i}] disagrees with model"));
+            }
+        }
+    }
+    if expect_lo != c.values_len(0) {
+        return Err(format!(
+            "prefix total {expect_lo} != values_len {}",
+            c.values_len(0)
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn source_jagged_roundtrips_all_layouts() {
+    Cases::new(32).shrinkable("source-jagged", 40, |program| {
+        check_source_jagged::<SoAVec>(program)?;
+        check_source_jagged::<AoS>(program)?;
+        check_source_jagged::<SoABlob>(program)?;
+        check_source_jagged::<AoSoA<4>>(program)
     });
 }
 
