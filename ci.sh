@@ -38,6 +38,7 @@ cargo test -q --test bench_report_guard
 cargo test -q --test coordinator_scale
 cargo test -q --test prop_marionette
 cargo test -q --test chaos
+cargo test -q --test wire_roundtrip
 
 echo "== saturate-smoke: worker scaling + tail latency =="
 # Drives the sharded coordinator at 1/2/4 host workers; the command
@@ -63,6 +64,23 @@ echo "== chaos-smoke: kill a device worker mid-run, lose nothing =="
 # exactly one of {completed, quarantined} and every completed event
 # matches the clean run's golden output.
 cargo run --release -- chaos --quick --seed 7 --kill-device-at 50
+
+echo "== ingest-smoke: 2 ingest processes -> 1 reconstruction over a socket =="
+# Real multi-process run (DESIGN.md §11): two striped ingest processes
+# frame the seeded event stream onto a Unix socket; the serve process
+# reassembles, attaches frames zero-copy, and exits nonzero unless the
+# result is exactly-once AND bit-identical to the in-process golden.
+INGEST_SOCK="$(mktemp -u /tmp/marionette-ingest-XXXXXX.sock)"
+cargo run --release -- serve --socket "$INGEST_SOCK" --events 60 --procs 2 &
+SERVE_PID=$!
+cargo run --release -- ingest --socket "$INGEST_SOCK" --events 60 --procs 2 --index 0 &
+INGEST0_PID=$!
+cargo run --release -- ingest --socket "$INGEST_SOCK" --events 60 --procs 2 --index 1 &
+INGEST1_PID=$!
+wait "$INGEST0_PID"
+wait "$INGEST1_PID"
+wait "$SERVE_PID"
+rm -f "$INGEST_SOCK"
 
 echo "== bench-smoke: reporter --quick, gated vs BENCH_baseline.json =="
 # Emits BENCH_run.json (machine-readable trajectory, DESIGN.md §7) and

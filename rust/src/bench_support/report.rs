@@ -1,12 +1,14 @@
 //! Machine-readable BENCH reporting and regression gating.
 //!
 //! Turns the paper-figure benches into a committed performance
-//! trajectory: [`collect`] measures the nine series ROADMAP calls for
-//! (plan-cache hit rate, bytes/s per transfer route, events/s per
+//! trajectory: [`collect`] measures the eleven series ROADMAP calls
+//! for (plan-cache hit rate, bytes/s per transfer route, events/s per
 //! worker count, view-vs-owned accessor ratios, the saturation
 //! events/s + p99 tail-latency sweep, the same sweep under the
-//! adaptive AIMD batch controller, and degraded-mode throughput with a
-//! device worker killed mid-run), [`BenchReport::to_json`]
+//! adaptive AIMD batch controller, degraded-mode throughput with a
+//! device worker killed mid-run, wire-format encode/decode bytes/s,
+//! and single- vs multi-process ingestion events/s),
+//! [`BenchReport::to_json`]
 //! emits them as `BENCH_run.json`, and [`compare`] gates a fresh run
 //! against a committed `BENCH_baseline.json` within per-series
 //! tolerances. The JSON format and the baseline-update policy are
@@ -58,9 +60,20 @@ pub const SERIES_ADAPTIVE_P99: &str = "adaptive_p99_latency_us";
 /// exactly-once delivery; the `kill-at-50%` point gates how much
 /// throughput survives a worker death.
 pub const SERIES_DEGRADED: &str = "degraded_events_per_sec";
+/// Wire-format throughput (unit `bytes_per_sec`, DESIGN.md §11): frame
+/// a staged sensor event with `encode_frame` (point `encode`) and
+/// decode + schema-check + zero-copy-attach it back (point
+/// `decode-attach`, including the socket-read-equivalent buffer copy).
+pub const SERIES_WIRE: &str = "wire_bytes_per_sec";
+/// Multi-process ingestion throughput (unit `events_per_sec`): the
+/// socketpair-fed reconstruction topology with one vs two ingest
+/// producers (points `procs=1` / `procs=2`), golden-checked against
+/// the in-process run before the numbers are booked.
+pub const SERIES_INGEST: &str = "ingest_events_per_sec";
 
-/// Every report must carry all nine series to pass [`BenchReport::validate`].
-pub const REQUIRED_SERIES: [&str; 9] = [
+/// Every report must carry all eleven series to pass
+/// [`BenchReport::validate`].
+pub const REQUIRED_SERIES: [&str; 11] = [
     SERIES_PLAN_CACHE,
     SERIES_TRANSFER,
     SERIES_PIPELINE,
@@ -70,6 +83,8 @@ pub const REQUIRED_SERIES: [&str; 9] = [
     SERIES_ADAPTIVE,
     SERIES_ADAPTIVE_P99,
     SERIES_DEGRADED,
+    SERIES_WIRE,
+    SERIES_INGEST,
 ];
 
 /// Which direction is an improvement for a series.
@@ -359,7 +374,7 @@ const TOL_HIT_RATE: f64 = 0.10;
 const TOL_VIEW_RATIO: f64 = 0.60; // matches the 1.6x zero-cost guard bound
 const TOL_THROUGHPUT: f64 = 0.30;
 
-/// Measure all nine required series and return a validated report.
+/// Measure all eleven required series and return a validated report.
 pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
     let (sat_tp, sat_p99) = saturation_series(opts)?;
     let (ada_tp, ada_p99) = adaptive_series(opts)?;
@@ -376,6 +391,8 @@ pub fn collect(opts: &ReportOpts) -> Result<BenchReport> {
             ada_tp,
             ada_p99,
             degraded_series(opts)?,
+            wire_series(opts)?,
+            ingest_series(opts)?,
         ],
     };
     report.validate()?;
@@ -617,6 +634,86 @@ pub fn degraded_series(opts: &ReportOpts) -> Result<BenchSeries> {
             BenchPoint { label: "clean".to_string(), value: clean.events_per_sec() },
             BenchPoint { label: "kill-at-50%".to_string(), value: kill.events_per_sec() },
         ],
+    })
+}
+
+/// Wire-format throughput (DESIGN.md §11): `encode` frames one staged
+/// sensor event into the zero-copy format; `decode-attach` replays the
+/// receive path — buffer copy (the socket read's stand-in), header +
+/// CRC validation, schema check, and a zero-copy view attach with one
+/// element read to keep the optimizer honest.
+pub fn wire_series(opts: &ReportOpts) -> Result<BenchSeries> {
+    use crate::edm::sensor::{SensorProps, SensorView};
+    use crate::marionette::wire::{encode_frame, Frame};
+    use std::time::Instant;
+
+    let reps = if opts.quick { 64 } else { 512 };
+    let ev = EventGenerator::new(EventConfig::grid(opts.grid, opts.grid, 4), 17).generate();
+    let mut sensors = SensorCollection::<SoAVec>::new();
+    ev.fill_collection(&mut sensors);
+    let frame = encode_frame(&sensors, ev.event_id);
+    let frame_bytes = frame.len() as f64;
+
+    let t = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(encode_frame(&sensors, ev.event_id).len());
+    }
+    let encode_bps = frame_bytes * reps as f64 / t.elapsed().as_secs_f64().max(1e-9);
+
+    let schema = SensorProps::schema();
+    let t = Instant::now();
+    for _ in 0..reps {
+        let decoded = Frame::decode_slice(frame.as_slice())
+            .map_err(|e| anyhow!("wire series decode: {e}"))?;
+        let src = decoded
+            .source(&schema)
+            .map_err(|e| anyhow!("wire series attach: {e}"))?;
+        let v = SensorView::attach(&src).map_err(|e| anyhow!("wire series view: {e:?}"))?;
+        std::hint::black_box(v.counts(0));
+    }
+    let decode_bps = frame_bytes * reps as f64 / t.elapsed().as_secs_f64().max(1e-9);
+
+    Ok(BenchSeries {
+        name: SERIES_WIRE.to_string(),
+        unit: "bytes_per_sec".to_string(),
+        better: Better::Higher,
+        tolerance: TOL_THROUGHPUT,
+        points: vec![
+            BenchPoint { label: "encode".to_string(), value: encode_bps },
+            BenchPoint { label: "decode-attach".to_string(), value: decode_bps },
+        ],
+    })
+}
+
+/// Multi-process ingestion throughput: the full socketpair topology
+/// (N ingest threads striping the seeded stream, bounded reassembly
+/// ring, zero-copy frame attach) at one and two producers. Each run is
+/// golden-compared against the in-process generator before its
+/// events/s is booked — a fast-but-wrong number can never land in the
+/// trajectory.
+pub fn ingest_series(opts: &ReportOpts) -> Result<BenchSeries> {
+    use crate::coordinator::{golden_compare, run_socketpair_ingest, ServeOpts};
+
+    let events = if opts.quick { 48 } else { 200 };
+    let event = EventConfig::grid(32, 32, 4);
+    let seed = 20260808;
+    let mut points = Vec::new();
+    for procs in [1usize, 2] {
+        let report =
+            run_socketpair_ingest(&event, events, seed, procs, &ServeOpts::default())?;
+        golden_compare(&report, &event, events, seed)
+            .with_context(|| format!("ingest series procs={procs}"))?;
+        points.push(BenchPoint {
+            label: format!("procs={procs}"),
+            value: report.events_per_sec(),
+        });
+    }
+    Ok(BenchSeries {
+        name: SERIES_INGEST.to_string(),
+        unit: "events_per_sec".to_string(),
+        better: Better::Higher,
+        tolerance: TOL_THROUGHPUT,
+        points,
     })
 }
 

@@ -123,6 +123,13 @@ pub struct PipelineConfig {
     /// the memory/engine/transfer injectors and switches event
     /// processing to the guarded retry/quarantine paths.
     pub fault: Option<super::fault::FaultPlan>,
+    /// Host staging layout override — the autotuner's recommendation
+    /// ([`crate::marionette::trace::recommend_layout`]) routed into the
+    /// live staging path. `None` (the default) keeps the pooled AoS
+    /// staging collections (the zero-alloc steady-state path); `Some`
+    /// stages each host event into a fresh collection of the selected
+    /// layout, with its transfer plan pre-warmed at run start.
+    pub staging_layout: Option<crate::marionette::trace::LayoutChoice>,
 }
 
 impl PipelineConfig {
@@ -145,6 +152,7 @@ impl PipelineConfig {
             adaptive: None,
             trace: None,
             fault: None,
+            staging_layout: None,
         }
     }
 }

@@ -1,0 +1,544 @@
+//! Multi-process ingestion: framed events over Unix sockets into the
+//! reconstruction pipeline (DESIGN.md §11).
+//!
+//! Topology: N **ingest** processes each run the seeded
+//! [`EventGenerator`], frame their stripe of the event stream with
+//! [`encode_frame`], and stream the frames over a socket. One
+//! **reconstruction** process accepts the N streams, reassembles frames
+//! through a bounded [`ReassemblyRing`] (the backpressure edge: a full
+//! ring stalls the reader threads, the kernel socket buffers fill, the
+//! ingest writers block), and worker threads attach each frame
+//! **in place** — calibration writes into the received buffer through
+//! [`FrameSourceMut`]; the sensor planes are never copied after the
+//! socket read. Reconstruction output then feeds the same pooled
+//! staging path the in-process pipeline uses.
+//!
+//! Striping: every ingest process runs the *same* seeded generator and
+//! sends only the events with `event_id % shards == index`. The union
+//! over shards is exactly the in-process stream — which is what makes
+//! the golden-equivalence check ([`golden_compare`]) exact: the
+//! socket-fed run must reproduce the in-process run bit for bit.
+//!
+//! Poisoned frames never panic the receiver: decode failures are typed
+//! [`WireError`]s counted as `poisoned` (identity unknown) and
+//! attach/processing failures quarantine the frame id — the same
+//! report-never-drop contract as the PR 9 fault path.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::pipeline::{process_host_staged, StagePool, StagedParticles};
+use crate::coordinator::router::QueueGauge;
+use crate::edm::generator::{EventConfig, EventGenerator};
+use crate::edm::particle::ParticleCollection;
+use crate::edm::reco;
+use crate::edm::sensor::{SensorCollection, SensorProps, SensorView, SensorViewMut};
+use crate::edm::calib;
+use crate::marionette::collection::InfoOf;
+use crate::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
+use crate::marionette::trace::LayoutChoice;
+use crate::marionette::wire::{encode_frame, AlignedBytes, Frame, WireError};
+use crate::runtime::transport::{write_frame, FrameReader, ReassemblyRing};
+
+// ---------------------------------------------------------------------
+// Ingest (sender) side.
+// ---------------------------------------------------------------------
+
+/// Parameters of one ingest process.
+#[derive(Clone, Debug)]
+pub struct IngestOpts {
+    pub event: EventConfig,
+    /// Total events in the stream (across all shards).
+    pub n_events: usize,
+    pub seed: u64,
+    /// Number of ingest processes sharing the stream.
+    pub shards: usize,
+    /// This process's stripe: sends events with
+    /// `event_id % shards == index`.
+    pub index: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestStats {
+    pub frames: usize,
+    pub bytes: usize,
+}
+
+/// Generate and frame this shard's stripe of the event stream onto a
+/// byte sink. One reused staging collection; one frame per event; no
+/// per-element serialization beyond the dense plane writes.
+pub fn run_ingest<W: Write + ?Sized>(w: &mut W, opts: &IngestOpts) -> Result<IngestStats> {
+    let shards = opts.shards.max(1);
+    ensure!(opts.index < shards, "ingest index {} out of {} shards", opts.index, shards);
+    let mut gen = EventGenerator::new(opts.event.clone(), opts.seed);
+    let mut sensors = SensorCollection::<SoAVec>::new();
+    let mut stats = IngestStats::default();
+    for _ in 0..opts.n_events {
+        let ev = gen.generate();
+        if ev.event_id % shards as u64 != opts.index as u64 {
+            continue;
+        }
+        ev.fill_collection(&mut sensors);
+        let frame = encode_frame(&sensors, ev.event_id);
+        write_frame(w, frame.as_slice())
+            .with_context(|| format!("sending frame {}", ev.event_id))?;
+        stats.frames += 1;
+        stats.bytes += frame.len();
+    }
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------
+// Reconstruction (receiver) side.
+// ---------------------------------------------------------------------
+
+/// Per-frame reconstruction outcome (the wire twin of the pipeline's
+/// `EventResult`).
+#[derive(Clone, Copy, Debug)]
+pub struct FrameResult {
+    pub event_id: u64,
+    pub n_particles: usize,
+    pub total_energy: f64,
+    /// Bytes booked by the particle staging transfer — the *only*
+    /// copied payload on the receive path (sensor planes attach in
+    /// place), which is what the zero-copy test pins.
+    pub staged_bytes: usize,
+}
+
+/// Receiver parameters.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Reassembly ring capacity (frames).
+    pub ring_depth: usize,
+    /// Reconstruction worker threads.
+    pub workers: usize,
+    /// Staging layout override — the autotuner's [`LayoutChoice`]
+    /// routed through the live staging path (`None` = pooled AoS).
+    pub staging: Option<LayoutChoice>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { ring_depth: 64, workers: 2, staging: None }
+    }
+}
+
+/// Whole-run receiver outcome.
+#[derive(Debug, Default)]
+pub struct ReconstructionReport {
+    /// Per-event results, sorted by event id.
+    pub results: Vec<FrameResult>,
+    /// Frame ids that decoded but failed attach/processing.
+    pub quarantined: Vec<u64>,
+    /// Frames that failed decode (identity unknown) or streams that
+    /// died mid-frame.
+    pub poisoned: usize,
+    /// Frames received intact.
+    pub frames: usize,
+    /// Total frame bytes read off the sockets.
+    pub bytes: usize,
+    /// Peak reassembly-ring depth observed (backpressure telemetry).
+    pub peak_ring_depth: usize,
+    pub wall: Duration,
+}
+
+impl ReconstructionReport {
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall.as_secs_f64() <= 0.0 {
+            return 0.0;
+        }
+        self.results.len() as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn bytes_per_sec(&self) -> f64 {
+        if self.wall.as_secs_f64() <= 0.0 {
+            return 0.0;
+        }
+        self.bytes as f64 / self.wall.as_secs_f64()
+    }
+}
+
+fn attach_to_wire(e: crate::marionette::interface::AttachError) -> WireError {
+    WireError::Malformed { what: format!("attach: {e:?}") }
+}
+
+fn process_with_staged<L: Layout>(
+    frame: &mut Frame,
+    staged: &mut ParticleCollection<L>,
+) -> Result<FrameResult, WireError> {
+    let event_id = frame.frame_id();
+    let schema = SensorProps::schema();
+    let mut src = frame.source_mut(&schema)?;
+    {
+        // Calibrate in place: energy/noise/sig land in the received
+        // buffer's own planes.
+        let mut v = SensorViewMut::attach(&mut src).map_err(attach_to_wire)?;
+        calib::calibrate_view(&mut v);
+    }
+    let particles = {
+        let v = SensorView::attach(&src).map_err(attach_to_wire)?;
+        reco::reconstruct(&v)
+    };
+    let pc = reco::into_collection::<SoAVec>(event_id, &particles);
+    let stats = pc.stage_into(staged);
+    let back = reco::fill_back_aos(staged);
+    let energy = back.data.iter().map(|p| p.energy as f64).sum();
+    Ok(FrameResult {
+        event_id,
+        n_particles: back.data.len(),
+        total_energy: energy,
+        staged_bytes: stats.bytes,
+    })
+}
+
+fn process_fresh<L: Layout>(frame: &mut Frame) -> Result<FrameResult, WireError>
+where
+    InfoOf<L>: Default,
+{
+    let mut staged = ParticleCollection::<L>::new();
+    process_with_staged(frame, &mut staged)
+}
+
+/// Reconstruct one received frame: schema-checked zero-copy attach,
+/// in-place calibration, reconstruction, particle staging through the
+/// pooled path (or the autotuner-selected layout).
+pub fn process_frame(
+    frame: &mut Frame,
+    staging: Option<LayoutChoice>,
+    pool: &StagePool,
+) -> Result<FrameResult, WireError> {
+    match staging {
+        None => {
+            let mut staged = pool.checkout();
+            let s: &mut StagedParticles = &mut staged;
+            process_with_staged(frame, s)
+        }
+        Some(LayoutChoice::AoS) => process_fresh::<AoS>(frame),
+        Some(LayoutChoice::SoAVec) => process_fresh::<SoAVec>(frame),
+        Some(LayoutChoice::SoABlob) => process_fresh::<SoABlob>(frame),
+        Some(LayoutChoice::AoSoA8) => process_fresh::<AoSoA<8>>(frame),
+    }
+}
+
+/// Drive reconstruction over N frame streams: one reader thread per
+/// stream feeding the bounded ring, `opts.workers` processing threads
+/// draining it. Returns when every stream has closed and the ring has
+/// drained.
+pub fn run_reconstruction<R: Read + Send>(
+    streams: Vec<R>,
+    opts: &ServeOpts,
+) -> Result<ReconstructionReport> {
+    let ring = ReassemblyRing::<AlignedBytes>::new(opts.ring_depth);
+    let gauge = QueueGauge::default();
+    let poisoned = AtomicUsize::new(0);
+    let bytes = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let results: Mutex<Vec<FrameResult>> = Mutex::new(Vec::new());
+    let quarantined: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let pool = StagePool::shared();
+    let staging = opts.staging;
+    let start = Instant::now();
+
+    std::thread::scope(|s| {
+        let ring = &ring;
+        let gauge = &gauge;
+        let poisoned = &poisoned;
+        let bytes = &bytes;
+        let peak = &peak;
+        let results = &results;
+        let quarantined = &quarantined;
+        let pool = &pool;
+
+        let readers: Vec<_> = streams
+            .into_iter()
+            .map(|stream| {
+                s.spawn(move || {
+                    let mut rd = FrameReader::new(stream);
+                    loop {
+                        match rd.read_frame() {
+                            Ok(Some(buf)) => {
+                                gauge.inc();
+                                peak.fetch_max(gauge.depth(), Relaxed);
+                                if !ring.push(buf) {
+                                    break;
+                                }
+                            }
+                            Ok(None) => break,
+                            Err(_) => {
+                                // Mid-frame death or garbage header: the
+                                // stream cannot be resynced; count and stop.
+                                poisoned.fetch_add(1, Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                    bytes.fetch_add(rd.bytes_read(), Relaxed);
+                })
+            })
+            .collect();
+
+        let workers: Vec<_> = (0..opts.workers.max(1))
+            .map(|_| {
+                s.spawn(move || {
+                    while let Some(buf) = ring.pop() {
+                        gauge.dec();
+                        match Frame::decode(buf) {
+                            Ok(mut frame) => {
+                                match process_frame(&mut frame, staging, pool) {
+                                    Ok(r) => results.lock().unwrap().push(r),
+                                    Err(_) => {
+                                        quarantined.lock().unwrap().push(frame.frame_id());
+                                    }
+                                }
+                            }
+                            Err(_) => {
+                                poisoned.fetch_add(1, Relaxed);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        for r in readers {
+            let _ = r.join();
+        }
+        ring.close();
+        for w in workers {
+            let _ = w.join();
+        }
+    });
+
+    let mut results = results.into_inner().unwrap();
+    results.sort_unstable_by_key(|r| r.event_id);
+    let mut quarantined = quarantined.into_inner().unwrap();
+    quarantined.sort_unstable();
+    let frames = results.len() + quarantined.len();
+    Ok(ReconstructionReport {
+        results,
+        quarantined,
+        poisoned: poisoned.into_inner(),
+        frames,
+        bytes: bytes.into_inner(),
+        peak_ring_depth: peak.into_inner(),
+        wall: start.elapsed(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Accounting and golden equivalence.
+// ---------------------------------------------------------------------
+
+/// Exactly-once accounting: every event id in `0..expected` appears in
+/// exactly one of {results, quarantined}, and nothing was poisoned.
+pub fn verify_exactly_once(report: &ReconstructionReport, expected: usize) -> Result<()> {
+    ensure!(report.poisoned == 0, "{} poisoned frames", report.poisoned);
+    let mut ids: Vec<u64> = report
+        .results
+        .iter()
+        .map(|r| r.event_id)
+        .chain(report.quarantined.iter().copied())
+        .collect();
+    ids.sort_unstable();
+    ensure!(
+        ids.len() == expected,
+        "expected {expected} events, accounted {} ({} completed, {} quarantined)",
+        ids.len(),
+        report.results.len(),
+        report.quarantined.len()
+    );
+    for (i, id) in ids.iter().enumerate() {
+        ensure!(*id == i as u64, "event id {i} missing or duplicated (saw {id})");
+    }
+    Ok(())
+}
+
+/// Bit-identical golden equivalence versus the in-process generator:
+/// re-run the same seeded stream through [`process_host_staged`] and
+/// require exact agreement — particle counts equal and total energies
+/// equal to the last bit (both paths execute the identical kernels in
+/// the identical order).
+pub fn golden_compare(
+    report: &ReconstructionReport,
+    event: &EventConfig,
+    n_events: usize,
+    seed: u64,
+) -> Result<()> {
+    verify_exactly_once(report, n_events)?;
+    ensure!(
+        report.quarantined.is_empty(),
+        "clean run quarantined {} frames",
+        report.quarantined.len()
+    );
+    let by_id: HashMap<u64, &FrameResult> =
+        report.results.iter().map(|r| (r.event_id, r)).collect();
+    let mut gen = EventGenerator::new(event.clone(), seed);
+    let mut staged = ParticleCollection::<AoS>::new();
+    for _ in 0..n_events {
+        let ev = gen.generate();
+        let (n, energy, _bytes) = process_host_staged(&ev, &mut staged);
+        let got = by_id
+            .get(&ev.event_id)
+            .with_context(|| format!("event {} missing from wire run", ev.event_id))?;
+        ensure!(
+            got.n_particles == n,
+            "event {}: {} particles over the wire, {} in-process",
+            ev.event_id,
+            got.n_particles,
+            n
+        );
+        ensure!(
+            got.total_energy.to_bits() == energy.to_bits(),
+            "event {}: energy {} over the wire != {} in-process (not bit-identical)",
+            ev.event_id,
+            got.total_energy,
+            energy
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// In-process harness (benches, tests) and Unix-socket endpoints (CLI).
+// ---------------------------------------------------------------------
+
+/// Run the full topology in-process over socketpairs: `senders` ingest
+/// threads stripe the same seeded stream, one reconstruction drives
+/// them. This is the bench/test harness; the CLI pair exercises the
+/// identical code across real process boundaries.
+pub fn run_socketpair_ingest(
+    event: &EventConfig,
+    n_events: usize,
+    seed: u64,
+    senders: usize,
+    opts: &ServeOpts,
+) -> Result<ReconstructionReport> {
+    use std::os::unix::net::UnixStream;
+    let senders = senders.max(1);
+    let mut writers = Vec::new();
+    let mut readers = Vec::new();
+    for _ in 0..senders {
+        let (a, b) = UnixStream::pair().context("socketpair")?;
+        writers.push(a);
+        readers.push(b);
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = writers
+            .into_iter()
+            .enumerate()
+            .map(|(index, mut w)| {
+                let ingest = IngestOpts {
+                    event: event.clone(),
+                    n_events,
+                    seed,
+                    shards: senders,
+                    index,
+                };
+                s.spawn(move || run_ingest(&mut w, &ingest))
+            })
+            .collect();
+        let report = run_reconstruction(readers, opts)?;
+        for h in handles {
+            h.join().expect("ingest thread panicked")?;
+        }
+        Ok(report)
+    })
+}
+
+/// Bind a Unix socket, accept `procs` ingest connections, reconstruct.
+pub fn serve_unix(path: &Path, procs: usize, opts: &ServeOpts) -> Result<ReconstructionReport> {
+    use std::os::unix::net::UnixListener;
+    let _ = std::fs::remove_file(path);
+    let listener =
+        UnixListener::bind(path).with_context(|| format!("bind {}", path.display()))?;
+    let mut streams = Vec::new();
+    for _ in 0..procs.max(1) {
+        let (stream, _) = listener.accept().context("accept")?;
+        streams.push(stream);
+    }
+    let report = run_reconstruction(streams, opts);
+    let _ = std::fs::remove_file(path);
+    report
+}
+
+/// Connect to a serve socket, retrying until `timeout` (the server may
+/// still be binding when the ingest process starts).
+pub fn connect_unix(path: &Path, timeout: Duration) -> Result<std::os::unix::net::UnixStream> {
+    use std::os::unix::net::UnixStream;
+    let start = Instant::now();
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if start.elapsed() >= timeout {
+                    bail!("connect {} timed out: {e}", path.display());
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socketpair_run_is_golden_and_exactly_once() {
+        let event = EventConfig::grid(24, 24, 3);
+        let n = 16;
+        let seed = 0xFEED;
+        let report =
+            run_socketpair_ingest(&event, n, seed, 2, &ServeOpts::default()).unwrap();
+        assert_eq!(report.results.len(), n);
+        assert!(report.bytes > 0);
+        golden_compare(&report, &event, n, seed).unwrap();
+    }
+
+    #[test]
+    fn selected_staging_layout_is_golden_too() {
+        let event = EventConfig::grid(16, 16, 2);
+        let n = 8;
+        let seed = 0xBEEF;
+        for staging in [
+            Some(LayoutChoice::SoAVec),
+            Some(LayoutChoice::SoABlob),
+            Some(LayoutChoice::AoSoA8),
+        ] {
+            let opts = ServeOpts { staging, ..ServeOpts::default() };
+            let report = run_socketpair_ingest(&event, n, seed, 1, &opts).unwrap();
+            golden_compare(&report, &event, n, seed).unwrap();
+        }
+    }
+
+    #[test]
+    fn poisoned_frame_is_counted_never_dropped_silently() {
+        use std::os::unix::net::UnixStream;
+        let event = EventConfig::grid(8, 8, 1);
+        let mut gen = EventGenerator::new(event.clone(), 1);
+        let ev = gen.generate();
+        let mut sensors = SensorCollection::<SoAVec>::new();
+        ev.fill_collection(&mut sensors);
+        let good = encode_frame(&sensors, ev.event_id);
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad.as_mut_slice()[n - 1] ^= 0x01; // CRC breaks
+
+        let (mut a, b) = UnixStream::pair().unwrap();
+        let t = std::thread::spawn(move || {
+            use std::io::Write;
+            a.write_all(bad.as_slice()).unwrap();
+            a.write_all(good.as_slice()).unwrap();
+        });
+        let report = run_reconstruction(vec![b], &ServeOpts::default()).unwrap();
+        t.join().unwrap();
+        assert_eq!(report.poisoned, 1, "corrupt frame must be counted");
+        assert_eq!(report.results.len(), 1, "intact frame still processes");
+    }
+}

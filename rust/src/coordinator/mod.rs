@@ -17,6 +17,7 @@
 pub mod batcher;
 pub mod config;
 pub mod fault;
+pub mod ingest;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
@@ -24,6 +25,11 @@ pub mod router;
 pub use batcher::{AimdBatchController, Batcher};
 pub use config::{AdaptiveBatch, PipelineConfig, RoutePolicy};
 pub use fault::{FaultPlan, FaultState};
+pub use ingest::{
+    connect_unix, golden_compare, run_ingest, run_reconstruction, run_socketpair_ingest,
+    serve_unix, verify_exactly_once, FrameResult, IngestOpts, IngestStats, ReconstructionReport,
+    ServeOpts,
+};
 pub use metrics::{MetricsSnapshot, PipelineMetrics};
 pub use pipeline::{
     run_pipeline, EventResult, PipelineError, PipelineReport, Route, RouteTapes, StageCtx,

@@ -56,8 +56,10 @@ use crate::edm::generator::{EventGenerator, RawEvent};
 use crate::edm::particle::{ParticleCollection, ParticleProps};
 use crate::edm::sensor::{SensorCollection, SensorProps, SensorView, SensorViewMut};
 use crate::edm::{calib, reco};
+use crate::marionette::collection::InfoOf;
 use crate::marionette::interface::TracingSource;
-use crate::marionette::layout::{AoS, Layout, SoAVec};
+use crate::marionette::layout::{AoS, AoSoA, Layout, SoABlob, SoAVec};
+use crate::marionette::trace::LayoutChoice;
 use crate::marionette::memory::{
     CountingContext, CountingInfo, FaultyContext, FaultyInfo, Pool, PoolContext, PoolInfo,
     PoolSnapshot, StagingContext, StagingInfo,
@@ -419,6 +421,36 @@ pub fn process_host_staged_traced<L: Layout>(
     let back = reco::fill_back_aos(staged);
     let energy = back.data.iter().map(|p| p.energy as f64).sum();
     (back.data.len(), energy, stats.bytes)
+}
+
+/// Host-path processing with the staging layout chosen at run time —
+/// the autotuner's [`LayoutChoice`] recommendation routed into the live
+/// path via [`PipelineConfig::staging_layout`]. Stages into a fresh
+/// collection of the selected layout (its transfer plan is pre-warmed
+/// by [`run_pipeline`], so the per-event cost is the allocation, not a
+/// plan build). The physics is layout-invariant: every choice must
+/// produce bit-identical results to the pooled default.
+pub fn process_host_selected(
+    ev: &RawEvent,
+    choice: LayoutChoice,
+    tapes: Option<&RouteTapes>,
+) -> (usize, f64, usize) {
+    fn go<L: Layout>(ev: &RawEvent, tapes: Option<&RouteTapes>) -> (usize, f64, usize)
+    where
+        InfoOf<L>: Default,
+    {
+        let mut staged = ParticleCollection::<L>::new();
+        match tapes {
+            Some(t) => process_host_staged_traced(ev, &mut staged, t),
+            None => process_host_staged(ev, &mut staged),
+        }
+    }
+    match choice {
+        LayoutChoice::AoS => go::<AoS>(ev, tapes),
+        LayoutChoice::SoAVec => go::<SoAVec>(ev, tapes),
+        LayoutChoice::SoABlob => go::<SoABlob>(ev, tapes),
+        LayoutChoice::AoSoA8 => go::<AoSoA<8>>(ev, tapes),
+    }
 }
 
 /// [`process_device_staged`] with the download gather reads taped; see
@@ -810,6 +842,7 @@ fn flush_host_group(
     stage_pool: &Arc<StagePool>,
     tapes: Option<Arc<RouteTapes>>,
     fault: &Arc<FaultState>,
+    staging: Option<LayoutChoice>,
 ) {
     if group.is_empty() {
         return;
@@ -837,9 +870,12 @@ fn flush_host_group(
         }
         let mut staged = pool.checkout();
         for (task, permit) in group {
-            let (n, energy, bytes) = match &tapes {
-                Some(t) => process_host_staged_traced(&task.ev, &mut *staged, t),
-                None => process_host_staged(&task.ev, &mut *staged),
+            let (n, energy, bytes) = match staging {
+                Some(choice) => process_host_selected(&task.ev, choice, tapes.as_deref()),
+                None => match &tapes {
+                    Some(t) => process_host_staged_traced(&task.ev, &mut *staged, t),
+                    None => process_host_staged(&task.ev, &mut *staged),
+                },
             };
             let latency = task.enqueued.elapsed();
             metrics.events_host.fetch_add(1, Relaxed);
@@ -870,6 +906,11 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     let _ = transfer::plan_for::<SoAVec, AoS<StageCtx>>(&ParticleProps::schema());
     if cfg.device {
         let _ = transfer::plan_for::<SoAVec, SoAVec<StagingContext>>(&SensorProps::schema());
+    }
+    if let Some(choice) = cfg.staging_layout {
+        // Autotuner-selected staging layout (satellite of the tuning
+        // loop): warm its plan so the per-event cost is allocation only.
+        let _ = crate::marionette::trace::warm_staging_plan(choice, &ParticleProps::schema());
     }
     // Pre-compile the chaos staging plan before faults arm, so the
     // first guarded recovery doesn't pay (or trip on) plan compilation.
@@ -1020,6 +1061,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                         &stage_pool,
                         cfg.trace.clone(),
                         &fault,
+                        cfg.staging_layout,
                     );
                 }
             }
@@ -1030,6 +1072,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                 let pool = stage_pool.clone();
                 let tapes = cfg.trace.clone();
                 let fault = fault.clone();
+                let staging = cfg.staging_layout;
                 host_pool.spawn(move || {
                     let _permit = permit;
                     if fault.plan.guard_host() {
@@ -1053,9 +1096,14 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
                     // cached plan (a lock-free per-thread handle hit)
                     // executes into it with zero allocations.
                     let mut staged = pool.checkout();
-                    let (n, energy, bytes) = match &tapes {
-                        Some(t) => process_host_staged_traced(&task.ev, &mut *staged, t),
-                        None => process_host_staged(&task.ev, &mut *staged),
+                    let (n, energy, bytes) = match staging {
+                        Some(choice) => {
+                            process_host_selected(&task.ev, choice, tapes.as_deref())
+                        }
+                        None => match &tapes {
+                            Some(t) => process_host_staged_traced(&task.ev, &mut *staged, t),
+                            None => process_host_staged(&task.ev, &mut *staged),
+                        },
                     };
                     let latency = task.enqueued.elapsed();
                     use std::sync::atomic::Ordering::Relaxed;
@@ -1124,6 +1172,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
         &stage_pool,
         cfg.trace.clone(),
         &fault,
+        cfg.staging_layout,
     );
     drop(res_tx);
     drop(dev_txs);
@@ -1209,6 +1258,42 @@ mod tests {
         // Results are sorted and complete.
         for (i, r) in rep.results.iter().enumerate() {
             assert_eq!(r.event_id, i as u64);
+        }
+    }
+
+    #[test]
+    fn selected_staging_layout_matches_default_physics() {
+        // Satellite of the autotuning loop: routing the layout
+        // selector's recommendation through `staging_layout` must not
+        // change any observable physics — the staging layout only moves
+        // bytes around. Compare every per-event result bit-for-bit
+        // against the pooled default across all four choices.
+        let run = |staging: Option<LayoutChoice>| {
+            let mut cfg = base_cfg(10);
+            cfg.device = false;
+            cfg.policy = RoutePolicy::HostOnly;
+            cfg.staging_layout = staging;
+            run_pipeline(&cfg).unwrap()
+        };
+        let base = run(None);
+        for choice in [
+            LayoutChoice::AoS,
+            LayoutChoice::SoAVec,
+            LayoutChoice::SoABlob,
+            LayoutChoice::AoSoA8,
+        ] {
+            let rep = run(Some(choice));
+            assert_eq!(rep.results.len(), base.results.len(), "{choice:?}");
+            for (got, want) in rep.results.iter().zip(&base.results) {
+                assert_eq!(got.event_id, want.event_id, "{choice:?}");
+                assert_eq!(got.n_particles, want.n_particles, "{choice:?}");
+                assert_eq!(
+                    got.total_energy.to_bits(),
+                    want.total_energy.to_bits(),
+                    "{choice:?} drifted on event {}",
+                    want.event_id,
+                );
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! programmer would write by hand to move between listing-1-style
 //! records and per-property arrays — are registered as `Specialized`
 //! rungs *inside* the transfer plans for the sensor schema, so
-//! `transfer_from` / `copy_collection` dispatch to them automatically
+//! `stage_into` / `copy_collection` dispatch to them automatically
 //! instead of bypassing the ladder.
 //!
 //! The converters are one-pass: dense column slices on the SoA side,
@@ -224,7 +224,7 @@ mod tests {
         let (soa, _) = event_collections();
         let mut aos = SensorCollection::<AoS>::new();
         for _ in 0..3 {
-            let rung = aos.transfer_from(&soa);
+            let rung = soa.stage_into(&mut aos).priority;
             assert_eq!(rung, TransferPriority::Specialized);
             assert_sensors_equal(&aos, &soa);
         }

@@ -210,7 +210,7 @@ mod tests {
             src.calibrate_energy(i);
         }
         let mut dst = SensorCollection::<AoSoA<4>>::new();
-        dst.transfer_from(&src);
+        src.stage_into(&mut dst);
         assert_eq!(dst.rows(), 2);
         assert_eq!(dst.event_id(), 99);
         for i in 0..src.len() {
@@ -315,11 +315,12 @@ mod tests {
         assert_eq!(stats.priority, TransferPriority::Strided);
         assert_eq!(counted.counts(3), 40);
 
-        // stage_into and the transfer_from shim book identical stats.
-        let mut shim = SensorCollection::<AoS<CountingContext>>::new_in(info);
-        let shim_stats = shim.transfer_from_stats(&src);
-        assert_eq!(stats.bytes, shim_stats.bytes);
-        assert_eq!(stats.ops, shim_stats.ops);
-        assert_eq!(stats.priority, shim_stats.priority);
+        // Route equivalence: a second stage_into through the same
+        // cached plan books identical stats into a fresh destination.
+        let mut again = SensorCollection::<AoS<CountingContext>>::new_in(info);
+        let again_stats = src.stage_into(&mut again);
+        assert_eq!(stats.bytes, again_stats.bytes);
+        assert_eq!(stats.ops, again_stats.ops);
+        assert_eq!(stats.priority, again_stats.priority);
     }
 }

@@ -19,6 +19,13 @@
 //!                         worker / fail allocations on a seeded
 //!                         schedule, assert exactly-once delivery and
 //!                         golden-output equivalence vs the clean run
+//!   serve [...]           reconstruction endpoint: bind a Unix socket,
+//!                         accept N framed ingest streams, attach each
+//!                         frame zero-copy, assert exactly-once +
+//!                         golden equivalence vs the in-process run
+//!   ingest [...]          ingest endpoint: connect to a serve socket
+//!                         and stream this shard's stripe of the
+//!                         seeded event stream as wire frames
 //!   doctor                environment + artifact checks
 //!
 //! Shared flags: --quick (small grids, short harness), --grid N,
@@ -58,6 +65,10 @@ struct Args {
     seed: Option<u64>,
     kill_device_at: Option<u64>,
     alloc_fail_every: Option<u64>,
+    socket: Option<String>,
+    procs: Option<usize>,
+    index: Option<usize>,
+    staging_layout: Option<String>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -96,6 +107,10 @@ fn parse_args() -> Result<Args> {
             "--alloc-fail-every" => {
                 args.alloc_fail_every = Some(val("--alloc-fail-every")?.parse()?)
             }
+            "--socket" => args.socket = Some(val("--socket")?),
+            "--procs" => args.procs = Some(val("--procs")?.parse()?),
+            "--index" => args.index = Some(val("--index")?.parse()?),
+            "--staging-layout" => args.staging_layout = Some(val("--staging-layout")?),
             "--particles" => {
                 args.particles = Some(
                     val("--particles")?
@@ -186,8 +201,91 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         Some("auto") | None => RoutePolicy::default(),
         Some(p) => bail!("unknown policy {p} (host|device|auto)"),
     };
+    cfg.staging_layout = staging_choice(args)?;
     let rep = run_pipeline(&cfg)?;
     println!("{}", rep.report());
+    Ok(())
+}
+
+/// Parse `--staging-layout` into the autotuner's [`LayoutChoice`].
+fn staging_choice(args: &Args) -> Result<Option<marionette::prelude::LayoutChoice>> {
+    match args.staging_layout.as_deref() {
+        None => Ok(None),
+        Some(name) => marionette::prelude::LayoutChoice::from_name(name)
+            .map(Some)
+            .ok_or_else(|| anyhow!("unknown staging layout {name} (aos|soavec|soablob|aosoa8)")),
+    }
+}
+
+/// The seeded workload both wire endpoints derive from the same flags —
+/// serve and ingest must agree on it exactly for the striping union and
+/// the golden comparison to line up.
+fn wire_workload(args: &Args) -> (EventConfig, usize, u64) {
+    let grid = args.grid.unwrap_or(24);
+    let events = args.events.unwrap_or(48);
+    let seed = args.seed.unwrap_or(0xA71A5);
+    (EventConfig::grid(grid, grid, 3), events, seed)
+}
+
+/// Reconstruction endpoint of the wire pair (DESIGN.md §11): accept
+/// `--procs` framed ingest streams on `--socket`, reconstruct with
+/// zero-copy frame attach, then fail loudly unless the run is
+/// exactly-once AND bit-identical to the in-process generator.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use marionette::coordinator::{golden_compare, serve_unix, ServeOpts};
+
+    let (event, events, seed) = wire_workload(args);
+    let socket = args.socket.clone().ok_or_else(|| anyhow!("serve requires --socket PATH"))?;
+    let procs = args.procs.unwrap_or(1).max(1);
+    let mut opts = ServeOpts::default();
+    if let Some(w) = args.workers.as_ref().and_then(|w| w.first()) {
+        opts.workers = (*w).max(1);
+    }
+    opts.staging = staging_choice(args)?;
+    println!(
+        "== serve: {procs} ingest proc(s) -> {socket}, {events} events of {}x{}, seed {seed} ==",
+        event.rows, event.cols
+    );
+    let report = serve_unix(std::path::Path::new(&socket), procs, &opts)?;
+    println!(
+        "received {} frames / {} bytes in {:?} ({:.1} ev/s, {:.2} MB/s, peak ring {})",
+        report.frames,
+        report.bytes,
+        report.wall,
+        report.events_per_sec(),
+        report.bytes_per_sec() / 1e6,
+        report.peak_ring_depth,
+    );
+    golden_compare(&report, &event, events, seed)?;
+    println!(
+        "golden equivalence OK: {events} events exactly-once, bit-identical to the \
+         in-process run, 0 poisoned / 0 quarantined"
+    );
+    Ok(())
+}
+
+/// Ingest endpoint of the wire pair: connect to the serve socket and
+/// stream this process's stripe (`event_id % --procs == --index`) of
+/// the seeded event stream as zero-copy frames.
+fn cmd_ingest(args: &Args) -> Result<()> {
+    use marionette::coordinator::{connect_unix, run_ingest, IngestOpts};
+
+    let (event, events, seed) = wire_workload(args);
+    let socket = args.socket.clone().ok_or_else(|| anyhow!("ingest requires --socket PATH"))?;
+    let shards = args.procs.unwrap_or(1).max(1);
+    let index = args.index.unwrap_or(0);
+    let mut stream = connect_unix(
+        std::path::Path::new(&socket),
+        std::time::Duration::from_secs(10),
+    )?;
+    let stats = run_ingest(
+        &mut stream,
+        &IngestOpts { event, n_events: events, seed, shards, index },
+    )?;
+    println!(
+        "ingest[{index}/{shards}]: sent {} frames / {} bytes to {socket}",
+        stats.frames, stats.bytes
+    );
     Ok(())
 }
 
@@ -615,13 +713,15 @@ fn run() -> Result<()> {
         "saturate" => cmd_saturate(&args),
         "autotune" => cmd_autotune(&args),
         "chaos" => cmd_chaos(&args),
+        "serve" => cmd_serve(&args),
+        "ingest" => cmd_ingest(&args),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!(
                 "repro <command> [flags]\n\
                  commands: demo | run-pipeline | fig1 | fig2 | zero-cost | \
                  transfers | ablation | bench-report | saturate | autotune | \
-                 chaos | doctor\n\
+                 chaos | serve | ingest | doctor\n\
                  flags: --quick --grid N --grids a,b,c --events N \
                  --particles a,b,c --workers a,b,c --dev-workers N \
                  --policy host|device|auto --no-device --csv NAME\n\
@@ -635,7 +735,16 @@ fn run() -> Result<()> {
                  bench_results/autotune_heatmap.csv)\n\
                  chaos: --seed S --kill-device-at K --alloc-fail-every N \
                  (seeded fault injection; asserts exactly-once delivery and \
-                 golden-output equivalence vs the clean run)"
+                 golden-output equivalence vs the clean run)\n\
+                 serve: --socket PATH --procs N [--events N --grid N --seed S \
+                 --workers W --staging-layout aos|soavec|soablob|aosoa8] \
+                 (accept N ingest streams, zero-copy reconstruct, assert \
+                 exactly-once + bit-identical golden equivalence)\n\
+                 ingest: --socket PATH --procs N --index I [--events N \
+                 --grid N --seed S] (stream stripe I of the seeded events \
+                 as wire frames)\n\
+                 run-pipeline also takes --staging-layout (route the \
+                 autotuner's recommendation into the live staging path)"
             );
             Ok(())
         }

@@ -428,10 +428,11 @@ macro_rules! marionette_collection {
             }
 
             /// Stage this collection into a reusable destination through
-            /// the cached plan, returning full execution stats. The
-            /// fluent spelling of [`Self::transfer_from`] (from the
-            /// source's point of view); both route through the same
-            /// cached plan and book identical stats.
+            /// the cached plan, returning full execution stats (bytes
+            /// moved, copy ops issued, rung). The ladder is resolved
+            /// once per (schema, layouts, contexts) tuple and reused by
+            /// every later copy; this is the single staging entry point
+            /// alongside [`Self::convert_to`] (the allocating spelling).
             pub fn stage_into<L2: $crate::marionette::layout::Layout>(
                 &self,
                 dst: &mut $Col<L2>,
@@ -441,39 +442,12 @@ macro_rules! marionette_collection {
                 plan.execute(&self.raw, &mut dst.raw)
             }
 
-            /// Copy from a collection of any other layout/context
-            /// through the cached `TransferPlan`: the ladder is
-            /// resolved once per (schema, layouts, contexts) tuple and
-            /// reused by every later copy.
-            ///
-            /// Deprecated spelling: prefer the fluent
-            /// [`Self::stage_into`] / [`Self::convert_to`] on the
-            /// source; this shim remains for compatibility and routes
-            /// through the identical cached plan (route-equivalence is
-            /// pinned by `transfer.rs` unit tests).
-            pub fn transfer_from<L2: $crate::marionette::layout::Layout>(
-                &mut self,
-                src: &$Col<L2>,
-            ) -> $crate::marionette::transfer::TransferPriority {
-                self.transfer_from_stats(src).priority
-            }
-
-            /// As [`Self::transfer_from`], returning full execution
-            /// stats (bytes moved, copy ops issued, rung). Deprecated
-            /// spelling of `src.stage_into(self)`.
-            pub fn transfer_from_stats<L2: $crate::marionette::layout::Layout>(
-                &mut self,
-                src: &$Col<L2>,
-            ) -> $crate::marionette::transfer::TransferStats {
-                src.stage_into(self)
-            }
-
             /// The cached transfer plan used when copying *from* a
             /// collection of layout `L2` into this collection's layout
             /// (compiled on first request, then shared). Typed
             /// collections of one declaration all share the memoised
             /// `Props::schema()` instance, so this resolves to exactly
-            /// the plan [`Self::transfer_from`] executes.
+            /// the plan `src.stage_into(self)` executes.
             pub fn transfer_plan_from<L2: $crate::marionette::layout::Layout>(
                 &self,
             ) -> ::std::sync::Arc<$crate::marionette::transfer::TransferPlan> {

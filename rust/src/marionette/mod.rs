@@ -48,6 +48,7 @@ pub mod schema;
 pub mod soavec;
 pub mod trace;
 pub mod transfer;
+pub mod wire;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
@@ -80,5 +81,9 @@ pub mod prelude {
         plan_for, prewarm_plan, register_specialized, transfer_faults_injected, BounceScratchStats,
         PlanCacheShardStats, PlanCacheStats, PlanHandle, PlanHandleStats, PlanOp, TransferPlan,
         TransferPriority, TransferStats, PLAN_CACHE_SHARDS,
+    };
+    pub use super::wire::{
+        crc32, encode_frame, schema_hash, AlignedBytes, Frame, FrameSource, FrameSourceMut,
+        WireError, WIRE_VERSION,
     };
 }

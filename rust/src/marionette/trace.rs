@@ -260,6 +260,17 @@ impl LayoutChoice {
             LayoutChoice::AoSoA8 => "aosoa8",
         }
     }
+
+    /// Inverse of [`LayoutChoice::as_str`] (CLI flag parsing).
+    pub fn from_name(s: &str) -> Option<LayoutChoice> {
+        Some(match s {
+            "aos" => LayoutChoice::AoS,
+            "soavec" => LayoutChoice::SoAVec,
+            "soablob" => LayoutChoice::SoABlob,
+            "aosoa8" => LayoutChoice::AoSoA8,
+            _ => return None,
+        })
+    }
 }
 
 /// Layout-selection policy (DESIGN.md §9): whole-record traversal wants

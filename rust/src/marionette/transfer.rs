@@ -1462,11 +1462,10 @@ mod tests {
 
     /// Route equivalence of the compatibility shims (API-redesign
     /// contract): the one-call [`copy_collection`] /
-    /// [`copy_collection_stats`] wrappers — and therefore the generated
-    /// `transfer_from` shims built on them — resolve to the *identical*
-    /// cached plan as the fluent direct-execute path, book
-    /// byte-for-byte identical [`TransferStats`], and register as plan
-    /// cache hits (never a recompilation).
+    /// [`copy_collection_stats`] wrappers resolve to the *identical*
+    /// cached plan as the fluent direct-execute path (`stage_into`),
+    /// book byte-for-byte identical [`TransferStats`], and register as
+    /// plan cache hits (never a recompilation).
     #[test]
     fn shims_route_through_identical_plans() {
         let src = build_src::<SoAVec>();

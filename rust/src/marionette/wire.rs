@@ -1,0 +1,837 @@
+//! Versioned, zero-copy wire format for Marionette collections
+//! (DESIGN.md §11).
+//!
+//! Marionette blobs are already schema-stamped, contiguous, and
+//! layout-described, so crossing a process boundary needs no
+//! per-element re-serialization: a frame is a small self-describing
+//! header followed by the coalesced per-(field, lane) planes the
+//! TransferPlan engine already computes. On receipt the buffer is
+//! *attached*, not parsed — [`FrameSource`] implements [`PlaneSource`]
+//! directly over the received bytes, so the PR 5 view machinery (and
+//! `check_attach`) reads sensor data straight out of the socket buffer
+//! with zero plane copies.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! off  size  field
+//!   0     4  magic        "MRN1" (0x314E524D)
+//!   4     4  version      WIRE_VERSION
+//!   8     4  crc32        IEEE CRC over bytes [16..total]
+//!  12     4  reserved     0
+//!  16     4  header_len   bytes 0..body start, 8-aligned
+//!  20     4  layout_code  source layout family (diagnostic only)
+//!  24     8  body_len     plane bytes
+//!  32     8  schema_hash  FNV-1a over the schema structure
+//!  40     8  frame_id     caller sequence / event id
+//!  48     4  num_tags     size-tag count
+//!  52     4  num_fields   field count
+//!  56   8*T  tag_lens     per-tag element counts
+//!   .  16*F  field table  {dtype u8, tag u8, pad u16, extent u32, offset u64}
+//!   .        zero pad to header_len
+//!  hl    bl  body         dense planes, each field 8-aligned;
+//!                         lane k of field f at offset[f] + k*len*size
+//! ```
+//!
+//! Compatibility rule: a frame attaches only to a schema whose
+//! structural hash ([`schema_hash`]: field names, dtypes, kinds,
+//! extents — the same relation as `Schema::same_structure`) equals the
+//! header's hash. Version skew is an error, never a silent reinterpret:
+//! readers reject any `version != WIRE_VERSION` with
+//! [`WireError::VersionSkew`].
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::interface::{PlaneSource, PlaneSourceMut};
+use super::pod::Dtype;
+use super::schema::{FieldKind, FieldMeta, Schema, TagId, MAX_TAGS};
+use crate::marionette::holder::PlaneView;
+
+/// Wire protocol version. Bump on any incompatible header/body change;
+/// readers hard-reject other versions (no cross-version decoding).
+pub const WIRE_VERSION: u32 = 1;
+
+/// Frame magic, "MRN1" read as little-endian u32.
+pub const WIRE_MAGIC: u32 = 0x314E_524D;
+
+/// Size of the fixed header prefix (through `num_fields`).
+pub const FIXED_HEADER: usize = 56;
+
+/// Typed wire failures. Every decode/attach error is one of these —
+/// a poisoned frame must never panic the reconstruction process (it is
+/// quarantined, mirroring the PR 9 retry/quarantine contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer (or stream) ended before a complete frame.
+    Truncated { need: usize, have: usize },
+    /// The first four bytes are not the frame magic.
+    BadMagic { got: u32 },
+    /// The frame was written by a different protocol version.
+    VersionSkew { got: u32, want: u32 },
+    /// The frame's schema hash does not match the receiver's schema.
+    SchemaMismatch { want: u64, got: u64 },
+    /// Body/header checksum mismatch (bit rot or mid-frame corruption).
+    Crc { want: u32, got: u32 },
+    /// Structurally invalid header (bad lengths, offsets, codes).
+    Malformed { what: String },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "wire: truncated frame (need {need} bytes, have {have})")
+            }
+            WireError::BadMagic { got } => {
+                write!(f, "wire: bad magic {got:#010x} (want {WIRE_MAGIC:#010x})")
+            }
+            WireError::VersionSkew { got, want } => {
+                write!(f, "wire: version skew (frame v{got}, reader v{want})")
+            }
+            WireError::SchemaMismatch { want, got } => {
+                write!(f, "wire: schema hash mismatch (want {want:#018x}, got {got:#018x})")
+            }
+            WireError::Crc { want, got } => {
+                write!(f, "wire: CRC mismatch (header {want:#010x}, computed {got:#010x})")
+            }
+            WireError::Malformed { what } => write!(f, "wire: malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE, reflected) — hand-rolled table, no external crates.
+// ---------------------------------------------------------------------
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = make_crc_table();
+
+/// IEEE CRC32 of `bytes` (the checksum the frame header carries).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Schema hash — FNV-1a over the structural relation `same_structure`
+// compares: per-field name, dtype, kind (with jagged group), extent.
+// ---------------------------------------------------------------------
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h = (*h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Structural hash of a schema. Two schemas hash equal iff (modulo
+/// collisions) `Schema::same_structure` would accept them — the wire
+/// compatibility rule is exactly the in-process attach rule.
+pub fn schema_hash(schema: &Schema) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, &(schema.num_fields() as u64).to_le_bytes());
+    for (_, field) in schema.fields() {
+        fnv(&mut h, field.name.as_bytes());
+        fnv(&mut h, &[0xFF, dtype_code(field.dtype)]);
+        let (kc, kj) = kind_code(field.kind);
+        fnv(&mut h, &[kc]);
+        fnv(&mut h, &kj.to_le_bytes());
+        fnv(&mut h, &field.extent.to_le_bytes());
+    }
+    h
+}
+
+fn kind_code(kind: FieldKind) -> (u8, u32) {
+    match kind {
+        FieldKind::PerItem => (0, 0),
+        FieldKind::JaggedPrefix(j) => (1, j),
+        FieldKind::JaggedValues(j) => (2, j),
+        FieldKind::Global => (3, 0),
+    }
+}
+
+/// Stable wire code for a dtype (declaration order; never reorder).
+pub fn dtype_code(d: Dtype) -> u8 {
+    match d {
+        Dtype::F32 => 0,
+        Dtype::F64 => 1,
+        Dtype::I8 => 2,
+        Dtype::U8 => 3,
+        Dtype::I16 => 4,
+        Dtype::U16 => 5,
+        Dtype::I32 => 6,
+        Dtype::U32 => 7,
+        Dtype::I64 => 8,
+        Dtype::U64 => 9,
+    }
+}
+
+/// Inverse of [`dtype_code`].
+pub fn dtype_from_code(c: u8) -> Option<Dtype> {
+    Some(match c {
+        0 => Dtype::F32,
+        1 => Dtype::F64,
+        2 => Dtype::I8,
+        3 => Dtype::U8,
+        4 => Dtype::I16,
+        5 => Dtype::U16,
+        6 => Dtype::I32,
+        7 => Dtype::U32,
+        8 => Dtype::I64,
+        9 => Dtype::U64,
+        _ => return None,
+    })
+}
+
+/// Diagnostic layout-family code stamped into the header (the body is
+/// always normalized dense planes regardless of the source layout).
+pub fn layout_code_for(source_name: &str) -> u32 {
+    match source_name {
+        "soa-vec" => 1,
+        "aos" => 2,
+        "soa-blob" => 3,
+        "aosoa" => 4,
+        _ => 0,
+    }
+}
+
+// ---------------------------------------------------------------------
+// 8-aligned byte buffer — frames must live in 8-aligned storage so the
+// typed planes inside the body can be read in place. `Vec<u8>` only
+// guarantees byte alignment; this wrapper is backed by `Vec<u64>`.
+// ---------------------------------------------------------------------
+
+/// An owned byte buffer whose base address is 8-aligned. Sockets read
+/// directly into it; [`Frame::decode`] takes it over without copying.
+pub struct AlignedBytes {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    /// A zeroed buffer of `len` bytes.
+    pub fn with_len(len: usize) -> AlignedBytes {
+        AlignedBytes { words: vec![0u64; len.div_ceil(8)], len }
+    }
+
+    /// Copy a plain slice into aligned storage (tests and re-framing).
+    pub fn from_slice(b: &[u8]) -> AlignedBytes {
+        let mut a = AlignedBytes::with_len(b.len());
+        a.as_mut_slice().copy_from_slice(b);
+        a
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: words owns at least len bytes of initialized storage.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        // SAFETY: as as_slice; exclusive borrow of self.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut u8, self.len) }
+    }
+}
+
+impl Clone for AlignedBytes {
+    fn clone(&self) -> AlignedBytes {
+        AlignedBytes { words: self.words.clone(), len: self.len }
+    }
+}
+
+impl fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "AlignedBytes({} bytes)", self.len)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Little-endian field helpers.
+// ---------------------------------------------------------------------
+
+fn put_u32(b: &mut [u8], off: usize, v: u32) {
+    b[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut [u8], off: usize, v: u64) {
+    b[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn get_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+fn align8(n: usize) -> usize {
+    (n + 7) & !7
+}
+
+/// Validate the fixed prefix and return the frame's total byte length.
+/// Transports use this to size the receive buffer before the body
+/// arrives; it checks everything checkable from the first
+/// [`FIXED_HEADER`] bytes (magic, version, length sanity).
+pub fn peek_total_len(head: &[u8]) -> Result<usize, WireError> {
+    if head.len() < FIXED_HEADER {
+        return Err(WireError::Truncated { need: FIXED_HEADER, have: head.len() });
+    }
+    let magic = get_u32(head, 0);
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic { got: magic });
+    }
+    let version = get_u32(head, 4);
+    if version != WIRE_VERSION {
+        return Err(WireError::VersionSkew { got: version, want: WIRE_VERSION });
+    }
+    let header_len = get_u32(head, 16) as usize;
+    let body_len = get_u64(head, 24) as usize;
+    let num_tags = get_u32(head, 48) as usize;
+    let num_fields = get_u32(head, 52) as usize;
+    if header_len % 8 != 0 || num_tags > MAX_TAGS {
+        return Err(WireError::Malformed {
+            what: format!("header_len {header_len} / num_tags {num_tags}"),
+        });
+    }
+    let table_end = FIXED_HEADER + num_tags * 8 + num_fields * 16;
+    if header_len < table_end {
+        return Err(WireError::Malformed {
+            what: format!("header_len {header_len} < table end {table_end}"),
+        });
+    }
+    header_len.checked_add(body_len).ok_or(WireError::Malformed {
+        what: "frame length overflow".to_string(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Encoding.
+// ---------------------------------------------------------------------
+
+/// Serialize any [`PlaneSource`] into a wire frame. The body is written
+/// as dense per-(field, lane) planes: one bulk copy per plane when the
+/// source's cached plane is already dense, a strided sweep otherwise —
+/// never a per-element re-serialization.
+pub fn encode_frame<S: PlaneSource + ?Sized>(src: &S, frame_id: u64) -> AlignedBytes {
+    let schema = src.schema().clone();
+    let num_tags = schema.num_tags();
+    let num_fields = schema.num_fields();
+
+    let mut tag_lens = vec![0u64; num_tags];
+    for (t, len) in tag_lens.iter_mut().enumerate() {
+        *len = src.tag_len(TagId(t as u32)) as u64;
+    }
+
+    // Body layout: fields in schema order, each 8-aligned; lanes of one
+    // field packed contiguously (lane stride = plane_len * elem size,
+    // which preserves element alignment since every dtype size divides 8).
+    let metas = schema.metas();
+    let mut offsets = vec![0u64; num_fields];
+    let mut body_len = 0usize;
+    for (i, meta) in metas.iter().enumerate() {
+        body_len = align8(body_len);
+        offsets[i] = body_len as u64;
+        let plane_len = tag_lens[meta.tag as usize] as usize;
+        body_len += meta.extent as usize * plane_len * meta.size as usize;
+    }
+    body_len = align8(body_len);
+
+    let header_len = align8(FIXED_HEADER + num_tags * 8 + num_fields * 16);
+    let total = header_len + body_len;
+    let mut out = AlignedBytes::with_len(total);
+    let layout_code = layout_code_for(src.source_name());
+    let hash = schema_hash(&schema);
+    {
+        let b = out.as_mut_slice();
+        put_u32(b, 0, WIRE_MAGIC);
+        put_u32(b, 4, WIRE_VERSION);
+        // crc at 8 patched last; reserved at 12 stays 0.
+        put_u32(b, 16, header_len as u32);
+        put_u32(b, 20, layout_code);
+        put_u64(b, 24, body_len as u64);
+        put_u64(b, 32, hash);
+        put_u64(b, 40, frame_id);
+        put_u32(b, 48, num_tags as u32);
+        put_u32(b, 52, num_fields as u32);
+        for (t, len) in tag_lens.iter().enumerate() {
+            put_u64(b, FIXED_HEADER + t * 8, *len);
+        }
+        let table = FIXED_HEADER + num_tags * 8;
+        for (i, meta) in metas.iter().enumerate() {
+            let e = table + i * 16;
+            let field = schema.field(meta.field_id());
+            b[e] = dtype_code(field.dtype);
+            b[e + 1] = meta.tag as u8;
+            // b[e+2..e+4] pad
+            put_u32(b, e + 4, meta.extent);
+            put_u64(b, e + 8, offsets[i]);
+        }
+    }
+
+    // Planes. Raw pointer writes into the body region.
+    for (i, meta) in metas.iter().enumerate() {
+        let plane_len = tag_lens[meta.tag as usize] as usize;
+        let esz = meta.size as usize;
+        if plane_len == 0 || esz == 0 {
+            continue;
+        }
+        for k in 0..meta.extent as usize {
+            let dst_off = header_len + offsets[i] as usize + k * plane_len * esz;
+            let b = out.as_mut_slice();
+            match src.plane(*meta, k) {
+                Some(p) if p.stride == esz => {
+                    // Already-coalesced plane: one bulk copy.
+                    // SAFETY: source guarantees plane_len elements; the
+                    // destination range was sized above.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            p.base,
+                            b.as_mut_ptr().add(dst_off),
+                            plane_len * esz,
+                        );
+                    }
+                }
+                Some(p) => {
+                    // Regular but strided (AoS records): gather sweep.
+                    for idx in 0..plane_len {
+                        // SAFETY: idx < plane_len, stride from the source.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                p.base.add(idx * p.stride),
+                                b.as_mut_ptr().add(dst_off + idx * esz),
+                                esz,
+                            );
+                        }
+                    }
+                }
+                None => {
+                    // Irregular layouts (AoSoA): per-element pointers.
+                    for idx in 0..plane_len {
+                        // SAFETY: idx < tag_len, k < extent.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                src.elem_ptr(*meta, idx, k),
+                                b.as_mut_ptr().add(dst_off + idx * esz),
+                                esz,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let c = crc32(&out.as_slice()[16..]);
+    put_u32(out.as_mut_slice(), 8, c);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Decoding.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct WireField {
+    dtype: Dtype,
+    tag: u8,
+    extent: u32,
+    offset: usize,
+}
+
+/// A validated received frame: owns the 8-aligned buffer, knows where
+/// every plane lives. Attach a typed view via [`Frame::source`] /
+/// [`Frame::source_mut`] — the planes are read (and calibrated) in
+/// place; the bytes are never copied out.
+pub struct Frame {
+    bytes: AlignedBytes,
+    header_len: usize,
+    frame_id: u64,
+    layout_code: u32,
+    schema_hash: u64,
+    tag_lens: [usize; MAX_TAGS],
+    num_tags: usize,
+    fields: Vec<WireField>,
+}
+
+impl Frame {
+    /// Validate and take over a received buffer. Checks, in order:
+    /// length, magic, version, header sanity, total length, CRC, and
+    /// the field table (offsets in bounds, dtype codes valid).
+    pub fn decode(bytes: AlignedBytes) -> Result<Frame, WireError> {
+        let total = peek_total_len(bytes.as_slice())?;
+        let have = bytes.len();
+        if have < total {
+            return Err(WireError::Truncated { need: total, have });
+        }
+        if have > total {
+            return Err(WireError::Malformed {
+                what: format!("{} trailing bytes after frame", have - total),
+            });
+        }
+        let b = bytes.as_slice();
+        let want_crc = get_u32(b, 8);
+        let got_crc = crc32(&b[16..total]);
+        if want_crc != got_crc {
+            return Err(WireError::Crc { want: want_crc, got: got_crc });
+        }
+
+        let header_len = get_u32(b, 16) as usize;
+        let layout_code = get_u32(b, 20);
+        let body_len = get_u64(b, 24) as usize;
+        let schema_hash = get_u64(b, 32);
+        let frame_id = get_u64(b, 40);
+        let num_tags = get_u32(b, 48) as usize;
+        let num_fields = get_u32(b, 52) as usize;
+
+        let mut tag_lens = [0usize; MAX_TAGS];
+        for (t, len) in tag_lens.iter_mut().enumerate().take(num_tags) {
+            *len = get_u64(b, FIXED_HEADER + t * 8) as usize;
+        }
+
+        let table = FIXED_HEADER + num_tags * 8;
+        let mut fields = Vec::with_capacity(num_fields);
+        for i in 0..num_fields {
+            let e = table + i * 16;
+            let dtype = dtype_from_code(b[e]).ok_or_else(|| WireError::Malformed {
+                what: format!("field {i}: unknown dtype code {}", b[e]),
+            })?;
+            let tag = b[e + 1];
+            let extent = get_u32(b, e + 4);
+            let offset = get_u64(b, e + 8) as usize;
+            if tag as usize >= num_tags {
+                return Err(WireError::Malformed {
+                    what: format!("field {i}: tag {tag} out of range"),
+                });
+            }
+            let plane_len = tag_lens[tag as usize];
+            let span = (extent as usize)
+                .checked_mul(plane_len)
+                .and_then(|n| n.checked_mul(dtype.size()))
+                .ok_or_else(|| WireError::Malformed {
+                    what: format!("field {i}: plane size overflow"),
+                })?;
+            if offset % dtype.align() != 0 || offset.saturating_add(span) > body_len {
+                return Err(WireError::Malformed {
+                    what: format!("field {i}: plane [{offset}, +{span}) outside body {body_len}"),
+                });
+            }
+            fields.push(WireField { dtype, tag, extent, offset });
+        }
+
+        Ok(Frame {
+            bytes,
+            header_len,
+            frame_id,
+            layout_code,
+            schema_hash,
+            tag_lens,
+            num_tags,
+            fields,
+        })
+    }
+
+    /// Convenience for tests: copy a plain slice into aligned storage
+    /// and decode it.
+    pub fn decode_slice(b: &[u8]) -> Result<Frame, WireError> {
+        Frame::decode(AlignedBytes::from_slice(b))
+    }
+
+    pub fn frame_id(&self) -> u64 {
+        self.frame_id
+    }
+
+    pub fn schema_hash(&self) -> u64 {
+        self.schema_hash
+    }
+
+    pub fn layout_code(&self) -> u32 {
+        self.layout_code
+    }
+
+    /// Item count (the ITEMS tag length).
+    pub fn items(&self) -> usize {
+        self.tag_lens[TagId::ITEMS.index()]
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        self.bytes.as_slice()
+    }
+
+    pub fn into_bytes(self) -> AlignedBytes {
+        self.bytes
+    }
+
+    fn check_schema(&self, schema: &Schema) -> Result<(), WireError> {
+        let want = schema_hash(schema);
+        if want != self.schema_hash {
+            return Err(WireError::SchemaMismatch { want, got: self.schema_hash });
+        }
+        // The hash already pins the structure; these defensive checks
+        // catch a crafted frame whose table disagrees with its hash.
+        if schema.num_fields() != self.fields.len() || schema.num_tags() != self.num_tags {
+            return Err(WireError::Malformed {
+                what: "field/tag table disagrees with schema hash".to_string(),
+            });
+        }
+        for (meta, wf) in schema.metas().iter().zip(&self.fields) {
+            let field = schema.field(meta.field_id());
+            if field.dtype != wf.dtype || meta.extent != wf.extent || meta.tag != wf.tag as u32 {
+                return Err(WireError::Malformed {
+                    what: format!("field table disagrees with schema at {:?}", field.name),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Attach a read-only [`PlaneSource`] over the frame body. Fails
+    /// with [`WireError::SchemaMismatch`] unless the receiver's schema
+    /// hashes to the frame's hash (the wire twin of `check_attach`).
+    pub fn source(&self, schema: &Arc<Schema>) -> Result<FrameSource<'_>, WireError> {
+        self.check_schema(schema)?;
+        Ok(FrameSource { frame: self, schema: schema.clone() })
+    }
+
+    /// Attach a mutable source: in-place compute (e.g. calibration)
+    /// writes straight into the received buffer.
+    pub fn source_mut(&mut self, schema: &Arc<Schema>) -> Result<FrameSourceMut<'_>, WireError> {
+        self.check_schema(schema)?;
+        let schema = schema.clone();
+        Ok(FrameSourceMut { frame: self, schema })
+    }
+
+    #[inline(always)]
+    fn plane_base(&self, meta: FieldMeta, k: usize) -> *const u8 {
+        let wf = &self.fields[meta.index as usize];
+        let plane_len = self.tag_lens[wf.tag as usize];
+        let off = self.header_len + wf.offset + k * plane_len * meta.size as usize;
+        // SAFETY: decode bounds-checked every field's plane span.
+        unsafe { self.bytes.as_slice().as_ptr().add(off) }
+    }
+}
+
+/// Read-only [`PlaneSource`] over a received frame — the zero-copy
+/// attach point: `plane()` hands out views whose base pointers lie
+/// inside the frame's own buffer.
+pub struct FrameSource<'a> {
+    frame: &'a Frame,
+    schema: Arc<Schema>,
+}
+
+impl PlaneSource for FrameSource<'_> {
+    fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    fn tag_len(&self, tag: TagId) -> usize {
+        self.frame.tag_lens[tag.index()]
+    }
+
+    fn source_name(&self) -> &'static str {
+        "wire-frame"
+    }
+
+    unsafe fn elem_ptr(&self, meta: FieldMeta, i: usize, k: usize) -> *const u8 {
+        self.frame.plane_base(meta, k).add(i * meta.size as usize)
+    }
+
+    fn plane(&self, meta: FieldMeta, k: usize) -> Option<PlaneView> {
+        Some(PlaneView {
+            base: self.frame.plane_base(meta, k),
+            stride: meta.size as usize,
+            len: self.frame.tag_lens[meta.tag as usize],
+        })
+    }
+}
+
+/// Mutable twin of [`FrameSource`]: calibration and other in-place
+/// passes write their results directly into the received bytes.
+pub struct FrameSourceMut<'a> {
+    frame: &'a mut Frame,
+    schema: Arc<Schema>,
+}
+
+impl PlaneSource for FrameSourceMut<'_> {
+    fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    fn tag_len(&self, tag: TagId) -> usize {
+        self.frame.tag_lens[tag.index()]
+    }
+
+    fn source_name(&self) -> &'static str {
+        "wire-frame"
+    }
+
+    unsafe fn elem_ptr(&self, meta: FieldMeta, i: usize, k: usize) -> *const u8 {
+        self.frame.plane_base(meta, k).add(i * meta.size as usize)
+    }
+
+    fn plane(&self, meta: FieldMeta, k: usize) -> Option<PlaneView> {
+        Some(PlaneView {
+            base: self.frame.plane_base(meta, k),
+            stride: meta.size as usize,
+            len: self.frame.tag_lens[meta.tag as usize],
+        })
+    }
+}
+
+impl PlaneSourceMut for FrameSourceMut<'_> {
+    unsafe fn elem_ptr_mut(&mut self, meta: FieldMeta, i: usize, k: usize) -> *mut u8 {
+        (self.frame.plane_base(meta, k) as *mut u8).add(i * meta.size as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marionette::interface::SlicePlanes;
+    use crate::marionette::schema::Schema;
+
+    fn toy_schema() -> Arc<Schema> {
+        Arc::new(
+            Schema::builder("toy")
+                .per_item::<f32>("energy")
+                .per_item::<i32>("counts")
+                .global::<u64>("event_id")
+                .build(),
+        )
+    }
+
+    fn toy_frame(id: u64) -> AlignedBytes {
+        let schema = toy_schema();
+        let energy = [1.5f32, 2.5, 3.5];
+        let counts = [10i32, 20, 30];
+        let src = SlicePlanes::new(schema, 3)
+            .bind("energy", &energy)
+            .unwrap()
+            .bind("counts", &counts)
+            .unwrap()
+            .set_global("event_id", 77u64)
+            .unwrap();
+        encode_frame(&src, id)
+    }
+
+    #[test]
+    fn round_trips_through_a_slice_source() {
+        let bytes = toy_frame(9);
+        let frame = Frame::decode(bytes).unwrap();
+        assert_eq!(frame.frame_id(), 9);
+        assert_eq!(frame.items(), 3);
+        let schema = toy_schema();
+        let fs = frame.source(&schema).unwrap();
+        let m_energy = schema.meta(schema.field_by_name("energy").unwrap());
+        let m_counts = schema.meta(schema.field_by_name("counts").unwrap());
+        let m_ev = schema.meta(schema.field_by_name("event_id").unwrap());
+        unsafe {
+            assert_eq!(crate::marionette::interface::read::<f32, _>(&fs, m_energy, 1, 0), 2.5);
+            assert_eq!(crate::marionette::interface::read::<i32, _>(&fs, m_counts, 2, 0), 30);
+            assert_eq!(crate::marionette::interface::read::<u64, _>(&fs, m_ev, 0, 0), 77);
+        }
+        // Zero-copy contract: the plane points into the frame's buffer.
+        let p = fs.plane(m_energy, 0).unwrap();
+        let range = frame.as_bytes().as_ptr_range();
+        assert!(p.base >= range.start && p.base < range.end);
+    }
+
+    #[test]
+    fn crc_catches_body_corruption() {
+        let mut bytes = toy_frame(1);
+        let n = bytes.len();
+        bytes.as_mut_slice()[n - 1] ^= 0x40;
+        match Frame::decode(bytes) {
+            Err(WireError::Crc { .. }) => {}
+            r => panic!("expected Crc, got {:?}", r.err()),
+        }
+    }
+
+    #[test]
+    fn version_skew_and_magic_rejected() {
+        let mut bytes = toy_frame(1);
+        put_u32(bytes.as_mut_slice(), 4, WIRE_VERSION + 1);
+        match Frame::decode(bytes) {
+            Err(WireError::VersionSkew { got, want }) => {
+                assert_eq!(got, WIRE_VERSION + 1);
+                assert_eq!(want, WIRE_VERSION);
+            }
+            r => panic!("expected VersionSkew, got {:?}", r.err()),
+        }
+        let mut bytes = toy_frame(1);
+        bytes.as_mut_slice()[0] = b'X';
+        match Frame::decode(bytes) {
+            Err(WireError::BadMagic { .. }) => {}
+            r => panic!("expected BadMagic, got {:?}", r.err()),
+        }
+    }
+
+    #[test]
+    fn schema_hash_pins_structure() {
+        let a = toy_schema();
+        let b = toy_schema();
+        assert_eq!(schema_hash(&a), schema_hash(&b));
+        let c = Arc::new(
+            Schema::builder("toy")
+                .per_item::<f64>("energy") // different dtype
+                .per_item::<i32>("counts")
+                .global::<u64>("event_id")
+                .build(),
+        );
+        assert_ne!(schema_hash(&a), schema_hash(&c));
+
+        let frame = Frame::decode(toy_frame(1)).unwrap();
+        match frame.source(&c) {
+            Err(WireError::SchemaMismatch { .. }) => {}
+            r => panic!("expected SchemaMismatch, got {:?}", r.err().map(|e| e.to_string())),
+        }
+    }
+
+    #[test]
+    fn truncation_detected_at_both_layers() {
+        let bytes = toy_frame(1);
+        let s = bytes.as_slice();
+        match Frame::decode_slice(&s[..10]) {
+            Err(WireError::Truncated { .. }) => {}
+            r => panic!("expected Truncated, got {:?}", r.err()),
+        }
+        match Frame::decode_slice(&s[..s.len() - 4]) {
+            Err(WireError::Truncated { need, have }) => {
+                assert_eq!(need, s.len());
+                assert_eq!(have, s.len() - 4);
+            }
+            r => panic!("expected Truncated, got {:?}", r.err()),
+        }
+    }
+}

@@ -16,8 +16,10 @@ pub mod client;
 pub mod devmem;
 pub mod executor;
 pub mod fault;
+pub mod transport;
 
 pub use artifact::{ArtifactRecord, Manifest, TensorSpec};
 pub use devmem::{downloaded_planes, DeviceEvent, DeviceEventPool, ResidentEvent};
 pub use executor::{Engine, ExecTiming, ParticleStageOut, SensorStageOut};
 pub use fault::{FaultFuse, FaultyEngine, FullEventRunner};
+pub use transport::{write_frame, FrameReader, ReassemblyRing, TransportError, MAX_FRAME_BYTES};

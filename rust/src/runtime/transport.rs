@@ -1,0 +1,295 @@
+//! Frame transport over byte streams (Unix sockets, pipes) plus the
+//! bounded reassembly ring the multi-process ingestion mode drains
+//! (DESIGN.md §11).
+//!
+//! Frames are self-delimiting — the fixed header carries the total
+//! length — so the stream protocol is simply back-to-back frames.
+//! [`FrameReader`] reads the fixed prefix, validates what is checkable
+//! early (magic, version, length sanity, a hard size cap against
+//! hostile headers), then reads the body **directly into 8-aligned
+//! storage** ([`AlignedBytes`]): the socket read is the only copy the
+//! plane bytes ever see on the receive side.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::sync::{Condvar, Mutex};
+
+use crate::marionette::wire::{self, AlignedBytes, WireError, FIXED_HEADER};
+
+/// Hard cap on a single frame (defense against corrupt/hostile length
+/// fields driving unbounded allocation).
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Transport failures: stream I/O or typed wire errors.
+#[derive(Debug)]
+pub enum TransportError {
+    Io(io::Error),
+    Wire(WireError),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "transport: io: {e}"),
+            TransportError::Wire(e) => write!(f, "transport: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> TransportError {
+        TransportError::Io(e)
+    }
+}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> TransportError {
+        TransportError::Wire(e)
+    }
+}
+
+/// Send one encoded frame (the frame is self-delimiting; no extra
+/// length prefix is needed).
+pub fn write_frame<W: Write + ?Sized>(w: &mut W, frame_bytes: &[u8]) -> io::Result<()> {
+    w.write_all(frame_bytes)
+}
+
+/// Reads back-to-back frames from a byte stream into aligned buffers.
+pub struct FrameReader<R: Read> {
+    inner: R,
+    /// Total frame bytes read so far (reported by the ingest drivers).
+    bytes: usize,
+}
+
+enum HeadRead {
+    Eof,
+    Partial(usize),
+    Full,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R) -> FrameReader<R> {
+        FrameReader { inner, bytes: 0 }
+    }
+
+    pub fn bytes_read(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn into_inner(self) -> R {
+        self.inner
+    }
+
+    fn read_head(&mut self, head: &mut [u8; FIXED_HEADER]) -> io::Result<HeadRead> {
+        let mut got = 0;
+        while got < head.len() {
+            match self.inner.read(&mut head[got..]) {
+                Ok(0) if got == 0 => return Ok(HeadRead::Eof),
+                Ok(0) => return Ok(HeadRead::Partial(got)),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(HeadRead::Full)
+    }
+
+    /// Read the next frame. `Ok(None)` on a clean end of stream (the
+    /// peer closed between frames); a stream ending mid-frame is a
+    /// typed [`WireError::Truncated`].
+    pub fn read_frame(&mut self) -> Result<Option<AlignedBytes>, TransportError> {
+        let mut head = [0u8; FIXED_HEADER];
+        match self.read_head(&mut head)? {
+            HeadRead::Eof => return Ok(None),
+            HeadRead::Partial(got) => {
+                return Err(WireError::Truncated { need: FIXED_HEADER, have: got }.into());
+            }
+            HeadRead::Full => {}
+        }
+        let total = wire::peek_total_len(&head)?;
+        if total > MAX_FRAME_BYTES {
+            return Err(WireError::Malformed {
+                what: format!("frame of {total} bytes exceeds cap {MAX_FRAME_BYTES}"),
+            }
+            .into());
+        }
+        let mut buf = AlignedBytes::with_len(total);
+        buf.as_mut_slice()[..FIXED_HEADER].copy_from_slice(&head);
+        let mut got = FIXED_HEADER;
+        {
+            let body = &mut buf.as_mut_slice()[FIXED_HEADER..];
+            let mut off = 0;
+            while off < body.len() {
+                match self.inner.read(&mut body[off..]) {
+                    Ok(0) => {
+                        return Err(WireError::Truncated { need: total, have: got + off }.into());
+                    }
+                    Ok(n) => off += n,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            got += off;
+        }
+        self.bytes += got;
+        Ok(Some(buf))
+    }
+}
+
+/// Bounded, blocking MPMC queue: N reader threads push received
+/// buffers, reconstruction workers pop them. A full ring blocks the
+/// pushers — that is the backpressure that propagates through the
+/// socket to the ingest processes (their writes stall once the kernel
+/// buffer fills).
+pub struct ReassemblyRing<T> {
+    state: Mutex<RingState<T>>,
+    push_cv: Condvar,
+    pop_cv: Condvar,
+    cap: usize,
+}
+
+struct RingState<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> ReassemblyRing<T> {
+    pub fn new(cap: usize) -> ReassemblyRing<T> {
+        ReassemblyRing {
+            state: Mutex::new(RingState { q: VecDeque::new(), closed: false }),
+            push_cv: Condvar::new(),
+            pop_cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    /// Blocking push; returns `false` (dropping the item) if the ring
+    /// was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.state.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.push_cv.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.pop_cv.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once the ring is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.push_cv.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.pop_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Close the ring: pending items still drain, further pushes fail,
+    /// blocked poppers wake with `None` once empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.push_cv.notify_all();
+        self.pop_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ring_bounds_and_drains() {
+        let ring = Arc::new(ReassemblyRing::<usize>::new(2));
+        assert!(ring.push(1));
+        assert!(ring.push(2));
+        assert_eq!(ring.depth(), 2);
+        let r2 = ring.clone();
+        let t = std::thread::spawn(move || r2.push(3)); // blocks until a pop
+        assert_eq!(ring.pop(), Some(1));
+        t.join().unwrap();
+        ring.close();
+        assert_eq!(ring.pop(), Some(2));
+        assert_eq!(ring.pop(), Some(3));
+        assert_eq!(ring.pop(), None);
+        assert!(!ring.push(9), "push after close must fail");
+    }
+
+    #[test]
+    fn reader_round_trips_frames_over_a_pipe() {
+        use crate::marionette::schema::Schema;
+        use crate::marionette::wire::{encode_frame, Frame};
+        use std::os::unix::net::UnixStream;
+
+        let schema = Arc::new(Schema::builder("t").per_item::<u32>("x").build());
+        let xs = [5u32, 6, 7];
+        let src = crate::marionette::interface::SlicePlanes::new(schema.clone(), 3)
+            .bind("x", &xs)
+            .unwrap();
+        let f1 = encode_frame(&src, 1);
+        let f2 = encode_frame(&src, 2);
+
+        let (mut a, b) = UnixStream::pair().unwrap();
+        let writer = std::thread::spawn(move || {
+            write_frame(&mut a, f1.as_slice()).unwrap();
+            write_frame(&mut a, f2.as_slice()).unwrap();
+            // a drops: clean EOF.
+        });
+        let mut rd = FrameReader::new(b);
+        let got1 = Frame::decode(rd.read_frame().unwrap().unwrap()).unwrap();
+        let got2 = Frame::decode(rd.read_frame().unwrap().unwrap()).unwrap();
+        assert!(rd.read_frame().unwrap().is_none(), "clean EOF expected");
+        writer.join().unwrap();
+        assert_eq!(got1.frame_id(), 1);
+        assert_eq!(got2.frame_id(), 2);
+        assert_eq!(got2.items(), 3);
+    }
+
+    #[test]
+    fn mid_frame_eof_is_truncation() {
+        use crate::marionette::schema::Schema;
+        use crate::marionette::wire::encode_frame;
+        use std::os::unix::net::UnixStream;
+
+        let schema = Arc::new(Schema::builder("t").per_item::<u32>("x").build());
+        let xs = [1u32; 16];
+        let src = crate::marionette::interface::SlicePlanes::new(schema.clone(), 16)
+            .bind("x", &xs)
+            .unwrap();
+        let f = encode_frame(&src, 7);
+
+        let (mut a, b) = UnixStream::pair().unwrap();
+        let half = f.len() / 2;
+        let writer = std::thread::spawn(move || {
+            a.write_all(&f.as_slice()[..half]).unwrap();
+        });
+        let mut rd = FrameReader::new(b);
+        match rd.read_frame() {
+            Err(TransportError::Wire(WireError::Truncated { .. })) => {}
+            r => panic!("expected Truncated, got {:?}", r.map(|o| o.map(|b| b.len()))),
+        }
+        writer.join().unwrap();
+    }
+}

@@ -66,28 +66,57 @@ impl Value {
     /// `get` that errors with the key name (for manifest parsing).
     pub fn req(&self, key: &str) -> Result<&Value, JsonError> {
         self.get(key)
-            .ok_or_else(|| JsonError(format!("missing key {key:?}")))
+            .ok_or_else(|| JsonError::MissingKey(key.to_string()))
     }
 }
 
-#[derive(Debug)]
-pub struct JsonError(pub String);
+/// Typed parse failure. Every malformed input — truncated, garbage, or
+/// hostile (deep nesting, lone surrogates) — maps to one of these; the
+/// parser never panics and never overflows the stack.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JsonError {
+    /// Input ended before the value did.
+    Truncated { at: usize, what: &'static str },
+    /// A byte that cannot continue the expected production.
+    Unexpected { at: usize, what: &'static str },
+    /// Syntactically placed but unrepresentable content (bad escape,
+    /// bad codepoint, unparseable number, nesting past the depth cap).
+    Invalid { at: usize, what: &'static str },
+    /// [`Value::req`]: a required object key was absent.
+    MissingKey(String),
+}
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error: {}", self.0)
+        match self {
+            JsonError::Truncated { at, what } => {
+                write!(f, "json error: truncated input ({what}) at byte {at}")
+            }
+            JsonError::Unexpected { at, what } => {
+                write!(f, "json error: {what} at byte {at}")
+            }
+            JsonError::Invalid { at, what } => {
+                write!(f, "json error: {what} at byte {at}")
+            }
+            JsonError::MissingKey(key) => write!(f, "json error: missing key {key:?}"),
+        }
     }
 }
 
 impl std::error::Error for JsonError {}
 
+/// Nesting cap: recursive-descent depth is bounded so adversarial
+/// `[[[[...` input returns [`JsonError::Invalid`] instead of blowing
+/// the stack. 128 is far beyond any manifest this crate reads.
+const MAX_DEPTH: usize = 128;
+
 pub fn parse(src: &str) -> Result<Value, JsonError> {
-    let mut p = Parser { b: src.as_bytes(), i: 0 };
+    let mut p = Parser { b: src.as_bytes(), i: 0, depth: 0 };
     p.ws();
     let v = p.value()?;
     p.ws();
     if p.i != p.b.len() {
-        return Err(p.err("trailing characters"));
+        return Err(p.unexpected("trailing characters"));
     }
     Ok(v)
 }
@@ -95,11 +124,20 @@ pub fn parse(src: &str) -> Result<Value, JsonError> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError(format!("{msg} at byte {}", self.i))
+    fn truncated(&self, what: &'static str) -> JsonError {
+        JsonError::Truncated { at: self.i, what }
+    }
+
+    fn unexpected(&self, what: &'static str) -> JsonError {
+        JsonError::Unexpected { at: self.i, what }
+    }
+
+    fn invalid(&self, what: &'static str) -> JsonError {
+        JsonError::Invalid { at: self.i, what }
     }
 
     fn ws(&mut self) {
@@ -112,12 +150,14 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected {:?}", c as char)))
+    fn eat(&mut self, c: u8, what: &'static str) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(got) if got == c => {
+                self.i += 1;
+                Ok(())
+            }
+            Some(_) => Err(self.unexpected(what)),
+            None => Err(self.truncated(what)),
         }
     }
 
@@ -126,12 +166,16 @@ impl<'a> Parser<'a> {
             self.i += s.len();
             Ok(v)
         } else {
-            Err(self.err("invalid literal"))
+            Err(self.unexpected("invalid literal"))
         }
     }
 
     fn value(&mut self) -> Result<Value, JsonError> {
-        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.invalid("nesting deeper than the 128-level cap"));
+        }
+        self.depth += 1;
+        let v = match self.peek().ok_or_else(|| self.truncated("value expected"))? {
             b'n' => self.lit("null", Value::Null),
             b't' => self.lit("true", Value::Bool(true)),
             b'f' => self.lit("false", Value::Bool(false)),
@@ -139,20 +183,35 @@ impl<'a> Parser<'a> {
             b'[' => self.array(),
             b'{' => self.object(),
             b'-' | b'0'..=b'9' => self.number(),
-            _ => Err(self.err("unexpected character")),
+            _ => Err(self.unexpected("unexpected character")),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    /// Four hex digits of a `\u` escape; bounds-checked so a string
+    /// truncated mid-escape errors instead of slicing out of range.
+    fn hex4(&mut self, what: &'static str) -> Result<u32, JsonError> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.truncated(what));
         }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| self.invalid(what))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.invalid(what))?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
+        self.eat(b'"', "expected '\"'")?;
         let mut out = String::new();
         loop {
-            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            let c = self.peek().ok_or_else(|| self.truncated("unterminated string"))?;
             self.i += 1;
             match c {
                 b'"' => return Ok(out),
                 b'\\' => {
-                    let e = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    let e = self.peek().ok_or_else(|| self.truncated("bad escape"))?;
                     self.i += 1;
                     match e {
                         b'"' => out.push('"'),
@@ -164,36 +223,29 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            self.i += 4;
+                            let cp = self.hex4("bad \\u escape")?;
                             // Surrogate pairs: JSON encodes astral chars
                             // as two \u escapes.
                             let ch = if (0xD800..0xDC00).contains(&cp) {
                                 if !self.b[self.i..].starts_with(b"\\u") {
-                                    return Err(self.err("lone surrogate"));
+                                    return Err(self.invalid("lone surrogate"));
                                 }
                                 self.i += 2;
-                                let hex2 =
-                                    std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                        .map_err(|_| self.err("bad surrogate"))?;
-                                let lo = u32::from_str_radix(hex2, 16)
-                                    .map_err(|_| self.err("bad surrogate"))?;
-                                self.i += 4;
+                                let lo = self.hex4("bad surrogate")?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.invalid("lone surrogate"));
+                                }
                                 let c =
                                     0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                                char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?
+                                char::from_u32(c)
+                                    .ok_or_else(|| self.invalid("bad codepoint"))?
                             } else {
-                                char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?
+                                char::from_u32(cp)
+                                    .ok_or_else(|| self.invalid("bad codepoint"))?
                             };
                             out.push(ch);
                         }
-                        _ => return Err(self.err("unknown escape")),
+                        _ => return Err(self.invalid("unknown escape")),
                     }
                 }
                 _ => {
@@ -204,7 +256,7 @@ impl<'a> Parser<'a> {
                         end += 1;
                     }
                     let s = std::str::from_utf8(&self.b[start..end])
-                        .map_err(|_| self.err("invalid utf8"))?;
+                        .map_err(|_| self.invalid("invalid utf8"))?;
                     out.push_str(s);
                     self.i = end;
                 }
@@ -238,11 +290,11 @@ impl<'a> Parser<'a> {
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         s.parse::<f64>()
             .map(Value::Num)
-            .map_err(|_| self.err("invalid number"))
+            .map_err(|_| self.invalid("invalid number"))
     }
 
     fn array(&mut self) -> Result<Value, JsonError> {
-        self.eat(b'[')?;
+        self.eat(b'[', "expected '['")?;
         let mut out = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -259,13 +311,14 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Value::Arr(out));
                 }
-                _ => return Err(self.err("expected , or ]")),
+                Some(_) => return Err(self.unexpected("expected , or ]")),
+                None => return Err(self.truncated("expected , or ]")),
             }
         }
     }
 
     fn object(&mut self) -> Result<Value, JsonError> {
-        self.eat(b'{')?;
+        self.eat(b'{', "expected '{'")?;
         let mut out = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -276,7 +329,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let k = self.string()?;
             self.ws();
-            self.eat(b':')?;
+            self.eat(b':', "expected ':'")?;
             self.ws();
             let v = self.value()?;
             out.insert(k, v);
@@ -287,7 +340,8 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Value::Obj(out));
                 }
-                _ => return Err(self.err("expected , or }")),
+                Some(_) => return Err(self.unexpected("expected , or }")),
+                None => return Err(self.truncated("expected , or }")),
             }
         }
     }
@@ -359,6 +413,64 @@ mod tests {
         assert!(parse("nul").is_err());
         assert!(parse("\"unterminated").is_err());
         assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn typed_errors_carry_positions() {
+        assert!(matches!(parse(""), Err(JsonError::Truncated { .. })));
+        assert!(matches!(parse("[1, 2"), Err(JsonError::Truncated { .. })));
+        assert!(matches!(parse("[1 2]"), Err(JsonError::Unexpected { .. })));
+        assert!(matches!(parse(r#""\ud800\u12"#), Err(JsonError::Truncated { .. })));
+        assert!(matches!(parse(r#""\ud800x""#), Err(JsonError::Invalid { .. })));
+        assert!(matches!(parse(r#""\ud800A""#), Err(JsonError::Invalid { .. })));
+        assert!(matches!(
+            parse(r#"{"a": true"#),
+            Err(JsonError::Truncated { .. })
+        ));
+        assert!(matches!(
+            Value::Null.req("k"),
+            Err(JsonError::MissingKey(_))
+        ));
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        let deep: String = "[".repeat(4096);
+        assert!(matches!(parse(&deep), Err(JsonError::Invalid { .. })));
+        let mut ok = "[".repeat(100);
+        ok.push('1');
+        ok.push_str(&"]".repeat(100));
+        assert!(parse(&ok).is_ok());
+    }
+
+    /// Fuzz-style property: for any truncation or byte mutation of a
+    /// valid document, `parse` returns a typed error or a value — it
+    /// must never panic (the harness would abort the test process).
+    #[test]
+    fn fuzzed_corruptions_never_panic() {
+        use crate::util::rng::Rng;
+        let valid = r#"{"version": 1, "xs": [1, -2.5e3, true, null,
+            "aA😀\n", {"k": [{}, []]}], "s": "héllo"}"#;
+        // Every prefix must fail cleanly (truncated mid-token included).
+        for cut in 0..valid.len() {
+            if !valid.is_char_boundary(cut) {
+                continue;
+            }
+            let _ = parse(&valid[..cut]);
+        }
+        // Seeded random single-byte mutations, re-checked as UTF-8 so
+        // the input stays a &str (parse's contract).
+        let mut rng = Rng::seed_from_u64(0x1A7E57);
+        let mut hits = 0;
+        while hits < 500 {
+            let mut bytes = valid.as_bytes().to_vec();
+            let at = rng.range_usize(0, bytes.len());
+            bytes[at] = rng.next_u64() as u8;
+            if let Ok(s) = std::str::from_utf8(&bytes) {
+                let _ = parse(s);
+                hits += 1;
+            }
+        }
     }
 
     #[test]

@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use marionette::bench_support::report::{
     self, BenchReport, ReportOpts, REQUIRED_SERIES, SERIES_ADAPTIVE, SERIES_ADAPTIVE_P99,
-    SERIES_DEGRADED, SERIES_PIPELINE, SERIES_PLAN_CACHE, SERIES_SATURATION,
-    SERIES_SATURATION_P99, SERIES_TRANSFER, SERIES_VIEW_RATIO,
+    SERIES_DEGRADED, SERIES_INGEST, SERIES_PIPELINE, SERIES_PLAN_CACHE, SERIES_SATURATION,
+    SERIES_SATURATION_P99, SERIES_TRANSFER, SERIES_VIEW_RATIO, SERIES_WIRE,
 };
 
 fn baseline_path() -> PathBuf {
@@ -45,6 +45,8 @@ fn bench_json_schema_round_trips() {
     assert_eq!(parsed.series(SERIES_ADAPTIVE).unwrap().unit, "events_per_sec");
     assert_eq!(parsed.series(SERIES_ADAPTIVE_P99).unwrap().unit, "microseconds");
     assert_eq!(parsed.series(SERIES_DEGRADED).unwrap().unit, "events_per_sec");
+    assert_eq!(parsed.series(SERIES_WIRE).unwrap().unit, "bytes_per_sec");
+    assert_eq!(parsed.series(SERIES_INGEST).unwrap().unit, "events_per_sec");
     // The p99 tail series are informational — they must never hard-gate.
     assert_eq!(parsed.series(SERIES_SATURATION_P99).unwrap().tolerance, 0.0);
     assert_eq!(parsed.series(SERIES_ADAPTIVE_P99).unwrap().tolerance, 0.0);
@@ -58,6 +60,25 @@ fn bench_json_schema_round_trips() {
         assert!(
             degraded.points.iter().any(|p| p.label == label),
             "degraded series missing point {label}"
+        );
+    }
+
+    // Both wire series gate (they are the new subsystem's throughput
+    // contract) and carry their single- vs multi-process points.
+    let wire = parsed.series(SERIES_WIRE).unwrap();
+    assert!(wire.tolerance > 0.0, "wire series must hard-gate");
+    for label in ["encode", "decode-attach"] {
+        assert!(
+            wire.points.iter().any(|p| p.label == label),
+            "wire series missing point {label}"
+        );
+    }
+    let ingest = parsed.series(SERIES_INGEST).unwrap();
+    assert!(ingest.tolerance > 0.0, "ingest series must hard-gate");
+    for label in ["procs=1", "procs=2"] {
+        assert!(
+            ingest.points.iter().any(|p| p.label == label),
+            "ingest series missing point {label}"
         );
     }
 

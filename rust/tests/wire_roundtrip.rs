@@ -1,0 +1,274 @@
+//! Tier-1 coverage for the wire subsystem (DESIGN.md §11): frame
+//! round-trips from every layout family, the jagged `Particle`
+//! collection, deliberate header/body corruption surfacing every
+//! [`WireError`] variant, the zero-copy attach contract, and the
+//! multi-process socketpair ingest path against the in-process golden.
+
+use marionette::coordinator::{
+    golden_compare, run_socketpair_ingest, verify_exactly_once, ServeOpts,
+};
+use marionette::edm::{
+    EventConfig, EventGenerator, Particle, ParticleCollection, ParticleProps, ParticleView,
+    SensorCollection, SensorProps, SensorView, NUM_SENSOR_TYPES,
+};
+use marionette::marionette::collection::InfoOf;
+use marionette::marionette::wire::FIXED_HEADER;
+use marionette::prelude::{
+    crc32, encode_frame, schema_hash, AoS, AoSoA, Frame, Layout, LayoutChoice, PlaneSource,
+    SoABlob, SoAVec, WireError, WIRE_VERSION,
+};
+
+// ---------------------------------------------------------------------
+// Round-trips: every layout family normalizes to the same dense-plane
+// body, and a view attached over the received frame reads back exactly
+// what the source collection held.
+// ---------------------------------------------------------------------
+
+fn sensor_roundtrip<L: Layout>(expect_layout_code: u32)
+where
+    InfoOf<L>: Default,
+{
+    let ev = EventGenerator::new(EventConfig::grid(12, 12, 3), 7).generate();
+    let mut c = SensorCollection::<L>::new();
+    ev.fill_collection(&mut c);
+
+    let frame = Frame::decode(encode_frame(&c, ev.event_id)).unwrap();
+    assert_eq!(frame.frame_id(), ev.event_id);
+    assert_eq!(frame.items(), c.len());
+    assert_eq!(frame.layout_code(), expect_layout_code);
+    let schema = SensorProps::schema();
+    assert_eq!(frame.schema_hash(), schema_hash(&schema));
+
+    let fs = frame.source(&schema).unwrap();
+    let v = SensorView::attach(&fs).unwrap();
+    assert_eq!(v.len(), c.len());
+    for i in 0..c.len() {
+        assert_eq!(v.type_id(i), c.type_id(i));
+        assert_eq!(v.counts(i), c.counts(i));
+        assert_eq!(v.energy(i).to_bits(), c.energy(i).to_bits());
+        assert_eq!(v.noise(i).to_bits(), c.noise(i).to_bits());
+        assert_eq!(v.sig(i).to_bits(), c.sig(i).to_bits());
+    }
+    assert_eq!(v.rows(), c.rows());
+    assert_eq!(v.cols(), c.cols());
+    assert_eq!(v.event_id(), c.event_id());
+
+    // Zero-copy attach contract: planes handed out by the source point
+    // into the frame's own receive buffer — nothing was copied out.
+    let m = schema.meta(schema.field_by_name("counts").unwrap());
+    let p = fs.plane(m, 0).unwrap();
+    let range = frame.as_bytes().as_ptr_range();
+    assert!(p.base >= range.start && p.base < range.end);
+}
+
+#[test]
+fn sensor_frames_roundtrip_from_every_layout() {
+    sensor_roundtrip::<SoAVec>(1);
+    sensor_roundtrip::<AoS>(2);
+    sensor_roundtrip::<SoABlob>(3);
+    sensor_roundtrip::<AoSoA<8>>(4);
+}
+
+fn particle_roundtrip<L: Layout>()
+where
+    InfoOf<L>: Default,
+{
+    let mut c = ParticleCollection::<L>::new();
+    c.set_event_id(4242);
+    let mut p = Particle {
+        energy: 120.0,
+        x: 3.5,
+        y: 7.25,
+        x_variance: 0.5,
+        y_variance: 0.75,
+        origin: 9,
+        significance: [5.0, 2.0, 0.5],
+        e_contribution: [80.0, 30.0, 10.0],
+        noisy_count: [0, 1, 2],
+        sensors: vec![41, 42, 43, 52],
+    };
+    c.push(&p);
+    p.sensors = vec![7];
+    p.energy = 50.0;
+    c.push(&p);
+    p.sensors = vec![]; // empty jagged entry must survive the wire
+    p.energy = 0.25;
+    c.push(&p);
+    p.sensors = (0..9).collect();
+    c.push(&p);
+
+    let frame = Frame::decode(encode_frame(&c, 4242)).unwrap();
+    let schema = ParticleProps::schema();
+    let fs = frame.source(&schema).unwrap();
+    let v = ParticleView::attach(&fs).unwrap();
+    assert_eq!(v.len(), c.len());
+    for i in 0..c.len() {
+        assert_eq!(v.energy(i).to_bits(), c.energy(i).to_bits());
+        assert_eq!(v.x(i).to_bits(), c.x(i).to_bits());
+        assert_eq!(v.origin(i), c.origin(i));
+        for k in 0..NUM_SENSOR_TYPES {
+            assert_eq!(v.significance(i, k).to_bits(), c.significance(i, k).to_bits());
+            assert_eq!(v.e_contribution(i, k).to_bits(), c.e_contribution(i, k).to_bits());
+            assert_eq!(v.noisy_count(i, k), c.noisy_count(i, k));
+        }
+        assert_eq!(v.sensors(i).to_vec(), c.sensors(i).to_vec());
+    }
+    assert_eq!(v.event_id(), 4242);
+}
+
+#[test]
+fn jagged_particle_frames_roundtrip_from_every_layout() {
+    particle_roundtrip::<SoAVec>();
+    particle_roundtrip::<AoS>();
+    particle_roundtrip::<SoABlob>();
+    particle_roundtrip::<AoSoA<8>>();
+}
+
+// ---------------------------------------------------------------------
+// Corruption: every WireError variant is reachable from a poisoned
+// buffer, and none of them panics.
+// ---------------------------------------------------------------------
+
+fn sensor_frame_bytes() -> Vec<u8> {
+    let ev = EventGenerator::new(EventConfig::grid(8, 8, 3), 3).generate();
+    let mut c = SensorCollection::<SoAVec>::new();
+    ev.fill_collection(&mut c);
+    encode_frame(&c, ev.event_id).as_slice().to_vec()
+}
+
+/// Recompute the checksum after deliberately corrupting covered bytes,
+/// so the test reaches the validation layers *behind* the CRC.
+fn repatch_crc(b: &mut [u8]) {
+    let c = crc32(&b[16..]);
+    b[8..12].copy_from_slice(&c.to_le_bytes());
+}
+
+#[test]
+fn every_wire_error_variant_surfaces() {
+    let good = sensor_frame_bytes();
+    assert!(Frame::decode_slice(&good).is_ok());
+
+    // Truncated, at both layers: inside the fixed header, and mid-body.
+    match Frame::decode_slice(&good[..10]) {
+        Err(WireError::Truncated { need, have }) => {
+            assert_eq!(need, FIXED_HEADER);
+            assert_eq!(have, 10);
+        }
+        r => panic!("expected Truncated, got {:?}", r.err()),
+    }
+    match Frame::decode_slice(&good[..good.len() - 8]) {
+        Err(WireError::Truncated { need, have }) => {
+            assert_eq!(need, good.len());
+            assert_eq!(have, good.len() - 8);
+        }
+        r => panic!("expected Truncated, got {:?}", r.err()),
+    }
+
+    // BadMagic: the magic sits outside CRC coverage — a direct flip.
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    assert!(matches!(Frame::decode_slice(&bad), Err(WireError::BadMagic { .. })));
+
+    // VersionSkew: also outside CRC coverage; hard reject, never a
+    // silent cross-version reinterpret.
+    let mut bad = good.clone();
+    bad[4..8].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    match Frame::decode_slice(&bad) {
+        Err(WireError::VersionSkew { got, want }) => {
+            assert_eq!(got, WIRE_VERSION + 1);
+            assert_eq!(want, WIRE_VERSION);
+        }
+        r => panic!("expected VersionSkew, got {:?}", r.err()),
+    }
+
+    // Crc: any covered byte flips the checksum.
+    let mut bad = good.clone();
+    let n = bad.len();
+    bad[n - 1] ^= 0x40;
+    assert!(matches!(Frame::decode_slice(&bad), Err(WireError::Crc { .. })));
+
+    // Malformed #1: trailing bytes after a complete frame.
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 8]);
+    assert!(matches!(Frame::decode_slice(&bad), Err(WireError::Malformed { .. })));
+
+    // Malformed #2: unknown dtype code in the field table. The table is
+    // CRC-covered, so the checksum is re-patched to prove the deeper
+    // validation fires on its own.
+    let mut bad = good.clone();
+    let num_tags = u32::from_le_bytes(bad[48..52].try_into().unwrap()) as usize;
+    bad[FIXED_HEADER + num_tags * 8] = 0xEE;
+    repatch_crc(&mut bad);
+    match Frame::decode_slice(&bad) {
+        Err(WireError::Malformed { what }) => assert!(what.contains("dtype"), "{what}"),
+        r => panic!("expected Malformed, got {:?}", r.err()),
+    }
+
+    // Malformed #3: misaligned header_len (checked before the CRC).
+    let mut bad = good.clone();
+    let hl = u32::from_le_bytes(bad[16..20].try_into().unwrap());
+    bad[16..20].copy_from_slice(&(hl + 4).to_le_bytes());
+    assert!(matches!(Frame::decode_slice(&bad), Err(WireError::Malformed { .. })));
+
+    // SchemaMismatch: a valid sensor frame refuses a particle schema.
+    let frame = Frame::decode_slice(&good).unwrap();
+    let wrong = ParticleProps::schema();
+    match frame.source(&wrong) {
+        Err(WireError::SchemaMismatch { want, got }) => {
+            assert_eq!(want, schema_hash(&wrong));
+            assert_eq!(got, schema_hash(&SensorProps::schema()));
+        }
+        r => panic!("expected SchemaMismatch, got {:?}", r.err().map(|e| e.to_string())),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multi-process ingest: N striped senders over real sockets reconstruct
+// bit-identically to the single-sender and in-process runs, exactly
+// once per event.
+// ---------------------------------------------------------------------
+
+#[test]
+fn socketpair_multi_process_matches_single_process() {
+    let event = EventConfig::grid(20, 20, 3);
+    let (n_events, seed) = (36, 0xBEEF);
+
+    let single = run_socketpair_ingest(&event, n_events, seed, 1, &ServeOpts::default()).unwrap();
+    verify_exactly_once(&single, n_events).unwrap();
+    golden_compare(&single, &event, n_events, seed).unwrap();
+
+    let multi = run_socketpair_ingest(&event, n_events, seed, 3, &ServeOpts::default()).unwrap();
+    verify_exactly_once(&multi, n_events).unwrap();
+    golden_compare(&multi, &event, n_events, seed).unwrap();
+
+    assert_eq!(single.results.len(), multi.results.len());
+    for (a, b) in single.results.iter().zip(&multi.results) {
+        assert_eq!(a.event_id, b.event_id);
+        assert_eq!(a.n_particles, b.n_particles);
+        assert_eq!(a.total_energy.to_bits(), b.total_energy.to_bits());
+    }
+
+    // Zero-copy accounting: the only booked copy on the receive path
+    // is the particle staging transfer — byte-for-byte the same bytes
+    // the in-process path books. The sensor planes (the bulk of every
+    // frame) attach in place and never appear in any transfer stats.
+    use marionette::coordinator::pipeline::process_host_staged;
+    let mut gen = EventGenerator::new(event.clone(), seed);
+    let mut staged = ParticleCollection::<AoS>::new();
+    for _ in 0..n_events {
+        let ev = gen.generate();
+        let (_, _, host_bytes) = process_host_staged(&ev, &mut staged);
+        let got = single.results.iter().find(|r| r.event_id == ev.event_id).unwrap();
+        assert_eq!(got.staged_bytes, host_bytes, "event {}", ev.event_id);
+    }
+}
+
+#[test]
+fn socketpair_with_selected_staging_layout_stays_golden() {
+    // Satellite cross-check: the autotuner's layout choice routed into
+    // the live receive path must not change the physics.
+    let event = EventConfig::grid(16, 16, 3);
+    let opts = ServeOpts { staging: Some(LayoutChoice::AoSoA8), ..ServeOpts::default() };
+    let report = run_socketpair_ingest(&event, 24, 7, 2, &opts).unwrap();
+    golden_compare(&report, &event, 24, 7).unwrap();
+}
